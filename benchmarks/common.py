@@ -1,0 +1,103 @@
+"""Shared benchmark substrate: scaled paper datasets, metrics, timing."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DBLSHParams, FBLSH, MQIndex, C2Index, brute_force, build
+from repro.core import search_batch_fixed
+from repro.data import make_clustered, normalize_scale
+
+# paper datasets scaled to CPU-minutes (cardinality, dim, clusters).
+SCALED_DATASETS = {
+    "audio-s": (20_000, 96, 24),
+    "deep-s": (30_000, 128, 32),
+    "sift-s": (50_000, 64, 48),
+}
+
+N_QUERIES = 50
+DEFAULT_K = 50
+
+
+def load_dataset(name: str, scale: float = 1.0, seed: int = 0):
+    n, d, nc = SCALED_DATASETS[name]
+    n = int(n * scale)
+    key = jax.random.key(seed)
+    allpts = make_clustered(key, n + N_QUERIES, d, n_clusters=nc, spread=0.02)
+    data, queries = allpts[:n], allpts[n:]
+    data, queries, _ = normalize_scale(data, queries)
+    return np.asarray(data), np.asarray(queries)
+
+
+def recall_and_ratio(dists, ids, gt_d, gt_i, k):
+    """Paper Eq. 11/12: overall ratio + recall, averaged over queries."""
+    ids = np.asarray(ids)
+    dists = np.asarray(dists)
+    gt_d = np.maximum(np.asarray(gt_d), 1e-9)
+    recs, ratios = [], []
+    for q in range(ids.shape[0]):
+        recs.append(len(set(ids[q][:k].tolist()) & set(np.asarray(gt_i)[q][:k].tolist())) / k)
+        dq = np.where(np.isfinite(dists[q][:k]), dists[q][:k], gt_d[q][:k] * 10)
+        ratios.append(float(np.mean(dq / gt_d[q][:k])))
+    return float(np.mean(recs)), float(np.mean(ratios))
+
+
+def timed(fn, *args, repeats=3, **kw):
+    """jit warmup + best-of wall time in ms."""
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    best = np.inf
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return out, best * 1e3
+
+
+def build_dblsh(data, *, c=1.5, t=64, k=DEFAULT_K, K=10, L=5, seed=1,
+                inline=False):
+    params = DBLSHParams.derive(
+        n=data.shape[0], d=data.shape[1], c=c, t=t, k=k, K=K, L=L,
+        inline_vectors=inline,
+    )
+    t0 = time.perf_counter()
+    index = build(jax.random.key(seed), jnp.asarray(data), params)
+    jax.block_until_ready(index.proj_blocks)
+    return index, (time.perf_counter() - t0)
+
+
+def methods_for(data, k=DEFAULT_K, c=1.5):
+    """Build every method on `data`; returns {name: (search_fn, idx_time)}."""
+    n, d = data.shape
+    dj = jnp.asarray(data)
+    out = {}
+
+    index, bt = build_dblsh(data, c=c, k=k)
+    out["DB-LSH"] = (
+        lambda Q, k=k: search_batch_fixed(index, Q, k=k, r0=0.5, steps=8),
+        bt,
+    )
+
+    t0 = time.perf_counter()
+    fb = FBLSH.build(jax.random.key(2), dj, K=10, L=5, w0=4 * c * c, c=c, t=64)
+    jax.block_until_ready(fb.proj)
+    out["FB-LSH"] = (lambda Q, k=k: fb.search_batch(Q, k=k, r0=0.5),
+                     time.perf_counter() - t0)
+
+    t0 = time.perf_counter()
+    mq = MQIndex.build(jax.random.key(3), dj, m=15, beta=0.08)
+    jax.block_until_ready(mq.proj)
+    out["MQ(PM-LSH)"] = (lambda Q, k=k: mq.search_batch(Q, k=k),
+                         time.perf_counter() - t0)
+
+    t0 = time.perf_counter()
+    c2 = C2Index.build(jax.random.key(4), dj, m=40, w=2.0)
+    jax.block_until_ready(c2.proj)
+    out["C2(QALSH)"] = (lambda Q, k=k: c2.search_batch(Q, k=k),
+                        time.perf_counter() - t0)
+    return out

@@ -1,0 +1,200 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Per (arch x shape x mesh) cell, derive the three roofline terms from the
+compiled dry-run:
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs      (197 TFLOP/s bf16)
+    memory     = HLO_bytes_per_device / HBM_bw          (819 GB/s)
+    collective = collective_bytes_per_device / link_bw  (~50 GB/s/link ICI)
+
+FLOPs/bytes come from the trip-count-corrected HLO walk
+(repro.launch.hlo_stats — XLA's cost_analysis counts while bodies once);
+collective bytes from summed operand sizes of all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute.
+
+Also reports MODEL_FLOPS = 6*N*D(tokens) (dense) or 6*N_active*D (MoE)
+and the usefulness ratio MODEL_FLOPS / HLO_FLOPs, the dominant term, and
+one-line bottleneck advice per cell.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs import CONFIGS, SHAPES
+
+PEAK_FLOPS = 197e12  # TPU v5e bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+LINK_BW = 50e9  # bytes/s per ICI link
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results/dryrun")
+
+
+def param_count(cfg, active_only=False):
+    """Analytic parameter count (embedding + blocks + head)."""
+    D, V, L = cfg.d_model, cfg.padded_vocab, cfg.n_layers
+    total = V * D * (1 if cfg.tie_embeddings else 2)
+    per_layer = 0.0
+    if cfg.n_heads:
+        per_layer += D * cfg.n_heads * cfg.hd + 2 * D * cfg.n_kv_heads * cfg.hd
+        per_layer += cfg.n_heads * cfg.hd * D
+    if cfg.family == "moe":
+        nmats = 3 if cfg.ffn_kind == "swiglu" else 2
+        e = cfg.n_experts if not active_only else cfg.experts_per_token
+        per_layer += e * nmats * D * cfg.d_ff
+        if cfg.dense_residual:
+            per_layer += nmats * D * cfg.d_ff
+    elif cfg.d_ff:
+        nmats = 3 if cfg.ffn_kind == "swiglu" else 2
+        per_layer += nmats * D * cfg.d_ff
+    if cfg.ssm_state:
+        from repro.models.ssm import ssm_dims
+
+        d_inner, H, P, N, conv_dim, d_proj = ssm_dims(cfg)
+        per_layer += D * d_proj + d_inner * D + 4 * conv_dim
+    total += L * per_layer
+    if cfg.family == "encdec":
+        enc_per = 2 * (D * cfg.n_heads * cfg.hd + 2 * D * cfg.n_kv_heads * cfg.hd
+                       + cfg.n_heads * cfg.hd * D) / 2 + 2 * D * cfg.d_ff
+        total += cfg.n_enc_layers * enc_per
+    if cfg.family == "vlm":
+        G = cfg.n_layers // cfg.cross_every
+        total += G * (2 * (D * cfg.n_heads * cfg.hd + D * cfg.n_kv_heads * cfg.hd)
+                      + 3 * D * cfg.d_ff) + cfg.d_vision * D
+    return total
+
+
+def model_flops(cfg, shape):
+    """6*N*D tokens (train); 2*N*D (prefill fwd); 2*N per token (decode)."""
+    n_act = param_count(cfg, active_only=(cfg.family == "moe"))
+    tokens = shape.global_batch * (shape.seq_len if shape.phase != "decode" else 1)
+    mult = 6 if shape.phase == "train" else 2
+    return mult * n_act * tokens
+
+
+def analytic_memory_bytes(cfg, shape, chips):
+    """Per-device HBM-traffic LOWER BOUND per step.
+
+    The HLO-parsed byte count inherits the *CPU* backend's fusion
+    granularity (many more fusion boundaries than a TPU compile), so it
+    over-states HBM traffic. This analytic floor counts only
+    unavoidable traffic: weights touched, optimizer state r/w, remat
+    carry stack, logits, KV/SSM caches. The truth lies between the two;
+    both are reported.
+    """
+    pd_bytes = 2 if cfg.param_dtype == "bfloat16" else 4
+    n_params = param_count(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    D, V, L = cfg.d_model, cfg.padded_vocab, cfg.n_layers
+    act = 2  # bf16 activations
+
+    if shape.phase == "train":
+        opt_mult = 3.0 if cfg.optimizer == "adamw" else 0.1  # m,v fp32 vs factored
+        weights = n_params * (3 * pd_bytes + 2 * opt_mult * 4) / chips
+        # fwd save + bwd read of the residual carry stack (+recompute read)
+        carries = 3 * L * B * S * D * act / chips
+        logits = 2 * B * S * V * act / chips
+        return weights + carries + logits
+    if shape.phase == "prefill":
+        weights = n_params * pd_bytes / chips
+        stream = 2 * L * B * S * D * act / chips
+        cache = 2 * L * B * S * max(cfg.n_kv_heads, 1) * cfg.hd * act / chips
+        return weights + stream + cache
+    # decode: weights once + cache read
+    weights = n_params * pd_bytes / chips
+    if cfg.ssm_state:
+        from repro.models.ssm import ssm_dims
+
+        d_inner, H, P, N, conv_dim, _ = ssm_dims(cfg)
+        cache = 2 * L * B * H * N * P * act / chips
+    else:
+        cache = L * B * S * max(cfg.n_kv_heads, 1) * cfg.hd * 2 * act / chips
+    return weights + cache
+
+
+def analyze_cell(arch, shape_name, mesh_tag):
+    path = os.path.join(RESULTS_DIR, mesh_tag, f"{arch}__{shape_name}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        r = json.load(f)
+    if r.get("status") != "ok":
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                "status": r.get("status"), "reason": r.get("reason", r.get("error", ""))[:90]}
+
+    chips = 512 if "2x16" in mesh_tag else 256
+    st = r["hlo_stats"]
+    cfg = CONFIGS[arch]
+    shape = SHAPES[shape_name]
+    t_comp = st["flops"] / PEAK_FLOPS
+    t_mem = st["hbm_bytes"] / HBM_BW  # CPU-fusion-granularity upper estimate
+    t_mem_min = analytic_memory_bytes(cfg, shape, chips) / HBM_BW  # floor
+    t_coll = st["collective_bytes"] / LINK_BW
+    dom = max(("compute", t_comp), ("memory", t_mem), ("collective", t_coll),
+              key=lambda kv: kv[1])[0]
+    # corrected dominance: HLO bytes replaced by the analytic floor
+    dom_corr = max(("compute", t_comp), ("memory", t_mem_min),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+
+    mf = model_flops(cfg, shape)
+    useful = mf / (st["flops"] * chips) if st["flops"] else 0.0
+    bound = max(t_comp, t_mem_min, t_coll)
+    # roofline fraction: useful model flops vs what peak compute could do
+    # in the time the (corrected) dominant term needs
+    frac = (mf / chips / PEAK_FLOPS) / bound if bound else 0.0
+    return {
+        "arch": arch, "shape": shape_name, "mesh": mesh_tag, "status": "ok",
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_memory_min_s": t_mem_min,
+        "t_collective_s": t_coll,
+        "dominant": dom, "dominant_corrected": dom_corr,
+        "model_flops": mf, "useful_ratio": useful,
+        "roofline_fraction": frac,
+        "mem_gib_per_dev": r["memory"]["per_device_total"] / 2**30,
+        "fits_16g": r["memory"]["per_device_total"] < 16 * 2**30,
+    }
+
+
+def run(mesh_tag="pod16x16"):
+    rows = []
+    for arch in sorted(CONFIGS):
+        for shape in SHAPES:
+            row = analyze_cell(arch, shape, mesh_tag)
+            if row:
+                rows.append(row)
+    return rows
+
+
+def advice(row):
+    if row.get("status") != "ok":
+        return ""
+    d = row["dominant"]
+    if d == "collective":
+        return "cut collective bytes: int8 pod reduction / fewer reshards / EP psum->a2a"
+    if d == "memory":
+        return "raise arithmetic intensity: fuse verify, larger microbatch, flash attention"
+    return "already compute-bound: close MODEL/HLO gap (remat waste, attention flops)"
+
+
+def main():
+    for mesh_tag in ("pod16x16", "pod2x16x16"):
+        rows = run(mesh_tag)
+        if not rows:
+            continue
+        print(f"\n== roofline {mesh_tag} (s/step per device) ==")
+        print(f"{'arch':<22}{'shape':<12}{'compute':>9}{'mem_hlo':>9}{'mem_min':>9}"
+              f"{'collect':>9}{'dom*':>11}{'useful':>7}{'frac':>7}{'mem/dev':>9}")
+        for r in rows:
+            if r.get("status") != "ok":
+                print(f"{r['arch']:<22}{r['shape']:<12}  -- {r['status']}: {r.get('reason','')[:60]}")
+                continue
+            print(f"{r['arch']:<22}{r['shape']:<12}{r['t_compute_s']:>9.3f}"
+                  f"{r['t_memory_s']:>9.3f}{r['t_memory_min_s']:>9.3f}"
+                  f"{r['t_collective_s']:>9.3f}"
+                  f"{r['dominant_corrected']:>11}{r['useful_ratio']:>7.2f}"
+                  f"{r['roofline_fraction']:>7.3f}{r['mem_gib_per_dev']:>8.1f}G")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

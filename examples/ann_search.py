@@ -1,0 +1,16 @@
+"""End-to-end ANN benchmark driver: DB-LSH vs the paper's competitor
+families on a scaled dataset, with recall/ratio/time.
+
+    PYTHONPATH=src:. python examples/ann_search.py [--scale 0.5]
+"""
+
+import argparse
+
+from benchmarks.table4_query_perf import main as table4
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.25)
+    args = ap.parse_args()
+    table4(scale=args.scale)

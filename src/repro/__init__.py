@@ -1,0 +1,4 @@
+"""repro: DB-LSH (Tian, Zhao, Zhou — ICDE 2022) as a production JAX/TPU
+vector-search + LM training/serving framework. See README.md."""
+
+__version__ = "1.0.0"

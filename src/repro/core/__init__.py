@@ -1,0 +1,38 @@
+"""DB-LSH core: the paper's contribution as a composable JAX module.
+
+Public API:
+
+    from repro.core import DBLSHParams, build, search, search_batch
+
+    params = DBLSHParams.derive(n=..., d=..., c=1.5)
+    index  = build(jax.random.key(0), data, params)
+    dists, ids = search_batch(index, queries, k=50)
+"""
+
+from .params import DBLSHParams, alpha_of_gamma, rho_star
+from .hashing import collision_prob, project, sample_projections
+from .index import DBLSHIndex, build
+from .query import rc_nn, search, search_batch, probe_radius
+from .baselines import C2Index, FBLSH, MQIndex, brute_force
+from .serve_search import search_batch_fixed
+from .updates import compact, delete, insert, live_count
+
+__all__ = [
+    "DBLSHParams",
+    "alpha_of_gamma",
+    "rho_star",
+    "collision_prob",
+    "project",
+    "sample_projections",
+    "DBLSHIndex",
+    "build",
+    "search",
+    "search_batch",
+    "search_batch_fixed",
+    "rc_nn",
+    "probe_radius",
+    "brute_force",
+    "FBLSH",
+    "MQIndex",
+    "C2Index",
+]

@@ -1,0 +1,111 @@
+"""Distributed DB-LSH: dataset sharded over the mesh 'data' axis.
+
+Every device builds a *local* DB-LSH index over its n/P slice using the
+SAME LSH functions (one PRNG key → identical projection vectors — the
+union of per-shard query-centric windows then equals the global window,
+so Lemma 1/2 guarantees are unchanged). A query is replicated; each
+shard answers a local (c,k)-ANN with the fixed-schedule engine; results
+merge with one k-sized all_gather + local top-k (ids are globally
+offset, hence disjoint across shards — no dedup needed at the merge).
+
+Collective cost per query batch: one all_gather of (P, Q, k) pairs over
+'data' — independent of n. This is the datastore behind
+serve/retrieval.py at fleet scale.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .index import DBLSHIndex, build
+from .params import DBLSHParams
+from .serve_search import search_batch_fixed
+
+__all__ = ["ShardedDBLSH", "build_sharded", "search_sharded"]
+
+_INF = jnp.inf
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["index"],
+    meta_fields=["axis", "n_total", "n_local"],
+)
+@dataclasses.dataclass
+class ShardedDBLSH:
+    index: DBLSHIndex  # arrays sharded over `axis` (see _index_specs)
+    axis: str
+    n_total: int
+    n_local: int
+
+
+def _index_specs(axis: str, params) -> DBLSHIndex:
+    """PartitionSpecs for each DBLSHIndex field (block dim sharded)."""
+    return DBLSHIndex(
+        proj_vecs=P(),          # same hash functions everywhere
+        proj_blocks=P(None, axis),
+        ids_blocks=P(None, axis),
+        mbr_lo=P(None, axis),
+        mbr_hi=P(None, axis),
+        data=P(axis),
+        vec_blocks=P(None, axis) if params.inline_vectors else P(),
+        params=params,
+    )
+
+
+def build_sharded(key, data, params_local: DBLSHParams, mesh, axis: str = "data"
+                  ) -> ShardedDBLSH:
+    """data: (n, d) global (sharded or shardable over `axis`)."""
+    n, d = data.shape
+    pn = mesh.shape[axis]
+    assert n % pn == 0, (n, pn)
+    n_local = n // pn
+    params_local = dataclasses.replace(params_local, n=n_local, d=d).resolve()
+
+    def local_build(data_l):
+        return build(key, data_l, params_local)
+
+    specs = _index_specs(axis, params_local)
+    idx = jax.jit(
+        jax.shard_map(
+            local_build, mesh=mesh, in_specs=P(axis), out_specs=specs,
+            check_vma=False,
+        )
+    )(data)
+    return ShardedDBLSH(index=idx, axis=axis, n_total=n, n_local=n_local)
+
+
+@partial(jax.jit, static_argnames=("k", "steps", "mesh"))
+def search_sharded(s: ShardedDBLSH, Q: jax.Array, k: int = 0, r0: float = 1.0,
+                   steps: int = 8, mesh=None):
+    """Replicated queries -> (Q, k) global distances/ids."""
+    p = s.index.params
+    k = k or p.k
+    axis = s.axis
+    n_local, n_total = s.n_local, s.n_total
+
+    def local_search(idx_tree, Qr):
+        d, i = search_batch_fixed(idx_tree, Qr, k=k, r0=r0, steps=steps)
+        rank = jax.lax.axis_index(axis)
+        gi = jnp.where(i < n_local, i + rank * n_local, n_total)
+        d_all = jax.lax.all_gather(d, axis)  # (P, Qn, k)
+        i_all = jax.lax.all_gather(gi, axis)
+        Qn = Qr.shape[0]
+        d_flat = jnp.moveaxis(d_all, 0, 1).reshape(Qn, -1)
+        i_flat = jnp.moveaxis(i_all, 0, 1).reshape(Qn, -1)
+        d2 = jnp.where(jnp.isfinite(d_flat), d_flat, _INF)
+        neg, pos = jax.lax.top_k(-d2, k)
+        ids = jnp.take_along_axis(i_flat, pos, axis=1)
+        return -neg, jnp.where(jnp.isfinite(-neg), ids, n_total)
+
+    specs = _index_specs(axis, p)
+    return jax.shard_map(
+        local_search, mesh=mesh,
+        in_specs=(specs, P()), out_specs=(P(), P()),
+        check_vma=False,
+    )(s.index, Q)

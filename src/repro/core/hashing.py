@@ -1,0 +1,67 @@
+"""p-stable LSH hashing for DB-LSH (paper Eq. 3 / Eq. 4).
+
+The dynamic LSH family is ``h(o) = a . o`` with ``a ~ N(0, I_d)`` (Eq. 3).
+Two points collide at width ``w`` iff ``|h(o1) - h(o2)| <= w/2``; the
+collision probability for points at distance ``tau`` is (Eq. 4)
+
+    p(tau; w) = P(|N(0,1)| <= w / (2 tau)) = erf(w / (2 sqrt(2) tau)).
+
+Observation 1 of the paper (the key to dynamic bucketing): scaling the
+width with the radius keeps the family (r, cr, p(1;w0), p(c;w0))-sensitive
+for *every* radius r, so one index serves the whole radius schedule.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import erf
+
+__all__ = [
+    "sample_projections",
+    "project",
+    "collision_prob",
+    "normal_pdf",
+    "normal_sf",
+]
+
+
+def sample_projections(key: jax.Array, d: int, K: int, L: int) -> jax.Array:
+    """Sample L compound hashes G_i = (h_i1 .. h_iK), i.e. an (L, K, d) tensor
+    of i.i.d. standard-normal projection vectors (paper Eq. 6/7)."""
+    return jax.random.normal(key, (L, K, d), dtype=jnp.float32)
+
+
+def project(data: jax.Array, proj: jax.Array) -> jax.Array:
+    """Compute G_i(o) for every point and table.
+
+    Args:
+      data: (n, d) points.
+      proj: (L, K, d) projection vectors.
+
+    Returns:
+      (L, n, K) projections — table-major so each table's K-dim space is
+      contiguous (this is the layout the STR index consumes).
+    """
+    # (L, K, d) @ (d, n) -> (L, K, n) -> (L, n, K). One batched MXU matmul.
+    return jnp.einsum("lkd,nd->lnk", proj, data, preferred_element_type=jnp.float32)
+
+
+def normal_pdf(x):
+    """pdf f(x) of the standard normal distribution."""
+    return jnp.exp(-0.5 * jnp.square(x)) / jnp.sqrt(2.0 * jnp.pi)
+
+
+def normal_sf(x):
+    """Survival function ∫_x^∞ f(t) dt of the standard normal."""
+    return 0.5 * (1.0 - erf(x / jnp.sqrt(2.0)))
+
+
+def collision_prob(tau, w):
+    """Collision probability p(tau; w) of the dynamic family (paper Eq. 4).
+
+    p(tau; w) = ∫_{-w/(2 tau)}^{w/(2 tau)} f(t) dt = erf(w / (2 sqrt(2) tau)).
+    Monotonically decreasing in tau, increasing in w.
+    """
+    tau = jnp.asarray(tau, dtype=jnp.float64 if jax.config.read("jax_enable_x64") else jnp.float32)
+    return erf(w / (2.0 * jnp.sqrt(2.0) * tau))

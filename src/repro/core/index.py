@@ -1,0 +1,159 @@
+"""DB-LSH index construction (paper §IV-B), TPU-adapted.
+
+The paper indexes each of the L K-dimensional projected spaces with a
+bulk-loaded R*-tree.  Pointer-chasing trees are hostile to TPUs, so we
+keep the *contract* (window queries at query-chosen widths over
+un-quantized projections) and swap the *structure* for a dense
+Sort-Tile-Recursive (STR) packed block index — the same bulk-loading
+family the paper uses, with the tree levels flattened into dense arrays:
+
+  * per table, points are STR-ordered (dim-0 slabs, dim-1 within a slab)
+    and grouped into fixed blocks of ``B`` points;
+  * each block stores its K-dim minimum bounding rectangle (MBR) in two
+    dense ``(nb, K)`` arrays — the "leaf level" of the R*-tree;
+  * a window query tests *all* MBRs with one vectorized compare (VPU,
+    ``nb = n/B`` lanes), compacts the first ``M`` overlapping blocks with
+    a fixed-capacity sort-compaction, and streams those blocks through
+    the verifier.
+
+See DESIGN.md §3 for the fidelity argument.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import hashing
+from .params import DBLSHParams
+
+__all__ = ["DBLSHIndex", "build"]
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=[
+        "proj_vecs",
+        "proj_blocks",
+        "ids_blocks",
+        "mbr_lo",
+        "mbr_hi",
+        "data",
+        "vec_blocks",
+    ],
+    meta_fields=["params"],
+)
+@dataclasses.dataclass
+class DBLSHIndex:
+    """The (K, L)-index with dynamic bucketing support.
+
+    Shapes (B = params.block_size, nb = ceil(n / B)):
+      proj_vecs:   (L, K, d)      the LSH functions a_ij (Eq. 3)
+      proj_blocks: (L, nb, B, K)  STR-ordered projections, +inf padded
+      ids_blocks:  (L, nb, B)     original point ids, n-padded
+      mbr_lo/hi:   (L, nb, K)     per-block K-dim bounding boxes
+      data:        (n, d)         the dataset ('gather' verify layout)
+      vec_blocks:  (L, nb, B, d)  optional per-table reordered vectors
+                                  ('inline' streaming layout), else ()
+    """
+
+    proj_vecs: jax.Array
+    proj_blocks: jax.Array
+    ids_blocks: jax.Array
+    mbr_lo: jax.Array
+    mbr_hi: jax.Array
+    data: jax.Array
+    vec_blocks: jax.Array
+    params: DBLSHParams
+
+    @property
+    def n(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def nb(self) -> int:
+        return self.proj_blocks.shape[1]
+
+    def memory_bytes(self) -> int:
+        tot = 0
+        for f in (
+            self.proj_vecs,
+            self.proj_blocks,
+            self.ids_blocks,
+            self.mbr_lo,
+            self.mbr_hi,
+            self.vec_blocks,
+        ):
+            tot += f.size * f.dtype.itemsize
+        return tot
+
+
+def _str_order(proj_t: jax.Array, block_size: int) -> jax.Array:
+    """STR ordering for one table: sort by dim-0 into slabs, then by dim-1
+    within each slab. Returns the permutation (n,) of original point ids."""
+    n, K = proj_t.shape
+    nb = -(-n // block_size)
+    n_slabs = max(1, int(math.ceil(math.sqrt(nb))))
+    slab_pts = -(-n // n_slabs)
+    rank0 = jnp.argsort(jnp.argsort(proj_t[:, 0]))
+    slab = rank0 // slab_pts
+    key2 = proj_t[:, 1] if K > 1 else proj_t[:, 0]
+    # lexsort: last key is primary.
+    return jnp.lexsort((key2, slab))
+
+
+def build(key: jax.Array, data: jax.Array, params: DBLSHParams) -> DBLSHIndex:
+    """Indexing phase (paper §IV-B): project into L K-dim spaces (Eq. 7),
+    then bulk-load one dense STR index per space."""
+    params = params.resolve()
+    n, d = data.shape
+    assert n == params.n and d == params.d, (data.shape, params)
+    B, K, L = params.block_size, params.K, params.L
+    nb = -(-n // B)
+    n_pad = nb * B
+
+    proj_vecs = hashing.sample_projections(key, d, K, L)
+    proj = hashing.project(data, proj_vecs)  # (L, n, K)
+
+    orders = jax.vmap(lambda p: _str_order(p, B))(proj)  # (L, n)
+
+    def _pack(order, proj_t):
+        p_sorted = jnp.take(proj_t, order, axis=0)
+        pad = jnp.full((n_pad - n, K), jnp.inf, p_sorted.dtype)
+        p_sorted = jnp.concatenate([p_sorted, pad], axis=0).reshape(nb, B, K)
+        ids = jnp.concatenate(
+            [order.astype(jnp.int32), jnp.full((n_pad - n,), n, jnp.int32)]
+        ).reshape(nb, B)
+        # MBRs over real points only: padded rows are +inf so they never
+        # lower `lo`; mask them out of `hi` with -inf.
+        finite = jnp.isfinite(p_sorted[..., :1])
+        lo = jnp.min(p_sorted, axis=1)
+        hi = jnp.max(jnp.where(finite, p_sorted, -jnp.inf), axis=1)
+        return p_sorted, ids, lo, hi
+
+    proj_blocks, ids_blocks, mbr_lo, mbr_hi = jax.vmap(_pack)(orders, proj)
+
+    if params.inline_vectors:
+        def _pack_vecs(order):
+            v = jnp.take(data, order, axis=0)
+            pad = jnp.zeros((n_pad - n, d), v.dtype)
+            return jnp.concatenate([v, pad], axis=0).reshape(nb, B, d)
+
+        vec_blocks = jax.vmap(_pack_vecs)(orders)
+    else:
+        vec_blocks = jnp.zeros((0,), dtype=data.dtype)
+
+    return DBLSHIndex(
+        proj_vecs=proj_vecs,
+        proj_blocks=proj_blocks,
+        ids_blocks=ids_blocks,
+        mbr_lo=mbr_lo,
+        mbr_hi=mbr_hi,
+        data=data,
+        vec_blocks=vec_blocks,
+        params=params,
+    )

@@ -1,0 +1,188 @@
+"""DB-LSH query phase (paper §IV-C, Algorithms 1 & 2), TPU-adapted.
+
+A (r,c)-NN probe at radius ``r`` materializes, per table i, the
+query-centric hypercubic bucket  W(G_i(q), w0*r)  (Eq. 8) and verifies
+the points inside it. c-ANN runs the radius schedule r = r0, c*r0, ...
+(Algorithm 2) inside a ``lax.while_loop`` whose carry holds the running
+top-k; (c,k)-ANN uses the generalized termination rule from §IV-C:
+
+  * stop when the k-th best verified distance is <= c * r, or
+  * when >= 2tL + k distinct points have been verified, or
+  * after ``max_radius_steps`` schedule steps (safety bound).
+
+All shapes are static: each (table, radius) probe fetches at most
+``M = params.max_blocks`` STR blocks (fixed-capacity compaction) and
+verifies at most M*B points; points outside the box — and block slots
+beyond the capacity — are masked to +inf. This is the paper's own budget
+(it never verifies more than 2tL+1 points either); see DESIGN.md §3.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import hashing
+from .index import DBLSHIndex
+
+__all__ = ["search", "search_batch", "rc_nn", "probe_radius"]
+
+_INF = jnp.inf
+
+
+def _scan_one_table(proj_blocks, ids_blocks, mbr_lo, mbr_hi, vec_blocks, data, g, w, params):
+    """Window query W(g, w) against one table. Returns (dist2, ids) of shape
+    (M*B,) with +inf / n for masked slots."""
+    nb, B, K = proj_blocks.shape
+    M = params.max_blocks
+    n = data.shape[0]
+    lo = g - 0.5 * w
+    hi = g + 0.5 * w
+
+    overlap = jnp.all((mbr_lo <= hi) & (mbr_hi >= lo), axis=-1)  # (nb,)
+    # Fixed-capacity, query-centric compaction: of the overlapping blocks,
+    # take the M whose MBRs are *nearest the query projection* (classic
+    # R-tree MINDIST ordering). Under budget pressure this prioritizes the
+    # candidates most likely to be true neighbors — the verification-order
+    # analogue of the paper's query-centric bucketing.
+    mindist = jnp.sum(
+        jnp.square(jnp.maximum(mbr_lo - g, 0.0) + jnp.maximum(g - mbr_hi, 0.0)),
+        axis=-1,
+    )  # (nb,)
+    score = jnp.where(overlap, mindist, _INF)
+    _, blk = jax.lax.top_k(-score, M)  # (M,) best-first
+    blk = jnp.where(jnp.take(overlap, blk), blk, nb)
+    pb = jnp.take(proj_blocks, blk, axis=0, mode="fill", fill_value=_INF)  # (M,B,K)
+    ib = jnp.take(ids_blocks, blk, axis=0, mode="fill", fill_value=n)  # (M,B)
+
+    inbox = jnp.all((pb >= lo) & (pb <= hi), axis=-1) & (ib < n)  # (M,B)
+
+    if params.inline_vectors:
+        xb = jnp.take(vec_blocks, blk, axis=0, mode="fill", fill_value=0.0)  # (M,B,d)
+    else:
+        xb = jnp.take(data, ib.reshape(-1), axis=0, mode="fill", fill_value=0.0)
+        xb = xb.reshape(M, B, -1)
+
+    return inbox, xb, ib
+
+
+def _verify_jnp(inbox, xb, ib, q):
+    """Pure-jnp verification: exact squared L2 for in-box points."""
+    d2 = jnp.sum(jnp.square(xb - q), axis=-1)  # (M,B)
+    d2 = jnp.where(inbox, d2, _INF)
+    return d2.reshape(-1), ib.reshape(-1)
+
+
+def probe_radius(index: DBLSHIndex, q: jax.Array, g_all: jax.Array, w) -> tuple:
+    """All-L-tables probe at one width ``w``: returns flat (dist2, ids) of
+    shape (L*M*B,)."""
+    p = index.params
+
+    if p.inline_vectors:
+        vecs = index.vec_blocks
+    else:
+        vecs = jnp.zeros((p.L, 0), dtype=index.data.dtype)
+
+    def scan_i(pb, ib_, lo_, hi_, vb, g):
+        inbox, xb, ib = _scan_one_table(pb, ib_, lo_, hi_, vb, index.data, g, w, p)
+        return _verify_jnp(inbox, xb, ib, q)
+
+    d2, ids = jax.vmap(scan_i)(
+        index.proj_blocks, index.ids_blocks, index.mbr_lo, index.mbr_hi, vecs, g_all
+    )
+    return d2.reshape(-1), ids.reshape(-1)
+
+
+def _dedup_merge(best_d2, best_id, new_d2, new_id, n, k):
+    """Merge the running top-k with freshly verified candidates, dropping
+    duplicate ids (the same point found in several tables / radii).
+
+    Returns (top-k dist2 ascending, top-k ids, #distinct finite verified
+    among `new`)."""
+    d2 = jnp.concatenate([best_d2, new_d2])
+    ids = jnp.concatenate([best_id, new_id])
+    # lexsort: primary ids, secondary dist -> first slot of an id group is
+    # its best (finite) distance.
+    order = jnp.lexsort((d2, ids))
+    ids_s = jnp.take(ids, order)
+    d2_s = jnp.take(d2, order)
+    first = jnp.concatenate([jnp.ones((1,), bool), ids_s[1:] != ids_s[:-1]])
+    valid = first & (ids_s < n) & jnp.isfinite(d2_s)
+    d2_s = jnp.where(valid, d2_s, _INF)
+    # distinct finite among the *new* candidates only (exclude carried best):
+    new_sorted = jnp.lexsort((new_d2, new_id))
+    nids = jnp.take(new_id, new_sorted)
+    nd2 = jnp.take(new_d2, new_sorted)
+    nfirst = jnp.concatenate([jnp.ones((1,), bool), nids[1:] != nids[:-1]])
+    n_verified = jnp.sum(nfirst & (nids < n) & jnp.isfinite(nd2))
+
+    neg_top, top_idx = jax.lax.top_k(-d2_s, k)
+    return -neg_top, jnp.take(ids_s, top_idx), n_verified
+
+
+@partial(jax.jit, static_argnames=("k",))
+def search(index: DBLSHIndex, q: jax.Array, k: int = 0, r0: float = 1.0):
+    """(c,k)-ANN search for a single query (Algorithm 2 + §IV-C k-NN rules).
+
+    Args:
+      index: built DBLSHIndex.
+      q: (d,) query point.
+      k: number of neighbors (default params.k).
+      r0: initial search radius (paper: 1; callers may pass a data-scale
+          estimate).
+
+    Returns:
+      (dists, ids): (k,) ascending L2 distances and point ids. Slots that
+      were never filled hold +inf / n.
+    """
+    p = index.params
+    k = k or p.k
+    n = index.n
+    g_all = jnp.einsum("lkd,d->lk", index.proj_vecs, q)  # G_i(q), i=1..L
+
+    best_d2 = jnp.full((k,), _INF)
+    best_id = jnp.full((k,), n, jnp.int32)
+
+    def cond(state):
+        j, r, bd, bi, nver, done = state
+        return (~done) & (j < p.max_radius_steps)
+
+    def body(state):
+        j, r, bd, bi, nver, done = state
+        w = p.w0 * r
+        new_d2, new_id = probe_radius(index, q, g_all, w)
+        bd, bi, n_new = _dedup_merge(bd, bi, new_d2, new_id, n, k)
+        # windows nest across radii: distinct-this-radius is the running
+        # distinct total (see DESIGN.md §3).
+        nver = jnp.maximum(nver, n_new)
+        kth = bd[k - 1]
+        done = (kth <= jnp.square(p.c * r)) | (nver >= p.budget)
+        return j + 1, r * p.c, bd, bi, nver, done
+
+    state = (jnp.asarray(0), jnp.asarray(r0, jnp.float32), best_d2, best_id,
+             jnp.asarray(0, jnp.int32), jnp.asarray(False))
+    _, _, best_d2, best_id, _, _ = jax.lax.while_loop(cond, body, state)
+    return jnp.sqrt(best_d2), best_id
+
+
+@partial(jax.jit, static_argnames=("k",))
+def search_batch(index: DBLSHIndex, Q: jax.Array, k: int = 0, r0: float = 1.0):
+    """Batched (c,k)-ANN: vmap of :func:`search` over the query axis."""
+    return jax.vmap(lambda q: search(index, q, k=k or index.params.k, r0=r0))(Q)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def rc_nn(index: DBLSHIndex, q: jax.Array, r: float, k: int = 1):
+    """Single (r,c)-NN probe (Algorithm 1): one window per table at width
+    w0*r; returns the best k verified points (+inf/n when none found —
+    the paper's 'return nothing')."""
+    p = index.params
+    n = index.n
+    g_all = jnp.einsum("lkd,d->lk", index.proj_vecs, q)
+    d2, ids = probe_radius(index, q, g_all, p.w0 * jnp.asarray(r, jnp.float32))
+    bd = jnp.full((k,), _INF)
+    bi = jnp.full((k,), n, jnp.int32)
+    bd, bi, _ = _dedup_merge(bd, bi, d2, ids, n, k)
+    return jnp.sqrt(bd), bi

@@ -1,0 +1,172 @@
+"""Batched fixed-schedule DB-LSH search — the TPU serving path.
+
+`query.search_batch` (vmapped `lax.while_loop`) is the paper-faithful
+adaptive path: each query stops at its own radius. On a TPU serving a
+batch of requests, data-dependent per-query schedules waste the lockstep
+vector units, so production serving uses a *fixed* radius schedule: every
+query runs ``steps`` probes r0, c·r0, …, c^{steps-1}·r0 with masked
+updates after a query's termination condition fires (identical results
+to the adaptive path whenever the adaptive path would have terminated
+within ``steps``; the fixed path can only find *more*).
+
+Three verify engines:
+  * ``jnp``    — pure-XLA gather + verify (works everywhere; CPU default)
+  * ``kernel`` — Pallas ``candidate_verify`` on pre-gathered candidates
+  * ``inline`` — Pallas ``window_verify`` with scalar-prefetch block DMA
+                 (zero-copy gather; requires params.inline_vectors)
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .index import DBLSHIndex
+from .. import kernels
+
+__all__ = ["search_batch_fixed"]
+
+_INF = jnp.inf
+
+
+def _select_blocks(index: DBLSHIndex, G: jax.Array, w) -> jax.Array:
+    """MINDIST-ordered fixed-capacity block selection for a query batch.
+
+    G: (Q, L, K) query projections. Returns blk: (L, Q, M) int32 (nb =
+    invalid)."""
+    p = index.params
+    nb = index.nb
+
+    def per_table(mbr_lo, mbr_hi, g):
+        # g: (Q, K); mbr: (nb, K)
+        lo = g[:, None, :] - 0.5 * w
+        hi = g[:, None, :] + 0.5 * w
+        overlap = jnp.all((mbr_lo[None] <= hi) & (mbr_hi[None] >= lo), axis=-1)
+        mindist = jnp.sum(
+            jnp.square(
+                jnp.maximum(mbr_lo[None] - g[:, None, :], 0.0)
+                + jnp.maximum(g[:, None, :] - mbr_hi[None], 0.0)
+            ),
+            axis=-1,
+        )  # (Q, nb)
+        score = jnp.where(overlap, mindist, _INF)
+        _, blk = jax.lax.top_k(-score, p.max_blocks)  # (Q, M)
+        return jnp.where(jnp.take_along_axis(overlap, blk, 1), blk, nb).astype(jnp.int32)
+
+    return jax.vmap(per_table)(index.mbr_lo, index.mbr_hi, jnp.swapaxes(G, 0, 1))
+
+
+def _merge_dedup_topk(run_d, run_i, new_d, new_i, n, k):
+    """(Q, a) + (Q, b) -> (Q, k) dedup'd ascending merge."""
+    d = jnp.concatenate([run_d, new_d], axis=1)
+    i = jnp.concatenate([run_i, new_i], axis=1)
+
+    def one(dq, iq):
+        order = jnp.lexsort((dq, iq))
+        ids_s = jnp.take(iq, order)
+        d_s = jnp.take(dq, order)
+        first = jnp.concatenate([jnp.ones((1,), bool), ids_s[1:] != ids_s[:-1]])
+        d_s = jnp.where(first & (ids_s < n), d_s, _INF)
+        neg, idx = jax.lax.top_k(-d_s, k)
+        ids = jnp.take(ids_s, idx)
+        return -neg, jnp.where(jnp.isfinite(-neg), ids, n)
+
+    return jax.vmap(one)(d, i)
+
+
+@partial(jax.jit, static_argnames=("k", "steps", "engine", "interpret"))
+def search_batch_fixed(
+    index: DBLSHIndex,
+    Q: jax.Array,
+    k: int = 0,
+    r0: float = 1.0,
+    steps: int = 8,
+    engine: str = "jnp",
+    interpret=None,
+):
+    """Fixed-schedule batched (c,k)-ANN.
+
+    Args:
+      index: built DBLSHIndex (engine='inline' needs inline_vectors=True).
+      Q: (Qn, d) query batch.
+      k, r0, steps: top-k, initial radius, schedule length.
+      engine: 'jnp' | 'kernel' | 'inline'.
+
+    Returns: (Qn, k) distances ascending, (Qn, k) ids.
+    """
+    p = index.params
+    k = k or p.k
+    n = index.n
+    Qn = Q.shape[0]
+    nb = index.nb
+    B = p.block_size
+
+    G = jnp.einsum("lkd,qd->qlk", index.proj_vecs, Q)  # (Qn, L, K)
+
+    best_d = jnp.full((Qn, k), _INF)
+    best_i = jnp.full((Qn, k), n, jnp.int32)
+    done = jnp.zeros((Qn,), bool)
+
+    r = jnp.asarray(r0, jnp.float32)
+    for _ in range(steps):
+        w = p.w0 * r
+        blk = _select_blocks(index, G, w)  # (L, Qn, M)
+
+        step_d = jnp.full((Qn, k), _INF)
+        step_i = jnp.full((Qn, k), n, jnp.int32)
+        for li in range(p.L):
+            g_l = G[:, li, :]
+            if engine == "inline":
+                d_l, i_l = kernels.window_verify(
+                    blk[li],
+                    index.proj_blocks[li],
+                    index.vec_blocks[li],
+                    index.ids_blocks[li],
+                    g_l,
+                    Q,
+                    w,
+                    n=n,
+                    k=k,
+                    interpret=interpret,
+                )
+            else:
+                pb = jnp.take(index.proj_blocks[li], blk[li], axis=0,
+                              mode="fill", fill_value=_INF)  # (Qn,M,B,K)
+                ib = jnp.take(index.ids_blocks[li], blk[li], axis=0,
+                              mode="fill", fill_value=n)
+                if p.inline_vectors:
+                    vb = jnp.take(index.vec_blocks[li], blk[li], axis=0,
+                                  mode="fill", fill_value=0.0)
+                else:
+                    vb = jnp.take(index.data, ib.reshape(Qn, -1), axis=0,
+                                  mode="fill", fill_value=0.0)
+                M = blk.shape[-1]
+                cp = pb.reshape(Qn, M * B, p.K)
+                cv = vb.reshape(Qn, M * B, -1)
+                ci = ib.reshape(Qn, M * B)
+                if engine == "kernel":
+                    d_l, i_l = kernels.candidate_verify(
+                        cp, cv, ci, g_l, Q, w, n=n, k=k, interpret=interpret
+                    )
+                else:  # 'jnp'
+                    inbox = jnp.all(
+                        jnp.abs(cp - g_l[:, None, :]) <= 0.5 * w, axis=-1
+                    ) & (ci < n)
+                    d2 = jnp.sum(jnp.square(cv - Q[:, None, :]), axis=-1)
+                    d2 = jnp.where(inbox, d2, _INF)
+                    d_l, i_l = jax.lax.top_k(-d2, k)
+                    d_l = -d_l
+                    i_l = jnp.where(jnp.isfinite(d_l),
+                                    jnp.take_along_axis(ci, i_l, 1), n)
+            step_d, step_i = _merge_dedup_topk(step_d, step_i, d_l, i_l, n, k)
+
+        # masked merge: finished queries keep their result
+        nd, ni = _merge_dedup_topk(best_d, best_i, step_d, step_i, n, k)
+        best_d = jnp.where(done[:, None], best_d, nd)
+        best_i = jnp.where(done[:, None], best_i, ni)
+        done = done | (best_d[:, k - 1] <= jnp.square(p.c * r))
+        r = r * p.c
+
+    return jnp.sqrt(best_d), best_i

@@ -1,0 +1,145 @@
+"""Incremental DB-LSH index maintenance: insert / delete / compact.
+
+The paper builds a static index; a production vector store needs online
+updates. The dense STR-block structure supports them naturally:
+
+* **insert** — project the new points with the *existing* LSH functions
+  (Observation 1 keeps every guarantee intact: the hash family is fixed,
+  only the point set grows), STR-order them locally, and append whole
+  blocks per table. Query cost is unchanged (MBR mask covers old + new
+  blocks); block quality of the appended region equals a fresh build of
+  that region. K/L were sized for the build-time n — rebuild (compact)
+  when n grows past ~2x, as K ~ log n.
+
+* **delete** — tombstone the slots holding the deleted ids (+inf
+  projection, sentinel id) and re-tighten the affected block MBRs.
+  Deleted points can never be returned (the in-box test fails and the
+  id is invalid); space is reclaimed at the next compact.
+
+* **compact** — rebuild from the surviving points with a fresh key
+  (also re-derives K/L for the current n).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import hashing
+from .index import DBLSHIndex, _str_order, build
+from .params import DBLSHParams
+
+__all__ = ["insert", "delete", "compact", "live_count"]
+
+_INF = jnp.inf
+
+
+def insert(index: DBLSHIndex, new_points: jax.Array) -> DBLSHIndex:
+    """Append ``new_points`` (m, d) as new STR blocks per table."""
+    p = index.params
+    m, d = new_points.shape
+    assert d == p.d, (d, p.d)
+    n_old = index.n
+    B = p.block_size
+    nb_new = -(-m // B)
+    m_pad = nb_new * B
+    n_total = n_old + m
+
+    proj = hashing.project(new_points, index.proj_vecs)  # (L, m, K)
+    orders = jax.vmap(lambda pr: _str_order(pr, B))(proj)  # (L, m)
+
+    def _pack(order, proj_t):
+        ps = jnp.take(proj_t, order, axis=0)
+        ps = jnp.concatenate(
+            [ps, jnp.full((m_pad - m, p.K), _INF, ps.dtype)]
+        ).reshape(nb_new, B, p.K)
+        ids = jnp.concatenate(
+            [order.astype(jnp.int32) + n_old,
+             jnp.full((m_pad - m,), n_total, jnp.int32)]
+        ).reshape(nb_new, B)
+        finite = jnp.isfinite(ps[..., :1])
+        lo = jnp.min(ps, axis=1)
+        hi = jnp.max(jnp.where(finite, ps, -_INF), axis=1)
+        return ps, ids, lo, hi
+
+    pb, ib, lo, hi = jax.vmap(_pack)(orders, proj)
+
+    # old sentinel ids (== n_old) must move to the new sentinel n_total
+    old_ids = jnp.where(index.ids_blocks >= n_old, n_total, index.ids_blocks)
+
+    new_params = dataclasses.replace(p, n=n_total)
+    fields = dict(
+        proj_vecs=index.proj_vecs,
+        proj_blocks=jnp.concatenate([index.proj_blocks, pb], axis=1),
+        ids_blocks=jnp.concatenate([old_ids, ib], axis=1),
+        mbr_lo=jnp.concatenate([index.mbr_lo, lo], axis=1),
+        mbr_hi=jnp.concatenate([index.mbr_hi, hi], axis=1),
+        data=jnp.concatenate([index.data, new_points], axis=0),
+        params=new_params,
+    )
+    if p.inline_vectors:
+        def _pack_vecs(order):
+            v = jnp.take(new_points, order, axis=0)
+            v = jnp.concatenate([v, jnp.zeros((m_pad - m, d), v.dtype)])
+            return v.reshape(nb_new, B, d)
+
+        vb = jax.vmap(_pack_vecs)(orders)
+        fields["vec_blocks"] = jnp.concatenate([index.vec_blocks, vb], axis=1)
+    else:
+        fields["vec_blocks"] = index.vec_blocks
+    return DBLSHIndex(**fields)
+
+
+def delete(index: DBLSHIndex, del_ids: jax.Array) -> DBLSHIndex:
+    """Tombstone ``del_ids`` (k,) int32; re-tighten affected MBRs."""
+    p = index.params
+    n = index.n
+    dead = jnp.isin(index.ids_blocks, del_ids)  # (L, nb, B)
+    ids = jnp.where(dead, n, index.ids_blocks)
+    proj = jnp.where(dead[..., None], _INF, index.proj_blocks)
+    finite = jnp.isfinite(proj[..., :1])
+    lo = jnp.min(proj, axis=2)
+    hi = jnp.max(jnp.where(finite, proj, -_INF), axis=2)
+    return DBLSHIndex(
+        proj_vecs=index.proj_vecs,
+        proj_blocks=proj,
+        ids_blocks=ids,
+        mbr_lo=lo,
+        mbr_hi=hi,
+        data=index.data,
+        vec_blocks=index.vec_blocks,
+        params=index.params,
+    )
+
+
+def live_count(index: DBLSHIndex) -> int:
+    """Number of live (non-tombstoned) points, from table 0."""
+    return int(jnp.sum(index.ids_blocks[0] < index.n))
+
+
+def compact(index: DBLSHIndex, key) -> tuple[DBLSHIndex, jax.Array]:
+    """Rebuild from surviving points (re-derives K/L for the live n).
+
+    Returns (new_index, id_map) where id_map (n_old,) holds each old
+    id's new id, or -1 if deleted."""
+    p = index.params
+    n_old = index.n
+    live_ids = jnp.sort(
+        jnp.unique(
+            jnp.where(index.ids_blocks[0] < n_old, index.ids_blocks[0], n_old),
+            size=n_old + 1, fill_value=n_old,
+        )
+    )
+    live_ids = live_ids[live_ids < n_old]
+    n_live = int(live_ids.shape[0])
+    data = jnp.take(index.data, live_ids, axis=0)
+    new_params = DBLSHParams.derive(
+        n=n_live, d=p.d, c=p.c, w0=p.w0, t=p.t, k=p.k,
+        block_size=p.block_size, inline_vectors=p.inline_vectors,
+    )
+    id_map = jnp.full((n_old,), -1, jnp.int32)
+    id_map = id_map.at[live_ids].set(jnp.arange(n_live, dtype=jnp.int32))
+    return build(key, data, new_params), id_map

@@ -1,0 +1,5 @@
+"""Data substrate: vector datasets for ANN benchmarks + token pipelines for LM training."""
+
+from .vectors import make_clustered, make_uniform, normalize_scale, paper_dataset_specs
+
+__all__ = ["make_clustered", "make_uniform", "normalize_scale", "paper_dataset_specs"]

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the DB-LSH query hot path.
+
+Each kernel ships a jit'd wrapper (ops.py) and a pure-jnp oracle
+(ref.py); tests sweep shapes/dtypes and assert allclose in interpret
+mode (TPU is the compile target, CPU validates semantics).
+"""
+
+from .ops import candidate_verify, pairwise_l2, window_verify
+from . import ref
+
+__all__ = ["candidate_verify", "pairwise_l2", "window_verify", "ref"]

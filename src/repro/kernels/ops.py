@@ -1,0 +1,161 @@
+"""jit'd wrappers around the Pallas kernels (padding, BlockSpecs, tiling).
+
+``interpret=None`` auto-selects: compiled Mosaic on TPU, interpret mode
+elsewhere (the kernel body runs as pure Python/XLA on CPU — this is how
+the kernels are validated in this container; TPU is the target).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .pairwise_l2 import pairwise_l2_kernel
+from .window_verify import candidate_verify_kernel, window_verify_kernel
+
+_IMAX = jnp.iinfo(jnp.int32).max
+
+
+def _interp(interpret):
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def _pad_to(x, mult, axis, value):
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "k", "tile_c", "interpret"))
+def candidate_verify(cand_proj, cand_vecs, cand_ids, g, q, w, *, n, k,
+                     tile_c: int = 256, interpret=None):
+    """Fused box-mask + L2 + top-k over pre-gathered candidates.
+
+    Args:
+      cand_proj: (Q, C, K); cand_vecs: (Q, C, d); cand_ids: (Q, C) int32.
+      g: (Q, K); q: (Q, d); w: scalar window width.
+      n: sentinel id; k: top-k.
+
+    Returns: (Q, k) squared distances ascending, (Q, k) ids (n when empty).
+    """
+    Qn, C, K = cand_proj.shape
+    d = cand_vecs.shape[-1]
+    tile_c = min(tile_c, max(8, C))
+    cand_proj = _pad_to(cand_proj, tile_c, 1, jnp.inf)
+    cand_vecs = _pad_to(cand_vecs, tile_c, 1, 0.0)
+    cand_ids = _pad_to(cand_ids, tile_c, 1, n)
+    Cp = cand_proj.shape[1]
+    w_arr = jnp.asarray(w, jnp.float32).reshape(1, 1)
+
+    grid = (Qn, Cp // tile_c)
+    kern = functools.partial(candidate_verify_kernel, k=k, n=n)
+    out_d, out_i = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda qi, t: (0, 0)),  # w
+            pl.BlockSpec((1, K), lambda qi, t: (qi, 0)),  # g
+            pl.BlockSpec((1, d), lambda qi, t: (qi, 0)),  # q
+            pl.BlockSpec((1, tile_c, K), lambda qi, t: (qi, t, 0)),
+            pl.BlockSpec((1, tile_c, d), lambda qi, t: (qi, t, 0)),
+            pl.BlockSpec((1, tile_c), lambda qi, t: (qi, t)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda qi, t: (qi, 0)),
+            pl.BlockSpec((1, k), lambda qi, t: (qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Qn, k), jnp.float32),
+            jax.ShapeDtypeStruct((Qn, k), jnp.int32),
+        ],
+        interpret=_interp(interpret),
+    )(w_arr, g, q, cand_proj, cand_vecs, cand_ids)
+    out_i = jnp.where(out_i == _IMAX, n, out_i)
+    return out_d, out_i
+
+
+@functools.partial(jax.jit, static_argnames=("n", "k", "interpret"))
+def window_verify(blk_idx, proj_blocks, vec_blocks, ids_blocks, g, q, w, *,
+                  n, k, interpret=None):
+    """Scalar-prefetch fused window verify over an 'inline' layout table.
+
+    Args:
+      blk_idx: (Q, M) int32 STR block ids (nb = invalid slot).
+      proj_blocks: (nb, B, K); vec_blocks: (nb, B, d); ids_blocks: (nb, B).
+      g: (Q, K); q: (Q, d); w scalar.
+
+    The BlockSpec index_map reads blk_idx — each grid step DMAs exactly
+    the selected block HBM->VMEM (zero-copy gather).
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    Qn, M = blk_idx.shape
+    nb, B, K = proj_blocks.shape
+    d = vec_blocks.shape[-1]
+    w_arr = jnp.asarray(w, jnp.float32).reshape(1, 1)
+    safe_blk = jnp.minimum(blk_idx, nb - 1).astype(jnp.int32)
+
+    kern = functools.partial(window_verify_kernel, k=k, n=n, nb=nb)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(Qn, M),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda qi, m, blk: (0, 0)),  # w
+            pl.BlockSpec((1, K), lambda qi, m, blk: (qi, 0)),  # g
+            pl.BlockSpec((1, d), lambda qi, m, blk: (qi, 0)),  # q
+            pl.BlockSpec((1, B, K), lambda qi, m, blk: (jnp.minimum(blk[qi, m], nb - 1), 0, 0)),
+            pl.BlockSpec((1, B, d), lambda qi, m, blk: (jnp.minimum(blk[qi, m], nb - 1), 0, 0)),
+            pl.BlockSpec((1, B), lambda qi, m, blk: (jnp.minimum(blk[qi, m], nb - 1), 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda qi, m, blk: (qi, 0)),
+            pl.BlockSpec((1, k), lambda qi, m, blk: (qi, 0)),
+        ],
+    )
+    out_d, out_i = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((Qn, k), jnp.float32),
+            jax.ShapeDtypeStruct((Qn, k), jnp.int32),
+        ],
+        interpret=_interp(interpret),
+    )(blk_idx, w_arr, g, q, proj_blocks, vec_blocks, ids_blocks)
+    out_i = jnp.where(out_i == _IMAX, n, out_i)
+    return out_d, out_i
+
+
+@functools.partial(jax.jit, static_argnames=("tile_q", "tile_n", "tile_d", "interpret"))
+def pairwise_l2(Q, X, *, tile_q: int = 256, tile_n: int = 256, tile_d: int = 128,
+                interpret=None):
+    """Blocked squared-distance matrix (Q_n, X_n) -> (Q_n, X_n)."""
+    nq, d = Q.shape
+    nn = X.shape[0]
+    tile_q = min(tile_q, nq)
+    tile_n = min(tile_n, nn)
+    tile_d = min(tile_d, d)
+    Qp = _pad_to(_pad_to(Q, tile_q, 0, 0.0), tile_d, 1, 0.0)
+    Xp = _pad_to(_pad_to(X, tile_n, 0, 0.0), tile_d, 1, 0.0)
+    gq, gn, gd = Qp.shape[0] // tile_q, Xp.shape[0] // tile_n, Qp.shape[1] // tile_d
+
+    out = pl.pallas_call(
+        pairwise_l2_kernel,
+        grid=(gq, gn, gd),
+        in_specs=[
+            pl.BlockSpec((tile_q, tile_d), lambda i, j, kd: (i, kd)),
+            pl.BlockSpec((tile_n, tile_d), lambda i, j, kd: (j, kd)),
+        ],
+        out_specs=pl.BlockSpec((tile_q, tile_n), lambda i, j, kd: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Qp.shape[0], Xp.shape[0]), jnp.float32),
+        interpret=_interp(interpret),
+    )(Qp, Xp)
+    return out[:nq, :nn]

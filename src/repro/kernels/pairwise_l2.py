@@ -1,0 +1,48 @@
+"""Pallas TPU kernel: blocked squared-L2 distance matrix.
+
+``D2[i, j] = ||Q_i - X_j||^2 = ||Q_i||^2 - 2 Q_i . X_j + ||X_j||^2``
+
+Classic matmul-shaped kernel: grid (nq/TQ, nn/TN, nd/TD) with the
+contraction (d) innermost; the ``-2 Q X^T`` term runs on the MXU via
+``jax.lax.dot_general`` with fp32 accumulation, the two rank-1 norm
+terms are accumulated per-d-tile on the VPU (their per-tile partial sums
+telescope to the full norms). Output block is revisited across d tiles.
+
+Used by the brute-force oracle, the MQ (PM-LSH-style) baseline's
+projected-space metric query, and batch re-verification.
+
+Tile defaults (ops.py): TQ=TN=256, TD=128 -> VMEM: 2*256*128*4 (A,B) +
+256*256*4 (acc) = 512 KiB.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def pairwise_l2_kernel(q_ref, x_ref, out_ref):
+    """Blocks: q (TQ, TD), x (TN, TD), out (TQ, TN) revisited over d."""
+    td = pl.program_id(2)
+
+    @pl.when(td == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    a = q_ref[...]  # (TQ, TD)
+    b = x_ref[...]  # (TN, TD)
+    # MXU: -2 A B^T with fp32 accumulation
+    prod = jax.lax.dot_general(
+        a,
+        b,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    qn = jnp.sum(a.astype(jnp.float32) ** 2, axis=1, keepdims=True)  # (TQ, 1)
+    xn = jnp.sum(b.astype(jnp.float32) ** 2, axis=1, keepdims=True)  # (TN, 1)
+    out_ref[...] += qn - 2.0 * prod + xn.T
+
+    @pl.when(td == pl.num_programs(2) - 1)
+    def _clamp():
+        out_ref[...] = jnp.maximum(out_ref[...], 0.0)

@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for the Pallas kernels (the ``ref.py`` contract).
+
+Every kernel in this package must match its oracle here to numerical
+tolerance across the shape/dtype sweeps in tests/test_kernels.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["window_verify_ref", "candidate_verify_ref", "pairwise_l2_ref"]
+
+_INF = jnp.inf
+
+
+def candidate_verify_ref(cand_proj, cand_vecs, cand_ids, g, q, w, n, k):
+    """Oracle for the pre-gathered candidate verifier.
+
+    Args:
+      cand_proj: (Q, C, K) candidate projections.
+      cand_vecs: (Q, C, d) candidate vectors.
+      cand_ids:  (Q, C)    candidate ids (n = invalid).
+      g: (Q, K) query projections; q: (Q, d) query vectors.
+      w: scalar window width.
+      n: dataset size (sentinel id).
+      k: top-k.
+
+    Returns:
+      (Q, k) squared distances ascending (+inf pad), (Q, k) ids.
+    """
+    inbox = jnp.all(jnp.abs(cand_proj - g[:, None, :]) <= 0.5 * w, axis=-1)
+    valid = inbox & (cand_ids < n)
+    d2 = jnp.sum(jnp.square(cand_vecs - q[:, None, :]), axis=-1)
+    d2 = jnp.where(valid, d2, _INF)
+    neg, idx = jax.lax.top_k(-d2, k)
+    ids = jnp.take_along_axis(cand_ids, idx, axis=1)
+    ids = jnp.where(jnp.isfinite(-neg), ids, n)
+    return -neg, ids
+
+
+def window_verify_ref(blk_idx, proj_blocks, vec_blocks, ids_blocks, g, q, w, n, k):
+    """Oracle for the scalar-prefetch windowed verifier.
+
+    Args:
+      blk_idx: (Q, M) int32 block indices into the table (nb = invalid).
+      proj_blocks: (nb, B, K); vec_blocks: (nb, B, d); ids_blocks: (nb, B).
+      g: (Q, K); q: (Q, d); w scalar width; n sentinel; k top-k.
+    """
+    nb = proj_blocks.shape[0]
+    pb = jnp.take(proj_blocks, blk_idx, axis=0, mode="fill", fill_value=_INF)
+    vb = jnp.take(vec_blocks, blk_idx, axis=0, mode="fill", fill_value=0.0)
+    ib = jnp.take(ids_blocks, blk_idx, axis=0, mode="fill", fill_value=n)
+    Q, M, B, K = pb.shape
+    pb = pb.reshape(Q, M * B, K)
+    vb = vb.reshape(Q, M * B, -1)
+    ib = ib.reshape(Q, M * B)
+    # Semantics: top-k over the *set* of distinct candidates — duplicate
+    # block slots (same id, identical dist) count once, like the kernel.
+    inbox = jnp.all(jnp.abs(pb - g[:, None, :]) <= 0.5 * w, axis=-1)
+    valid = inbox & (ib < n)
+    d2 = jnp.sum(jnp.square(vb - q[:, None, :]), axis=-1)
+    d2 = jnp.where(valid, d2, _INF)
+
+    def dedup_one(d2q, ibq):
+        order = jnp.lexsort((d2q, ibq))
+        ids_s = jnp.take(ibq, order)
+        d_s = jnp.take(d2q, order)
+        first = jnp.concatenate([jnp.ones((1,), bool), ids_s[1:] != ids_s[:-1]])
+        d_s = jnp.where(first, d_s, _INF)
+        neg, idx = jax.lax.top_k(-d_s, k)
+        ids = jnp.take(ids_s, idx)
+        return -neg, jnp.where(jnp.isfinite(-neg), ids, n)
+
+    return jax.vmap(dedup_one)(d2, ib)
+
+
+def pairwise_l2_ref(Q, X):
+    """Oracle squared-distance matrix: (q, n) -> ||Q_q - X_n||^2."""
+    qn = jnp.sum(jnp.square(Q), axis=-1, keepdims=True)
+    xn = jnp.sum(jnp.square(X), axis=-1)
+    return jnp.maximum(qn - 2.0 * Q @ X.T + xn, 0.0)

@@ -1,0 +1,173 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell: jax.jit(step, in_shardings, out_shardings).lower(*specs)
+.compile() on the production mesh — ShapeDtypeStructs only, nothing is
+allocated. Records memory_analysis(), cost_analysis(), and the HLO-walk
+stats (trip-count-corrected FLOPs / HBM bytes / collective bytes) to a
+JSON per cell; existing results are skipped (incremental cache).
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--force]
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from ..configs import CONFIGS, SHAPES, get_config, runnable
+from ..models.registry import build_model
+from .hlo_stats import analyze
+from .mesh import make_production_mesh
+from .steps import build_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "../../../benchmarks/results/dryrun")
+
+
+def cell_path(arch, shape, multi_pod, compress=False):
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    if compress:
+        mesh_tag += "_int8pod"
+    d = os.path.join(RESULTS_DIR, mesh_tag)
+    os.makedirs(d, exist_ok=True)
+    return os.path.join(d, f"{arch}__{shape}.json")
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
+             compress_pods: bool = False, force: bool = False,
+             save_hlo: bool = False) -> dict:
+    path = cell_path(arch, shape_name, multi_pod, compress_pods)
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            cached = json.load(f)
+        if cached.get("status") in ("ok", "skipped"):
+            return cached  # errors are retried
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "phase": shape.phase,
+    }
+    if not runnable(cfg, shape):
+        result["status"] = "skipped"
+        result["reason"] = (
+            "long_500k requires sub-quadratic attention; "
+            f"{arch} is full-attention (DESIGN.md §5)"
+        )
+        _write(path, result)
+        return result
+
+    try:
+        t0 = time.time()
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        model = build_model(cfg)
+        with mesh:
+            fn, args, in_sh, out_sh, donate = build_step(
+                model, shape, mesh, compress_pods=compress_pods
+            )
+            lowered = jax.jit(
+                fn, in_shardings=in_sh, out_shardings=out_sh,
+                donate_argnums=donate,
+            ).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis() or {}
+            hlo = compiled.as_text()
+            stats = analyze(hlo)
+
+        result.update(
+            status="ok",
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            memory={
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "per_device_total": (
+                    mem.argument_size_in_bytes
+                    + mem.output_size_in_bytes
+                    + mem.temp_size_in_bytes
+                    - mem.alias_size_in_bytes
+                ),
+            },
+            cost_analysis={
+                "flops_body_once": cost.get("flops", 0.0),
+                "bytes_body_once": cost.get("bytes accessed", 0.0),
+            },
+            hlo_stats={
+                "flops": stats.flops,
+                "hbm_bytes": stats.hbm_bytes,
+                "collective_bytes": stats.collective_bytes,
+                "collective_breakdown": stats.collective_breakdown,
+            },
+            hlo_size=len(hlo),
+        )
+        if save_hlo:
+            with open(path.replace(".json", ".hlo.txt"), "w") as f:
+                f.write(hlo)
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        result.update(status="error", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-4000:])
+    _write(path, result)
+    return result
+
+
+def _write(path, result):
+    with open(path + ".tmp", "w") as f:
+        json.dump(result, f, indent=1)
+    os.replace(path + ".tmp", path)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--compress-pods", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    archs = sorted(CONFIGS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                cells.append((a, s, mp))
+
+    for i, (a, s, mp) in enumerate(cells):
+        t0 = time.time()
+        r = run_cell(a, s, mp, compress_pods=args.compress_pods,
+                     force=args.force, save_hlo=args.save_hlo)
+        status = r.get("status")
+        extra = ""
+        if status == "ok":
+            gb = r["memory"]["per_device_total"] / 2**30
+            extra = f"mem/dev={gb:.2f}GiB compile={r['compile_s']}s"
+        elif status == "error":
+            extra = r["error"][:120]
+        print(
+            f"[{i + 1}/{len(cells)}] {a} x {s} x {'2x16x16' if mp else '16x16'}: "
+            f"{status} {extra} ({time.time() - t0:.1f}s)",
+            flush=True,
+        )
+
+
+if __name__ == "__main__":
+    main()

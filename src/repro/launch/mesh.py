@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+Single pod: 16 x 16 = 256 chips, axes (data, model).
+Multi-pod:  2 x 16 x 16 = 512 chips, axes (pod, data, model).
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax
+import; everything else sees the real device count).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_local_mesh(multi_pod: bool = False):
+    """Degenerate mesh over however many devices exist (tests / CPU)."""
+    n = len(jax.devices())
+    shape = (1, 1, n) if multi_pod else (1, n)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )

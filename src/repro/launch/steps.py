@@ -1,0 +1,103 @@
+"""Step-function + sharding assembly for launcher/dry-run.
+
+``build_step(model, shape, mesh, ...)`` returns (fn, example_args,
+in_shardings, out_shardings, donate) ready for
+``jax.jit(fn, ...).lower(*args)`` — args are ShapeDtypeStructs, so
+nothing is allocated (the dry-run contract)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ShapeConfig
+from ..sharding import rules
+from ..train import make_optimizer, make_train_step
+from ..train.optimizer import cosine_schedule
+
+__all__ = ["build_step"]
+
+
+def build_step(model, shape: ShapeConfig, mesh, *, compress_pods=False,
+               batch_override: int = 0):
+    cfg = model.cfg
+    specs = model.input_specs(shape, batch_override=batch_override)
+
+    if shape.phase == "train":
+        opt = make_optimizer(cfg.optimizer, cosine_schedule(3e-4, 2000, 200_000))
+        step = make_train_step(model, opt, mesh, compress_pods=compress_pods,
+                               accum_steps=cfg.accum_steps)
+        state_shapes = jax.eval_shape(
+            lambda k: _init_state(model, opt, k, compress_pods), jax.random.key(0)
+        )
+        pspecs = rules.param_specs(state_shapes["params"], mesh)
+        sspecs = rules.state_specs(state_shapes, pspecs, mesh)
+        bspecs = rules.batch_specs(specs["batch"], mesh)
+        in_sh = (rules.named(mesh, sspecs), rules.named(mesh, bspecs))
+        out_sh = (rules.named(mesh, sspecs), None)
+        return step, (state_shapes, specs["batch"]), in_sh, out_sh, (0,)
+
+    params_shapes = jax.eval_shape(model.init, jax.random.key(0))
+    pspecs = rules.param_specs(params_shapes, mesh)
+
+    dp = rules.dp_axes(mesh)
+    B = batch_override or shape.global_batch
+
+    def _out_vec_specs():
+        """(logits (B,V), hidden (B,D)) with divisibility guards."""
+        v = model.cfg.padded_vocab
+        lspec = rules._guard_spec((B, v), (dp, "model"), mesh)
+        hspec = rules._guard_spec((B, model.cfg.d_model), (dp, None), mesh)
+        return lspec, hspec
+
+    if shape.phase == "prefill":
+        def fn(params, batch):
+            logits, hidden, caches = model.prefill(params, batch, mesh)
+            # return last-position hidden (retrieval key) + caches + logits
+            return logits, hidden[:, -1, :], caches
+
+        bspecs = rules.batch_specs(specs["batch"], mesh)
+        cache_shapes = jax.eval_shape(
+            lambda p, b: fn(p, b)[2], params_shapes, specs["batch"]
+        )
+        cspecs = rules.cache_specs(cache_shapes, mesh)
+        lspec, hspec = _out_vec_specs()
+        in_sh = (rules.named(mesh, pspecs), rules.named(mesh, bspecs))
+        out_sh = (
+            rules.named(mesh, lspec),
+            rules.named(mesh, hspec),
+            rules.named(mesh, cspecs),
+        )
+        return fn, (params_shapes, specs["batch"]), in_sh, out_sh, ()
+
+    if shape.phase == "decode":
+        def fn(params, token, caches, pos):
+            return model.decode(params, token, caches, pos, mesh)
+
+        cspecs = rules.cache_specs(specs["caches"], mesh)
+        lspec, hspec = _out_vec_specs()
+        tok_spec = rules._guard_spec((B,), (dp,), mesh)
+        in_sh = (
+            rules.named(mesh, pspecs),
+            rules.named(mesh, tok_spec),
+            rules.named(mesh, cspecs),
+            rules.named(mesh, P()),
+        )
+        out_sh = (
+            rules.named(mesh, lspec),
+            rules.named(mesh, hspec),
+            rules.named(mesh, cspecs),
+        )
+        args = (params_shapes, specs["token"], specs["caches"], specs["pos"])
+        return fn, args, in_sh, out_sh, (2,)  # donate caches
+
+    raise ValueError(shape.phase)
+
+
+def _init_state(model, opt, key, compress_pods):
+    from ..train.train_step import init_train_state
+
+    return init_train_state(model, opt, key, compress_pods=compress_pods)

@@ -1,0 +1,67 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi-9b \
+        [--steps N] [--scale-layers L] [--ckpt DIR] [--compress-pods]
+
+On a real fleet this runs under `jax.distributed.initialize()`; in this
+container it runs the same code on the local device with reduced
+configs. The full-mesh program is exercised by launch/dryrun.py.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from ..configs import SHAPES, get_config
+from ..data.pipeline import SyntheticTokens, make_batch_fn
+from ..models.registry import build_model, param_count
+from ..runtime import TrainSupervisor
+from ..train import init_train_state, make_optimizer, make_train_step
+from ..train.optimizer import cosine_schedule
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config (CPU-sized)")
+    ap.add_argument("--ckpt", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke or jax.default_backend() == "cpu":
+        cfg = cfg.smoke().scaled(dtype="float32")
+    model = build_model(cfg)
+    opt = make_optimizer(cfg.optimizer, cosine_schedule(3e-4, 10, args.steps))
+    state = init_train_state(model, opt, jax.random.key(0))
+    print(f"{cfg.name}: {param_count(state['params']) / 1e6:.1f}M params, "
+          f"optimizer={cfg.optimizer}")
+
+    src = SyntheticTokens(cfg.vocab_size, args.seq, args.batch)
+    extras = {}
+    if cfg.family == "encdec":
+        extras["frames"] = (cfg.enc_seq, cfg.d_model)
+    if cfg.family == "vlm":
+        extras["images"] = (cfg.n_img_tokens, cfg.d_vision)
+    batch_fn = make_batch_fn(src, extras=extras)
+    step_fn = jax.jit(make_train_step(model, opt))
+
+    sup = TrainSupervisor(args.ckpt, ckpt_every=args.ckpt_every)
+
+    def log(step, metrics, dt, slow):
+        if step % 10 == 0:
+            print(f"step {step:4d} loss {float(metrics['loss']):.4f} "
+                  f"{dt * 1e3:.0f} ms" + (" [STRAGGLER]" if slow else ""))
+
+    sup.run(state, step_fn, batch_fn, args.steps, log=log)
+    print("training complete")
+
+
+if __name__ == "__main__":
+    main()

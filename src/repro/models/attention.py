@@ -1,0 +1,303 @@
+"""GQA / MHA / sliding-window / cross attention with KV caches.
+
+Layouts:
+  activations  (B, T, D)
+  q/k/v        (B, T, H|KV, hd)
+  KV cache     (B, S, KV, hd)  — ring buffer of size `window` for SWA
+
+TP: heads shard over the mesh 'model' axis; when KV-head count is
+smaller than the axis, KV projections are replicated (standard GQA TP).
+Softmax runs in fp32 regardless of activation dtype.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import apply_rope, constrain, dense_init
+
+NEG = -1e30
+
+
+def attn_params(key, d_model, n_heads, n_kv, head_dim, d_out=None, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    d_out = d_out or d_model
+    return {
+        "wq": dense_init(ks[0], (d_model, n_heads, head_dim), d_model, dtype),
+        "wk": dense_init(ks[1], (d_model, n_kv, head_dim), d_model, dtype),
+        "wv": dense_init(ks[2], (d_model, n_kv, head_dim), d_model, dtype),
+        "wo": dense_init(ks[3], (n_heads, head_dim, d_out), n_heads * head_dim, dtype),
+    }
+
+
+def _qkv(x, p, kv_src=None):
+    kv_src = x if kv_src is None else kv_src
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", kv_src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", kv_src, p["wv"])
+    return q, k, v
+
+
+def _attn_internal_spec(KV, G, T, mesh):
+    """Where to put the 'model' axis inside attention.
+
+    Preferred: the joint head dim H = KV*G (standard Megatron TP — both
+    forward and backward einsums partition cleanly). When H doesn't
+    divide, fall back to the query-sequence dim (context parallelism; T
+    is a multiple of the axis for every assigned shape)."""
+    if mesh is None or "model" not in mesh.axis_names:
+        return None
+    tp = mesh.shape["model"]
+    if tp == 1:
+        return None
+    if (KV * G) % tp == 0:
+        return "h"
+    if T % tp == 0:
+        return "t"
+    return None
+
+
+def _h_layout_scores(q, k):
+    """Scores in (B, H, T, S) layout with k broadcast to H heads — the
+    joint head dim shards over 'model' without per-dim divisibility
+    games on (KV, G)."""
+    B, T, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    krep = jnp.broadcast_to(
+        k[:, :, :, None, :], (B, k.shape[1], KV, G, hd)
+    ).reshape(B, k.shape[1], H, hd)
+    return jnp.einsum("bthd,bshd->bhts", q, krep) / jnp.sqrt(float(hd))
+
+
+def _h_layout_out(scores, v, wo):
+    """scores (B,H,T,S), v (B,S,KV,hd) -> (B,T,D)."""
+    B, H, T, S = scores.shape
+    KV = v.shape[2]
+    G = H // KV
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(v.dtype)
+    vrep = jnp.broadcast_to(
+        v[:, :, :, None, :], (B, S, KV, G, v.shape[-1])
+    ).reshape(B, S, H, v.shape[-1])
+    ctx = jnp.einsum("bhts,bshd->bthd", probs, vrep)
+    return jnp.einsum("bthk,hkd->btd", ctx, wo)
+
+
+def _gqa_scores(q, k):
+    """q: (B,T,H,hd), k: (B,S,KV,hd) -> scores (B,KV,G,T,S), G = H/KV."""
+    B, T, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, T, KV, G, hd)
+    return jnp.einsum("btkgh,bskh->bkgts", qg, k) / jnp.sqrt(float(hd))
+
+
+def _gqa_out(scores, v, wo):
+    """scores (B,KV,G,T,S), v (B,S,KV,hd) -> (B,T,D)."""
+    B, KV, G, T, S = scores.shape
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(v.dtype)
+    ctx = jnp.einsum("bkgts,bskh->btkgh", probs, v)
+    ctx = ctx.reshape(B, T, KV * G, v.shape[-1])
+    return jnp.einsum("bthk,hkd->btd", ctx, wo)
+
+
+CHUNKED_THRESHOLD = 16384  # use online-softmax KV chunking past this S
+
+
+def _kv_chunked_context(q, k, v, *, causal, window, ck=1024):
+    """Flash-style online-softmax attention: scan over KV chunks.
+
+    Memory O(T * ck) instead of O(T * S) — the lever that fits the
+    prefill_32k cells. q: (B,T,H,hd) (RoPE applied); k/v: (B,S,KV,hd).
+    Returns ctx (B,T,H,hd). fp32 running (max, denom, acc)."""
+    B, T, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    ck = min(ck, S)
+    pad = (-S) % ck
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nk = (S + pad) // ck
+    qpos = jax.lax.broadcasted_iota(jnp.int32, (T, ck), 0)
+    scale = 1.0 / jnp.sqrt(float(hd))
+
+    def step(carry, kj):
+        m, l, acc = carry  # (B,H,T) f32, (B,H,T) f32, (B,T,H,hd) f32
+        kb = jax.lax.dynamic_slice_in_dim(k, kj * ck, ck, 1)  # (B,ck,KV,hd)
+        vb = jax.lax.dynamic_slice_in_dim(v, kj * ck, ck, 1)
+        krep = jnp.broadcast_to(
+            kb[:, :, :, None, :], (B, ck, KV, G, hd)
+        ).reshape(B, ck, H, hd)
+        vrep = jnp.broadcast_to(
+            vb[:, :, :, None, :], (B, ck, KV, G, hd)
+        ).reshape(B, ck, H, hd)
+        s = jnp.einsum("bthd,bshd->bhts", q, krep).astype(jnp.float32) * scale
+        kpos = kj * ck + jax.lax.broadcasted_iota(jnp.int32, (T, ck), 1)
+        ok = kpos < S  # padding
+        if causal:
+            ok &= qpos >= kpos
+        if window:
+            ok &= (qpos - kpos) < window
+        s = jnp.where(ok[None, None], s, -jnp.inf)
+        mnew = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard: fully-masked rows keep m = -inf; exp(-inf - -inf) -> nan
+        safe_m = jnp.where(jnp.isfinite(mnew), mnew, 0.0)
+        pexp = jnp.exp(s - safe_m[..., None])
+        pexp = jnp.where(ok[None, None], pexp, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - safe_m), 0.0)
+        l = l * corr + jnp.sum(pexp, axis=-1)
+        upd = jnp.einsum("bhts,bshd->bthd", pexp.astype(v.dtype), vrep)
+        acc = acc * jnp.moveaxis(corr, 1, 2)[..., None] + upd.astype(jnp.float32)
+        return (mnew, l, acc), None
+
+    init = (
+        jnp.full((B, H, T), -jnp.inf, jnp.float32),
+        jnp.zeros((B, H, T), jnp.float32),
+        jnp.zeros((B, T, H, hd), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(step, init, jnp.arange(nk))
+    denom = jnp.maximum(jnp.moveaxis(l, 1, 2), 1e-30)[..., None]
+    return (acc / denom).astype(q.dtype)
+
+
+def attention(x, p, positions, *, causal=True, window=0, rope_theta=1e4,
+              kv_positions=None, use_rope=True, mesh=None):
+    """Full-sequence attention (train / prefill).
+
+    x: (B, T, D); positions: (B, T) int32. Returns (B, T, D) plus the
+    (k, v) tensors for cache seeding."""
+    q, k, v = _qkv(x, p)
+    if use_rope:
+        kv_pos = positions if kv_positions is None else kv_positions
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, kv_pos, rope_theta)
+    B, T, H, hd = q.shape
+    KV = k.shape[2]
+    where = _attn_internal_spec(KV, H // KV, T, mesh)
+    dp = ("pod", "data")
+    S = k.shape[1]
+
+    if S >= CHUNKED_THRESHOLD:
+        # long-context path: O(T*ck) online-softmax scan over KV chunks
+        if where == "h":
+            q = constrain(q, dp, None, "model", None, mesh=mesh)
+        elif where == "t":
+            q = constrain(q, dp, "model", None, None, mesh=mesh)
+        ctx = _kv_chunked_context(q, k, v, causal=causal, window=window)
+        out = jnp.einsum("bthk,hkd->btd", ctx, p["wo"])
+        return constrain(out, dp, None, None, mesh=mesh), (k, v)
+
+    i = jax.lax.broadcasted_iota(jnp.int32, (T, S), 0)
+    j = jax.lax.broadcasted_iota(jnp.int32, (T, S), 1)
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask &= i >= j
+    if window:
+        mask &= (i - j) < window
+
+    if where == "h":
+        scores = _h_layout_scores(q, k)  # (B,H,T,S)
+        scores = constrain(scores, dp, "model", None, None, mesh=mesh)
+        scores = jnp.where(mask, scores, NEG)
+        out = _h_layout_out(scores, v, p["wo"])
+    else:
+        if where == "t":
+            q = constrain(q, dp, "model", None, None, mesh=mesh)
+        scores = _gqa_scores(q, k)  # (B,KV,G,T,S)
+        if where == "t":
+            scores = constrain(scores, dp, None, None, "model", None, mesh=mesh)
+        scores = jnp.where(mask, scores, NEG)
+        out = _gqa_out(scores, v, p["wo"])
+    out = constrain(out, dp, None, None, mesh=mesh)
+    return out, (k, v)
+
+
+def cross_attention(x, p, kv_src, mesh=None):
+    """Cross attention (decoder -> encoder states / image embeddings).
+    No RoPE on cross projections (Whisper / Llama-Vision convention)."""
+    q, k, v = _qkv(x, p, kv_src=kv_src)
+    B, T, H, hd = q.shape
+    KV = k.shape[2]
+    where = _attn_internal_spec(KV, H // KV, T, mesh)
+    dp = ("pod", "data")
+    if where == "h":
+        scores = _h_layout_scores(q, k)
+        scores = constrain(scores, dp, "model", None, None, mesh=mesh)
+        out = _h_layout_out(scores, v, p["wo"])
+    else:
+        if where == "t":
+            q = constrain(q, dp, "model", None, None, mesh=mesh)
+        scores = _gqa_scores(q, k)
+        if where == "t":
+            scores = constrain(scores, dp, None, None, "model", None, mesh=mesh)
+        out = _gqa_out(scores, v, p["wo"])
+    out = constrain(out, dp, None, None, mesh=mesh)
+    return out, (k, v)
+
+
+# ---------------------------------------------------------------------------
+# decode with KV cache
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheSpec:
+    batch: int
+    size: int  # cache slots (= seq len, or window for SWA)
+    n_kv: int
+    head_dim: int
+    window: int  # 0 = full
+
+
+def init_cache(spec: CacheSpec, dtype):
+    shape = (spec.batch, spec.size, spec.n_kv, spec.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_attention(x1, p, cache, pos, *, window=0, rope_theta=1e4, use_rope=True):
+    """Single-token decode. x1: (B, 1, D); pos: scalar int32 or (B,) int32
+    (per-slot positions — continuous batching); cache k/v: (B, S, KV, hd)
+    (ring buffer when SWA).
+
+    Returns (out (B,1,D), new_cache)."""
+    B = x1.shape[0]
+    S = cache["k"].shape[1]
+    q = jnp.einsum("btd,dhk->bthk", x1, p["wq"])
+    k1 = jnp.einsum("btd,dhk->bthk", x1, p["wk"])
+    v1 = jnp.einsum("btd,dhk->bthk", x1, p["wv"])
+    posv = jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(pos, jnp.int32)), (B,))
+    posb = posv[:, None]
+    if use_rope:
+        q = apply_rope(q, posb, rope_theta)
+        k1 = apply_rope(k1, posb, rope_theta)
+    slot = jnp.mod(posv, S) if window else posv  # (B,)
+    upd = jax.vmap(
+        lambda c, new, s: jax.lax.dynamic_update_slice(c, new, (s, 0, 0))
+    )
+    ck = upd(cache["k"], k1.astype(cache["k"].dtype), slot)
+    cv = upd(cache["v"], v1.astype(cache["v"].dtype), slot)
+
+    scores = _gqa_scores(q, ck)  # (B,KV,G,1,S)
+    j = jax.lax.broadcasted_iota(jnp.int32, (1, S), 1)  # (1,S)
+    if window:
+        # Ring buffer: slot j holds the most recent position p ≡ j (mod S)
+        # with p <= pos, i.e. p_j = pos - ((slot - j) mod S). Valid iff it
+        # was ever written (p_j >= 0); S == window bounds the lookback.
+        p_j = posv[:, None] - jnp.mod(slot[:, None] - j, S)  # (B,S)
+        mask = p_j >= 0
+    else:
+        mask = j <= posv[:, None]  # (B,S)
+    scores = jnp.where(mask[:, None, None, None, :], scores, NEG)
+    out = _gqa_out(scores, cv, p["wo"])
+    return out, {"k": ck, "v": cv}
+
+
+def decode_cross_attention(x1, p, cache):
+    """Decode-time cross attention against a precomputed (k, v) cache."""
+    q = jnp.einsum("btd,dhk->bthk", x1, p["wq"])
+    scores = _gqa_scores(q, cache["k"])
+    return _gqa_out(scores, cache["v"], p["wo"])

@@ -1,0 +1,137 @@
+"""Shared model building blocks: norms, RoPE, initializers, dtype policy.
+
+No flax in this container — modules are pure functions over nested-dict
+param pytrees. Layer stacks are *stacked* along a leading axis and
+consumed with ``lax.scan`` (small HLO -> fast SPMD compile, natural
+remat boundary)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float16": jnp.float16}
+
+
+def compute_dtype(cfg):
+    return DTYPES[cfg.dtype]
+
+
+def pad_vocab(v: int, mult: int = 128) -> int:
+    return -(-v // mult) * mult
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, in_axis_size=None, dtype=jnp.float32):
+    """Truncated-normal fan-in init (LeCun-style) in fp32 master dtype."""
+    fan_in = in_axis_size if in_axis_size is not None else shape[0]
+    std = 1.0 / jnp.sqrt(jnp.asarray(fan_in, jnp.float32))
+    return std * jax.random.truncated_normal(key, -3.0, 3.0, shape, dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * 0.02
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, scale, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x: (..., T, H, hd); positions: (..., T) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., T, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# sharding helper
+# ---------------------------------------------------------------------------
+
+
+def constrain(x, *spec, mesh=None):
+    """with_sharding_constraint by axis names; unknown axes are dropped
+    when a mesh is supplied; no-op outside a mesh."""
+    from jax.sharding import PartitionSpec as P
+
+    if mesh is not None:
+        names = set(mesh.axis_names)
+
+        def clean(ax):
+            if ax is None:
+                return None
+            axs = ax if isinstance(ax, tuple) else (ax,)
+            kept = tuple(a for a in axs if a in names)
+            if not kept:
+                return None
+            return kept if len(kept) > 1 else kept[0]
+
+        spec = tuple(clean(a) for a in spec)
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except (ValueError, RuntimeError, KeyError):
+        return x
+
+
+@jax.custom_vjp
+def _bf16_grad(x):
+    return x
+
+
+def _bf16_grad_fwd(x):
+    return x, None
+
+
+def _bf16_grad_bwd(_, g):
+    import jax.numpy as jnp
+
+    return (g.astype(jnp.bfloat16).astype(g.dtype) if False else g.astype(jnp.bfloat16),)
+
+
+_bf16_grad.defvjp(_bf16_grad_fwd, _bf16_grad_bwd)
+
+
+def grad_cast(x, dtype_name: str):
+    """Identity in the forward pass; downcasts the cotangent in the
+    backward pass (§Perf B3: fp32 softmax/router upcasts otherwise make
+    every cross-layer gradient all-reduce run at fp32 width)."""
+    if dtype_name != "bfloat16":
+        return x
+    return _bf16_grad(x)
+
+
+def cross_entropy(logits, labels, vocab_size: int):
+    """Mean CE over valid labels (< vocab_size; padded ids masked)."""
+    logits = logits.astype(jnp.float32)
+    valid = labels < vocab_size
+    safe = jnp.where(valid, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = jnp.where(valid, logz - gold, 0.0)
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1)

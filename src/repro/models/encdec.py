@@ -1,0 +1,181 @@
+"""Encoder-decoder transformer (Whisper-medium backbone).
+
+Per the assignment, the audio frontend (mel + conv downsampling) is a
+STUB: the encoder consumes precomputed frame embeddings
+(B, enc_seq, d_model). Whisper uses absolute sinusoidal positions (no
+RoPE) and GELU FFNs; embeddings are tied with the LM head.
+
+Decoder layers: self-attn (causal, cached) -> cross-attn (to encoder
+output; during decode the cross K/V are precomputed once) -> FFN.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import ffn as ffn_mod
+from .common import compute_dtype, constrain, cross_entropy, embed_init, rmsnorm
+
+
+def _zeros(shape):
+    return jnp.zeros(shape, jnp.float32)
+
+
+def sinusoid(T, D, offset=0):
+    pos = jnp.arange(offset, offset + T, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, D, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, dim / D)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+def sinusoid_at(pos, D):
+    """Sinusoid at traced position(s): scalar or (B,) -> (B, 1, D)."""
+    pos = jnp.atleast_1d(jnp.asarray(pos))
+    dim = jnp.arange(0, D, 2, dtype=jnp.float32)[None, :]
+    angle = pos[:, None].astype(jnp.float32) / jnp.power(10000.0, dim / D)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)[:, None, :]
+
+
+def _enc_block_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": _zeros((cfg.d_model,)),
+        "attn": attn.attn_params(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd),
+        "norm2": _zeros((cfg.d_model,)),
+        "ffn": ffn_mod.dense_ffn_params(k2, cfg.d_model, cfg.d_ff, cfg.ffn_kind),
+    }
+
+
+def _dec_block_init(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "norm1": _zeros((cfg.d_model,)),
+        "attn": attn.attn_params(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd),
+        "norm_x": _zeros((cfg.d_model,)),
+        "xattn": attn.attn_params(k2, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd),
+        "norm2": _zeros((cfg.d_model,)),
+        "ffn": ffn_mod.dense_ffn_params(k3, cfg.d_model, cfg.d_ff, cfg.ffn_kind),
+    }
+
+
+def init_params(key, cfg):
+    ke, kenc, kdec = jax.random.split(key, 3)
+    return {
+        "embed": embed_init(ke, (cfg.padded_vocab, cfg.d_model)),
+        "enc_blocks": jax.vmap(lambda k: _enc_block_init(k, cfg))(
+            jax.random.split(kenc, cfg.n_enc_layers)
+        ),
+        "enc_norm": _zeros((cfg.d_model,)),
+        "dec_blocks": jax.vmap(lambda k: _dec_block_init(k, cfg))(
+            jax.random.split(kdec, cfg.n_layers)
+        ),
+        "final_norm": _zeros((cfg.d_model,)),
+    }
+
+
+def _cast(bp, dt):
+    return jax.tree.map(
+        lambda a: a.astype(dt) if a.dtype == jnp.float32 and a.ndim > 1 else a, bp
+    )
+
+
+def encode(params, frames, cfg, mesh=None):
+    """frames: (B, S_enc, D) stub embeddings -> encoder states."""
+    dt = compute_dtype(cfg)
+    B, S, D = frames.shape
+    x = frames.astype(dt) + sinusoid(S, D).astype(dt)[None]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(x, bp):
+        bp = _cast(bp, dt)
+        h = rmsnorm(x, bp["norm1"], cfg.norm_eps)
+        a, _ = attn.attention(h, bp["attn"], positions, causal=False, use_rope=False, mesh=mesh)
+        x = x + a
+        h2 = rmsnorm(x, bp["norm2"], cfg.norm_eps)
+        return x + ffn_mod.dense_ffn(h2, bp["ffn"], cfg.ffn_kind), None
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def dec_forward(params, tokens, enc_out, cfg, mesh=None, want_cache=False):
+    """Decoder train/prefill. Returns (hidden, (self_caches, cross_caches))."""
+    dt = compute_dtype(cfg)
+    B, T = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    x = x + sinusoid(T, cfg.d_model).astype(dt)[None]
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+
+    def body(x, bp):
+        bp = _cast(bp, dt)
+        h = rmsnorm(x, bp["norm1"], cfg.norm_eps)
+        a, kv = attn.attention(h, bp["attn"], positions, causal=True, use_rope=False, mesh=mesh)
+        x = x + a
+        hx = rmsnorm(x, bp["norm_x"], cfg.norm_eps)
+        c, xkv = attn.cross_attention(hx, bp["xattn"], enc_out, mesh=mesh)
+        x = x + c
+        h2 = rmsnorm(x, bp["norm2"], cfg.norm_eps)
+        x = x + ffn_mod.dense_ffn(h2, bp["ffn"], cfg.ffn_kind)
+        cache = (
+            {"k": kv[0], "v": kv[1], "xk": xkv[0], "xv": xkv[1]}
+            if want_cache
+            else {}
+        )
+        return x, cache
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, caches = jax.lax.scan(body, x, params["dec_blocks"])
+    return rmsnorm(x, params["final_norm"], cfg.norm_eps), caches
+
+
+def loss_fn(params, batch, cfg, mesh=None):
+    enc_out = encode(params, batch["frames"], cfg, mesh)
+    hidden, _ = dec_forward(params, batch["tokens"], enc_out, cfg, mesh)
+    logits = jnp.einsum("btd,vd->btv", hidden, params["embed"].astype(hidden.dtype))
+    logits = constrain(logits, ("pod", "data"), None, "model", mesh=mesh)
+    loss = cross_entropy(logits, batch["labels"], cfg.vocab_size)
+    return loss, {"ce": loss, "hidden": hidden}
+
+
+def decode(params, token, caches, pos, cfg, mesh=None):
+    """One decoder step against cached self K/V and precomputed cross K/V."""
+    dt = compute_dtype(cfg)
+    x = jnp.take(params["embed"], token[:, None], axis=0).astype(dt)
+    x = x + sinusoid_at(pos, cfg.d_model).astype(dt)
+
+    def body(x, inp):
+        bp, cache = inp
+        bp = _cast(bp, dt)
+        h = rmsnorm(x, bp["norm1"], cfg.norm_eps)
+        a, kv = attn.decode_attention(
+            h, bp["attn"], {"k": cache["k"], "v": cache["v"]}, pos, use_rope=False
+        )
+        x = x + a
+        hx = rmsnorm(x, bp["norm_x"], cfg.norm_eps)
+        x = x + attn.decode_cross_attention(hx, bp["xattn"], {"k": cache["xk"], "v": cache["xv"]})
+        h2 = rmsnorm(x, bp["norm2"], cfg.norm_eps)
+        x = x + ffn_mod.dense_ffn(h2, bp["ffn"], cfg.ffn_kind)
+        return x, {**cache, "k": kv["k"], "v": kv["v"]}
+
+    x, new_caches = jax.lax.scan(body, x, (params["dec_blocks"], caches))
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("btd,vd->btv", x, params["embed"].astype(x.dtype))
+    return logits[:, 0], x[:, 0], new_caches
+
+
+def prefill(params, batch, cfg, mesh=None, cache_len=None):
+    enc_out = encode(params, batch["frames"], cfg, mesh)
+    tokens = batch["tokens"]
+    hidden, caches = dec_forward(params, tokens, enc_out, cfg, mesh, want_cache=True)
+    B, T = tokens.shape
+    cache_len = cache_len or T
+    pad = cache_len - T
+    if pad > 0:
+        caches = dict(caches)
+        caches["k"] = jnp.pad(caches["k"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        caches["v"] = jnp.pad(caches["v"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    logits = jnp.einsum("btd,vd->btv", hidden[:, -1:], params["embed"].astype(hidden.dtype))
+    return logits[:, 0], hidden, caches

@@ -1,0 +1,196 @@
+"""Dense (SwiGLU / GELU) and Mixture-of-Experts FFN layers.
+
+MoE design (EP over the mesh 'model' axis, DESIGN.md §6):
+
+  * tokens stay sharded over the data axes and are *replicated* over the
+    model axis inside a ``shard_map`` block;
+  * each model-rank owns E/tp experts; it routes all its local tokens,
+    keeps the assignments that target its own experts, and packs them
+    into a fixed-capacity (E_local, C, D) buffer with a sort-based
+    MegaBlocks-style dispatch (stable argsort by expert id, rank-in-group
+    via cummax, fixed-capacity compaction — no data-dependent shapes);
+  * after the per-expert matmuls the partial outputs are combined with a
+    single psum over 'model' — the same collective profile as a
+    Megatron row-parallel FFN, with no all-to-all.
+
+The identical `_moe_local` path runs unsharded on one device (smoke
+tests) — shard_map is only entered when the mesh's EP axis size > 1.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import dense_init
+
+__all__ = ["dense_ffn_params", "dense_ffn", "moe_params", "moe_ffn"]
+
+
+# ---------------------------------------------------------------------------
+# dense
+# ---------------------------------------------------------------------------
+
+
+def dense_ffn_params(key, d_model, d_ff, kind="swiglu", dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(ks[0], (d_model, d_ff), d_model, dtype),
+        "w_down": dense_init(ks[1], (d_ff, d_model), d_ff, dtype),
+    }
+    if kind == "swiglu":
+        p["w_gate"] = dense_init(ks[2], (d_model, d_ff), d_model, dtype)
+    return p
+
+
+def dense_ffn(x, p, kind="swiglu"):
+    up = jnp.einsum("...d,df->...f", x, p["w_up"])
+    if kind == "swiglu":
+        gate = jnp.einsum("...d,df->...f", x, p["w_gate"])
+        h = jax.nn.silu(gate) * up
+    else:  # gelu
+        h = jax.nn.gelu(up)
+    return jnp.einsum("...f,fd->...d", h, p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+
+def moe_params(key, d_model, d_ff, n_experts, kind="swiglu", dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(ks[0], (d_model, n_experts), d_model, jnp.float32),
+        "w_up": dense_init(ks[1], (n_experts, d_model, d_ff), d_model, dtype),
+        "w_down": dense_init(ks[2], (n_experts, d_ff, d_model), d_ff, dtype),
+    }
+    if kind == "swiglu":
+        p["w_gate"] = dense_init(ks[3], (n_experts, d_model, d_ff), d_model, dtype)
+    return p
+
+
+def _moe_local(x, ids, wts, w_up, w_gate, w_down, *, capacity, n_local, first_eid,
+               kind="swiglu"):
+    """Sort-based dispatch -> per-expert matmuls -> weighted combine.
+
+    x: (T, D); ids/wts: (T, k) global expert assignments; the caller owns
+    experts [first_eid, first_eid + n_local). Fixed shapes throughout.
+    """
+    T, D = x.shape
+    k = ids.shape[1]
+    Tk = T * k
+    EC = n_local * capacity
+
+    flat_e = ids.reshape(-1) - first_eid
+    flat_w = wts.reshape(-1)
+    tok = jnp.arange(Tk, dtype=jnp.int32) // k
+    mine = (flat_e >= 0) & (flat_e < n_local)
+    sort_key = jnp.where(mine, flat_e, n_local)
+    order = jnp.argsort(sort_key, stable=True)
+    e_s = jnp.take(sort_key, order)
+    tok_s = jnp.take(tok, order)
+    w_s = jnp.take(flat_w, order)
+
+    idx = jnp.arange(Tk, dtype=jnp.int32)
+    firsts = jnp.concatenate([jnp.ones((1,), bool), e_s[1:] != e_s[:-1]])
+    group_start = jax.lax.cummax(jnp.where(firsts, idx, -1))
+    rank = idx - group_start
+    keep = (rank < capacity) & (e_s < n_local)
+
+    # fixed-capacity compaction: all kept rows fit in EC slots
+    sel = jnp.argsort(~keep, stable=True)[:EC]
+    sel_keep = jnp.take(keep, sel)
+    sel_tok = jnp.take(tok_s, sel)
+    sel_slot = jnp.where(sel_keep, jnp.take(e_s, sel) * capacity + jnp.take(rank, sel), EC)
+    sel_w = jnp.where(sel_keep, jnp.take(w_s, sel), 0.0)
+
+    x_sel = jnp.take(x, sel_tok, axis=0) * sel_keep[:, None].astype(x.dtype)
+    buf = jnp.zeros((EC + 1, D), x.dtype).at[sel_slot].set(x_sel, mode="drop")
+    buf = buf[:EC].reshape(n_local, capacity, D)
+
+    up = jnp.einsum("ecd,edf->ecf", buf, w_up)
+    if kind == "swiglu":
+        gate = jnp.einsum("ecd,edf->ecf", buf, w_gate)
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    y = jnp.einsum("ecf,efd->ecd", h, w_down).reshape(EC, D)
+
+    y_sel = jnp.take(y, jnp.minimum(sel_slot, EC - 1), axis=0)
+    contrib = y_sel * (sel_w * sel_keep)[:, None].astype(y.dtype)
+    out = jnp.zeros((T, D), x.dtype).at[sel_tok].add(contrib, mode="drop")
+    return out
+
+
+def moe_ffn(x, p, cfg, mesh=None, dp_axes=("data",), ep_axis="model"):
+    """MoE FFN. x: (B, T, D). Returns (out, aux) with the Switch
+    load-balancing loss in aux."""
+    B, T, D = x.shape
+    E, k = cfg.n_experts, cfg.experts_per_token
+    xf = x.reshape(B * T, D)
+
+    logits = (xf.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, k)
+    top_w = (top_w / jnp.sum(top_w, axis=-1, keepdims=True)).astype(x.dtype)
+    top_i = top_i.astype(jnp.int32)
+
+    # Switch load-balance aux: E * sum_e f_e * p_e
+    frac = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_i, E, dtype=jnp.float32), axis=1), axis=0
+    )
+    aux = {"load_balance": E * jnp.sum(frac * jnp.mean(probs, axis=0))}
+
+    kind = "swiglu" if "w_gate" in p else "gelu"
+    w_gate = p.get("w_gate")
+    tp = 1 if mesh is None else mesh.shape.get(ep_axis, 1)
+
+    if tp == 1:
+        cap = max(4, math.ceil(B * T * k / E * cfg.moe_capacity_factor))
+        out = _moe_local(
+            xf, top_i, top_w, p["w_up"], w_gate, p["w_down"],
+            capacity=cap, n_local=E, first_eid=0, kind=kind,
+        )
+    else:
+        n_local = E // tp
+        dp = math.prod(mesh.shape[a] for a in dp_axes)
+        cap = max(4, math.ceil(B * T * k / dp / E * cfg.moe_capacity_factor))
+
+        # reduce-scatter the combined output straight into the
+        # sequence-sharded residual layout when divisibility allows
+        # (§Perf B2): half the all-reduce wire bytes and no post-MoE
+        # reshard against sp_residual.
+        rows_local = B * T // dp
+        use_rs = (rows_local % tp == 0) and getattr(cfg, "moe_reduce_scatter", False)
+
+        def shard_fn(xs, ids, wts, wu, wg, wd):
+            rank = jax.lax.axis_index(ep_axis)
+            args = (wu, wg, wd) if kind == "swiglu" else (wu, None, wd)
+            part = _moe_local(
+                xs, ids, wts, args[0], args[1], args[2],
+                capacity=cap, n_local=n_local, first_eid=rank * n_local,
+                kind=kind,
+            )
+            if use_rs:
+                return jax.lax.psum_scatter(part, ep_axis, scatter_dimension=0,
+                                            tiled=True)
+            return jax.lax.psum(part, ep_axis)
+
+        dspec = P(dp_axes if len(dp_axes) > 1 else dp_axes[0], None)
+        ospec = P(tuple(dp_axes) + (ep_axis,), None) if use_rs else dspec
+        espec = P(ep_axis, None, None)
+        in_specs = (dspec, dspec, dspec, espec, espec, espec)
+        if kind != "swiglu":
+            in_specs = (dspec, dspec, dspec, espec, P(), espec)
+        out = jax.shard_map(
+            shard_fn, mesh=mesh, in_specs=in_specs, out_specs=ospec,
+            check_vma=False,
+        )(xf, top_i, top_w, p["w_up"],
+          w_gate if w_gate is not None else jnp.zeros((), x.dtype), p["w_down"])
+
+    return out.reshape(B, T, D), aux

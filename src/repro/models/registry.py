@@ -1,0 +1,157 @@
+"""Model assembly: family -> (init, loss, prefill, decode, input_specs).
+
+``build_model(cfg)`` returns a Model whose functions are pure and
+jit/pjit-able; ``mesh`` is threaded for layers that enter shard_map (MoE
+EP). ``input_specs(shape, phase)`` produces ShapeDtypeStruct stand-ins
+for the dry-run (no allocation)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+import jax.numpy as jnp_  # noqa: F401
+
+from . import encdec, ssm as ssm_mod, transformer, vlm
+from .common import DTYPES, compute_dtype
+
+
+def _cast_params(params, cfg):
+    """Store >=2D weights in cfg.param_dtype (bf16 for the giant MoEs —
+    the fp32 master lives in the optimizer when one is wanted)."""
+    pd = DTYPES[cfg.param_dtype]
+    import jax.numpy as jnp
+
+    return jax.tree.map(
+        lambda a: a.astype(pd) if (a.ndim > 1 and a.dtype == jnp.float32) else a,
+        params,
+    )
+from ..configs.base import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[..., Any]
+    loss: Callable[..., Any]  # (params, batch, mesh=None) -> (loss, metrics)
+    prefill: Callable[..., Any]  # (params, batch, mesh=None, cache_len=None)
+    decode: Callable[..., Any]  # (params, token, caches, pos, mesh=None)
+
+    # -- dry-run support -----------------------------------------------------
+    def input_specs(self, shape: ShapeConfig, batch_override: int = 0) -> dict:
+        """ShapeDtypeStruct stand-ins for every model input of the step
+        implied by shape.phase ('train' | 'prefill' | 'decode')."""
+        cfg = self.cfg
+        B = batch_override or shape.global_batch
+        S = shape.seq_len
+        i32 = jnp.int32
+        sds = jax.ShapeDtypeStruct
+        dt = compute_dtype(cfg)
+
+        def extras():
+            e = {}
+            if cfg.family == "encdec":
+                e["frames"] = sds((B, cfg.enc_seq, cfg.d_model), dt)
+            if cfg.family == "vlm":
+                e["images"] = sds((B, cfg.n_img_tokens, cfg.d_vision), dt)
+            return e
+
+        if shape.phase == "train":
+            return {
+                "batch": {
+                    "tokens": sds((B, S), i32),
+                    "labels": sds((B, S), i32),
+                    **extras(),
+                }
+            }
+        if shape.phase == "prefill":
+            return {"batch": {"tokens": sds((B, S), i32), **extras()}}
+        if shape.phase == "decode":
+            return {
+                "token": sds((B,), i32),
+                "caches": self.cache_specs(B, S),
+                "pos": sds((), i32),
+            }
+        raise ValueError(shape.phase)
+
+    def cache_specs(self, batch: int, seq_len: int):
+        cfg = self.cfg
+        dt = compute_dtype(cfg)
+        sds = jax.ShapeDtypeStruct
+        if cfg.family in ("dense", "moe", "ssm", "hybrid"):
+            return transformer.cache_spec(cfg, batch, seq_len)
+        if cfg.family == "encdec":
+            L = cfg.n_layers
+            return {
+                "k": sds((L, batch, seq_len, cfg.n_kv_heads, cfg.hd), dt),
+                "v": sds((L, batch, seq_len, cfg.n_kv_heads, cfg.hd), dt),
+                "xk": sds((L, batch, cfg.enc_seq, cfg.n_kv_heads, cfg.hd), dt),
+                "xv": sds((L, batch, cfg.enc_seq, cfg.n_kv_heads, cfg.hd), dt),
+            }
+        if cfg.family == "vlm":
+            G = vlm.n_groups(cfg)
+            E = cfg.cross_every
+            return {
+                "self": {
+                    "k": sds((G, E, batch, seq_len, cfg.n_kv_heads, cfg.hd), dt),
+                    "v": sds((G, E, batch, seq_len, cfg.n_kv_heads, cfg.hd), dt),
+                },
+                "cross": {
+                    "xk": sds((G, batch, cfg.n_img_tokens, cfg.n_kv_heads, cfg.hd), dt),
+                    "xv": sds((G, batch, cfg.n_img_tokens, cfg.n_kv_heads, cfg.hd), dt),
+                },
+            }
+        raise ValueError(cfg.family)
+
+    def init_cache(self, batch: int, seq_len: int):
+        return jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), self.cache_specs(batch, seq_len)
+        )
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "ssm", "hybrid"):
+        return Model(
+            cfg=cfg,
+            init=lambda key: _cast_params(transformer.init_params(key, cfg), cfg),
+            loss=lambda params, batch, mesh=None: transformer.loss_fn(params, batch, cfg, mesh),
+            prefill=lambda params, batch, mesh=None, cache_len=None: transformer.prefill(
+                params, batch["tokens"], cfg, mesh, cache_len
+            ),
+            decode=lambda params, token, caches, pos, mesh=None: transformer.decode(
+                params, token, caches, pos, cfg, mesh
+            ),
+        )
+    if fam == "encdec":
+        return Model(
+            cfg=cfg,
+            init=lambda key: _cast_params(encdec.init_params(key, cfg), cfg),
+            loss=lambda params, batch, mesh=None: encdec.loss_fn(params, batch, cfg, mesh),
+            prefill=lambda params, batch, mesh=None, cache_len=None: encdec.prefill(
+                params, batch, cfg, mesh, cache_len
+            ),
+            decode=lambda params, token, caches, pos, mesh=None: encdec.decode(
+                params, token, caches, pos, cfg, mesh
+            ),
+        )
+    if fam == "vlm":
+        return Model(
+            cfg=cfg,
+            init=lambda key: _cast_params(vlm.init_params(key, cfg), cfg),
+            loss=lambda params, batch, mesh=None: vlm.loss_fn(params, batch, cfg, mesh),
+            prefill=lambda params, batch, mesh=None, cache_len=None: vlm.prefill(
+                params, batch, cfg, mesh, cache_len
+            ),
+            decode=lambda params, token, caches, pos, mesh=None: vlm.decode(
+                params, token, caches, pos, cfg, mesh
+            ),
+        )
+    raise ValueError(fam)
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))

@@ -1,0 +1,204 @@
+"""Mamba-2 SSD (state-space duality) mixer [arXiv:2405.21060].
+
+Chunked SSD algorithm: within chunks of length Qc the recurrence is
+evaluated in its dual quadratic "attention" form (MXU-friendly), across
+chunks the per-chunk end-states are propagated with a linear scan. A
+single-token O(1) decode step maintains (SSM state, conv ring) — this is
+what makes the `long_500k` cell sub-quadratic.
+
+Layout: x (B, T, D); SSM state (B, H, N, P) with H heads, state dim N,
+head dim P; depthwise conv window W=4 over (x, B, C) channels.
+
+TP note (§Perf iteration A2): the input projection is stored as three
+segment matrices (w_zx -> (z, x heads), w_bc -> (B, C), w_dt) instead of
+one fused in_proj. The z/x segment is *column-parallel* on the
+head-aligned dim and out_proj is *row-parallel* (Megatron pairing): one
+psum per layer instead of two, and no resharding across fused-segment
+boundaries.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, rmsnorm
+
+CONV_W = 4
+
+
+def ssm_dims(cfg):
+    P = cfg.ssm_head_dim or 64
+    H = cfg.ssm_heads or (2 * cfg.d_model) // P
+    d_inner = H * P
+    N = cfg.ssm_state
+    conv_dim = d_inner + 2 * N  # ngroups = 1
+    d_proj = 2 * d_inner + 2 * N + H
+    return d_inner, H, P, N, conv_dim, d_proj
+
+
+def ssm_params(key, cfg, dtype=jnp.float32):
+    d_inner, H, P, N, conv_dim, d_proj = ssm_dims(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        # column-parallel (head-aligned) z/x segment; small B/C + dt
+        # segments replicated (their N-dim contraction must stay local)
+        "w_zx": dense_init(ks[0], (cfg.d_model, 2 * d_inner), cfg.d_model, dtype),
+        "w_bc": dense_init(ks[1], (cfg.d_model, 2 * N), cfg.d_model, dtype),
+        "w_dt": dense_init(ks[5], (cfg.d_model, H), cfg.d_model, dtype),
+        "conv_wx": dense_init(ks[2], (CONV_W, d_inner), CONV_W, dtype),
+        "conv_bx": jnp.zeros((d_inner,), dtype),
+        "conv_wbc": dense_init(ks[6], (CONV_W, 2 * N), CONV_W, dtype),
+        "conv_bbc": jnp.zeros((2 * N,), dtype),
+        "A_log": jnp.log(
+            jax.random.uniform(ks[3], (H,), jnp.float32, 1.0, 16.0)
+        ),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(
+            jnp.expm1(jax.random.uniform(ks[4], (H,), jnp.float32, 1e-3, 0.1))
+        ),
+        "norm_scale": jnp.zeros((d_inner,), dtype),
+        "out_proj": dense_init(ks[4], (d_inner, cfg.d_model), d_inner, dtype),
+    }
+
+
+def _project(x, p, cfg):
+    """x -> (z, x_raw, bc_raw, dt_raw) via the segment matrices."""
+    d_inner, H, P, N, conv_dim, _ = ssm_dims(cfg)
+    zx = jnp.einsum("btd,de->bte", x, p["w_zx"])  # (B,T,2*d_inner)
+    bc = jnp.einsum("btd,de->bte", x, p["w_bc"])  # (B,T,2N)
+    dt = jnp.einsum("btd,de->bte", x, p["w_dt"])  # (B,T,H)
+    return zx[..., :d_inner], zx[..., d_inner:], bc, dt
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv, width CONV_W. xBC: (B, T, C)."""
+    pad = jnp.pad(xBC, ((0, 0), (CONV_W - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xBC.shape[1], :] * w[i][None, None, :] for i in range(CONV_W)
+    )
+    return jax.nn.silu(out + b)
+
+
+def ssm_forward(x, p, cfg, chunk: int = 128, init_state=None):
+    """Full-sequence SSD. Returns (y (B,T,D), final_state (B,H,N,P),
+    conv_tail (B, CONV_W-1, conv_dim))."""
+    B, T0, D = x.shape
+    d_inner, H, P, N, conv_dim, _ = ssm_dims(cfg)
+    Qc = min(chunk, T0)
+    pad = (-T0) % Qc
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    T = T0 + pad
+    nc = T // Qc
+
+    z, x_raw, bc_raw, dt = _project(x, p, cfg)
+    xconv = _causal_conv(x_raw, p["conv_wx"], p["conv_bx"]).astype(x.dtype)
+    bcconv = _causal_conv(bc_raw, p["conv_wbc"], p["conv_bbc"]).astype(x.dtype)
+    xh = xconv.reshape(B, T, H, P)
+    Bm = bcconv[..., :N]  # (B,T,N)
+    Cm = bcconv[..., N:]  # (B,T,N)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,T,H)
+    if pad:
+        # padded steps become identity state updates (decay 1, input 0)
+        valid = (jnp.arange(T) < T0).astype(jnp.float32)
+        dt = dt * valid[None, :, None]
+    A = -jnp.exp(p["A_log"])  # (H,)
+    dA = dt * A  # (B,T,H) negative
+
+    # chunk views
+    dA_c = dA.reshape(B, nc, Qc, H)
+    dt_c = dt.reshape(B, nc, Qc, H)
+    x_c = xh.reshape(B, nc, Qc, H, P)
+    B_c = Bm.reshape(B, nc, Qc, N)
+    C_c = Cm.reshape(B, nc, Qc, N)
+
+    cs = jnp.cumsum(dA_c, axis=2)  # (B,nc,Qc,H) within-chunk log decay
+
+    # intra-chunk (dual quadratic form)
+    CB = jnp.einsum("bcin,bcjn->bcij", C_c, B_c)  # (B,nc,Qc,Qc)
+    i_idx = jax.lax.broadcasted_iota(jnp.int32, (Qc, Qc), 0)
+    j_idx = jax.lax.broadcasted_iota(jnp.int32, (Qc, Qc), 1)
+    causal = (i_idx >= j_idx)[None, None, :, :, None]
+    # mask inside the exponent: cs_i - cs_j > 0 for i < j would overflow
+    delta = jnp.where(causal, cs[:, :, :, None, :] - cs[:, :, None, :, :], -jnp.inf)
+    # exp in fp32 for range, then store the O(T*Qc*H) tensors in the
+    # activation dtype — halves the SSD working set (§Perf A3)
+    decay = jnp.exp(delta).astype(x.dtype)  # (B,nc,i,j,H)
+    att = CB[..., None] * decay * dt_c[:, :, None, :, :].astype(x.dtype)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", att, x_c)
+
+    # per-chunk end states
+    seg = jnp.exp(cs[:, :, -1:, :] - cs) * dt_c  # (B,nc,Qc,H)
+    S_chunk = jnp.einsum("bcjh,bcjn,bcjhp->bchnp", seg.astype(x.dtype), B_c, x_c)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cs[:, :, -1, :])  # (B,nc,H)
+
+    def scan_fn(S_prev, inp):
+        dcy, S_c = inp  # (B,H), (B,H,N,P)
+        S_new = S_prev * dcy[:, :, None, None].astype(S_prev.dtype) + S_c
+        return S_new, S_prev
+
+    S0 = (
+        init_state
+        if init_state is not None
+        else jnp.zeros((B, H, N, P), x.dtype)
+    )
+    S_final, S_prevs = jax.lax.scan(
+        scan_fn,
+        S0,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(S_chunk, 1, 0)),
+    )
+    S_prevs = jnp.moveaxis(S_prevs, 0, 1)  # (B,nc,H,N,P) state entering chunk
+
+    y_inter = jnp.einsum("bcin,bchnp->bcihp", C_c, S_prevs) * jnp.exp(cs)[
+        ..., None
+    ].astype(x.dtype)
+
+    y = (y_intra + y_inter).reshape(B, T, H, P)
+    y = y + p["D_skip"][None, None, :, None].astype(x.dtype) * xh
+    y = y.reshape(B, T, d_inner)
+
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_scale"], cfg.norm_eps)
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"])[:, :T0]
+    xBC_raw = jnp.concatenate([x_raw, bc_raw], axis=-1)  # cache layout
+    if T0 >= CONV_W - 1:
+        conv_tail = xBC_raw[:, T0 - (CONV_W - 1) : T0, :]
+    else:
+        conv_tail = jnp.pad(
+            xBC_raw[:, :T0, :], ((0, 0), (CONV_W - 1 - T0, 0), (0, 0))
+        )
+    return out, S_final, conv_tail
+
+
+def ssm_decode(x1, p, cfg, state, conv_state):
+    """Single-token decode. x1: (B,1,D); state: (B,H,N,P);
+    conv_state: (B, CONV_W-1, conv_dim). Returns (y, state, conv_state)."""
+    B = x1.shape[0]
+    d_inner, H, P, N, conv_dim, _ = ssm_dims(cfg)
+
+    z, x_raw, bc_raw, dt = _project(x1, p, cfg)
+    xBC_raw = jnp.concatenate([x_raw, bc_raw], axis=-1)
+    window = jnp.concatenate([conv_state, xBC_raw], axis=1)  # (B, CONV_W, C)
+    conv_w = jnp.concatenate([p["conv_wx"], p["conv_wbc"]], axis=-1)
+    conv_b = jnp.concatenate([p["conv_bx"], p["conv_bbc"]], axis=-1)
+    xBC = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", window, conv_w) + conv_b
+    )[:, None, :].astype(x1.dtype)
+    new_conv = window[:, 1:, :]
+
+    xh = xBC[..., :d_inner].reshape(B, H, P)
+    Bm = xBC[..., d_inner : d_inner + N].reshape(B, N)
+    Cm = xBC[..., d_inner + N :].reshape(B, N)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    dA = jnp.exp(dt * -jnp.exp(p["A_log"]))  # (B,H)
+
+    upd = jnp.einsum("bh,bn,bhp->bhnp", dt.astype(x1.dtype), Bm, xh)
+    state = state * dA[:, :, None, None].astype(state.dtype) + upd
+    y = jnp.einsum("bn,bhnp->bhp", Cm, state)
+    y = y + p["D_skip"][None, :, None].astype(x1.dtype) * xh
+    y = y.reshape(B, 1, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_scale"], cfg.norm_eps)
+    return jnp.einsum("bte,ed->btd", y, p["out_proj"]), state, new_conv

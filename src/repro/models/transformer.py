@@ -1,0 +1,365 @@
+"""Unified decoder-only transformer covering the dense / MoE / SSM /
+hybrid families, with scan-over-layers (small HLO, fast SPMD compiles)
+and per-layer remat.
+
+Block wiring by family (pre-norm residual):
+
+  dense : x + attn(n1(x));  h + ffn(n2(h))
+  moe   : x + attn(n1(x));  h + moe(n2(h)) [+ dense_ffn(n2(h)) if
+          cfg.dense_residual — Arctic's dense+MoE parallel residual]
+  ssm   : x + ssd(n1(x))                        (Mamba-2: mixer-only stack)
+  hybrid: x + 0.5(na(attn(n1 x)) + ns(ssd(n1 x))); h + ffn(n2 h)  (Hymba)
+
+Hybrid models mix sliding-window and global-attention layers, whose KV
+caches have different shapes — those run as a Python loop over layers;
+uniform families run under ``lax.scan`` with stacked params.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import ffn as ffn_mod
+from . import ssm as ssm_mod
+from .common import (compute_dtype, constrain, cross_entropy, dense_init,
+                     embed_init, grad_cast, rmsnorm)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _zeros(shape):
+    return jnp.zeros(shape, jnp.float32)
+
+
+def init_block(key, cfg, kind=None):
+    """One layer's params. kind defaults to cfg.family."""
+    kind = kind or cfg.family
+    ks = jax.random.split(key, 8)
+    p = {"norm1": _zeros((cfg.d_model,))}
+    if kind in ("dense", "moe", "hybrid"):
+        p["attn"] = attn.attn_params(ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd)
+        p["norm2"] = _zeros((cfg.d_model,))
+    if kind == "dense":
+        p["ffn"] = ffn_mod.dense_ffn_params(ks[1], cfg.d_model, cfg.d_ff, cfg.ffn_kind)
+    if kind == "moe":
+        p["moe"] = ffn_mod.moe_params(ks[2], cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.ffn_kind)
+        if cfg.dense_residual:
+            p["ffn"] = ffn_mod.dense_ffn_params(ks[3], cfg.d_model, cfg.d_ff, cfg.ffn_kind)
+    if kind in ("ssm", "hybrid"):
+        p["ssm"] = ssm_mod.ssm_params(ks[4], cfg)
+    if kind == "hybrid":
+        p["ffn"] = ffn_mod.dense_ffn_params(ks[5], cfg.d_model, cfg.d_ff, cfg.ffn_kind)
+        p["norm_a"] = _zeros((cfg.d_model,))
+        p["norm_s"] = _zeros((cfg.d_model,))
+    return p
+
+
+def init_params(key, cfg):
+    ke, kb, kh = jax.random.split(key, 3)
+    blocks = jax.vmap(lambda k: init_block(k, cfg))(jax.random.split(kb, cfg.n_layers))
+    p = {
+        "embed": embed_init(ke, (cfg.padded_vocab, cfg.d_model)),
+        "blocks": blocks,
+        "final_norm": _zeros((cfg.d_model,)),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(kh, (cfg.d_model, cfg.padded_vocab), cfg.d_model)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _layer_window(cfg, layer_idx):
+    """Sliding window for a layer (0 = full attention)."""
+    if not cfg.sliding_window:
+        return 0
+    if layer_idx in cfg.global_layers:
+        return 0
+    return cfg.sliding_window
+
+
+def block_forward(x, bp, cfg, mesh=None, *, positions, window=0, want_cache=False):
+    """Full-sequence block. Returns (x, cache, aux)."""
+    aux = {}
+    cache = {}
+    fam = cfg.family
+    if fam in ("dense", "moe", "hybrid"):
+        h = rmsnorm(x, bp["norm1"], cfg.norm_eps)
+        a_out, (k, v) = attn.attention(
+            h, bp["attn"], positions, causal=True, window=window,
+            rope_theta=cfg.rope_theta, mesh=mesh,
+        )
+        if want_cache:
+            cache["k"], cache["v"] = k, v
+    if fam == "hybrid":
+        s_out, s_state, conv_tail = ssm_mod.ssm_forward(h, bp["ssm"], cfg, cfg.ssm_chunk)
+        if want_cache:
+            cache["ssm"], cache["conv"] = s_state, conv_tail
+        mixed = 0.5 * (
+            rmsnorm(a_out, bp["norm_a"], cfg.norm_eps)
+            + rmsnorm(s_out, bp["norm_s"], cfg.norm_eps)
+        )
+        x = x + mixed
+    elif fam in ("dense", "moe"):
+        x = x + a_out
+    elif fam == "ssm":
+        h = rmsnorm(x, bp["norm1"], cfg.norm_eps)
+        s_out, s_state, conv_tail = ssm_mod.ssm_forward(h, bp["ssm"], cfg, cfg.ssm_chunk)
+        if want_cache:
+            cache["ssm"], cache["conv"] = s_state, conv_tail
+        return x + s_out, cache, aux
+
+    h2 = rmsnorm(x, bp["norm2"], cfg.norm_eps)
+    if fam == "moe":
+        m_out, aux = ffn_mod.moe_ffn(h2, bp["moe"], cfg, mesh=mesh,
+                                     dp_axes=_dp_axes(mesh))
+        if cfg.dense_residual:
+            m_out = m_out + ffn_mod.dense_ffn(h2, bp["ffn"], cfg.ffn_kind)
+        x = x + m_out
+    else:
+        x = x + ffn_mod.dense_ffn(h2, bp["ffn"], cfg.ffn_kind)
+    return x, cache, aux
+
+
+def _tp_size(mesh):
+    return mesh.shape.get("model", 1) if mesh is not None else 1
+
+
+def _dp_axes(mesh):
+    if mesh is None:
+        return ("data",)
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _uniform_family(cfg):
+    """scan-compatible: identical block pytree shapes across layers."""
+    return not (cfg.sliding_window and cfg.global_layers)
+
+
+def forward(params, tokens, cfg, mesh=None, *, want_cache=False, remat=True):
+    """Token ids (B, T) -> (hidden (B,T,D), caches, aux)."""
+    dt = compute_dtype(cfg)
+    B, T = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    x = constrain(x, ("pod", "data"), None, None, mesh=mesh)
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+
+    aux_acc = {"load_balance": jnp.zeros((), jnp.float32)}
+    if _uniform_family(cfg):
+        window = cfg.sliding_window
+
+        def body(carry, bp):
+            x = grad_cast(carry, cfg.dtype)  # keep cross-layer grads bf16
+            bp = jax.tree.map(lambda a: a.astype(dt) if a.dtype == jnp.float32 and a.ndim > 1 else a, bp)
+            x, cache, aux = block_forward(
+                x, bp, cfg, mesh, positions=positions, window=window,
+                want_cache=want_cache,
+            )
+            if cfg.sp_residual and x.shape[1] % _tp_size(mesh) == 0:
+                # Megatron-SP: the residual stream (and with it the remat
+                # carry stack) lives sequence-sharded over 'model'; GSPMD
+                # turns the surrounding psums into reduce-scatters.
+                x = constrain(x, ("pod", "data"), "model", None, mesh=mesh)
+            lb = aux.get("load_balance", jnp.zeros((), jnp.float32))
+            return x, (cache, lb)
+
+        if remat:
+            body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, (caches, lbs) = jax.lax.scan(body, x, params["blocks"])
+        aux_acc["load_balance"] = jnp.sum(lbs)
+    else:
+        caches = []
+        for li in range(cfg.n_layers):
+            bp = jax.tree.map(lambda a: a[li], params["blocks"])
+            fn = partial(
+                block_forward, cfg=cfg, mesh=mesh, positions=positions,
+                window=_layer_window(cfg, li), want_cache=want_cache,
+            )
+            if remat:
+                fn = jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+            x, cache, aux = fn(x, bp)
+            if cfg.sp_residual and x.shape[1] % _tp_size(mesh) == 0:
+                x = constrain(x, ("pod", "data"), "model", None, mesh=mesh)
+            caches.append(cache)
+            if "load_balance" in aux:
+                aux_acc["load_balance"] += aux["load_balance"]
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x, caches, aux_acc
+
+
+def logits_fn(params, hidden, cfg, mesh=None):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("btd,dv->btv", hidden, w.astype(hidden.dtype))
+    # vocab-sharded logits: keeps the (B,T,V) intermediate at 1/tp per
+    # device through the CE (GSPMD psums the small logsumexp stats).
+    return constrain(logits, ("pod", "data"), None, "model", mesh=mesh)
+
+
+def loss_fn(params, batch, cfg, mesh=None):
+    """Next-token CE. batch: {'tokens': (B,T), 'labels': (B,T)}."""
+    hidden, _, aux = forward(params, batch["tokens"], cfg, mesh)
+    logits = logits_fn(params, hidden, cfg, mesh)
+    loss = cross_entropy(logits, batch["labels"], cfg.vocab_size)
+    if cfg.family == "moe":
+        loss = loss + 0.01 * aux["load_balance"] / cfg.n_layers
+    return loss, {"ce": loss, "hidden": hidden}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def cache_spec(cfg, batch, seq_len):
+    """Abstract cache structure for one layer stack (stacked when uniform)."""
+    dt = compute_dtype(cfg)
+    d_inner, H, P, N, conv_dim, _ = (
+        ssm_mod.ssm_dims(cfg) if cfg.ssm_state else (0, 0, 0, 0, 0, 0)
+    )
+
+    def one_layer(window):
+        c = {}
+        if cfg.family in ("dense", "moe", "hybrid"):
+            size = min(seq_len, window) if window else seq_len
+            c["k"] = jax.ShapeDtypeStruct((batch, size, cfg.n_kv_heads, cfg.hd), dt)
+            c["v"] = jax.ShapeDtypeStruct((batch, size, cfg.n_kv_heads, cfg.hd), dt)
+        if cfg.family in ("ssm", "hybrid"):
+            c["ssm"] = jax.ShapeDtypeStruct((batch, H, N, P), dt)
+            c["conv"] = jax.ShapeDtypeStruct((batch, ssm_mod.CONV_W - 1, conv_dim), dt)
+        return c
+
+    if _uniform_family(cfg):
+        one = one_layer(cfg.sliding_window)
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((cfg.n_layers,) + s.shape, s.dtype), one
+        )
+    return [one_layer(_layer_window(cfg, li)) for li in range(cfg.n_layers)]
+
+
+def init_cache(cfg, batch, seq_len):
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), cache_spec(cfg, batch, seq_len)
+    )
+
+
+def block_decode(x1, bp, cfg, cache, pos, window=0, mesh=None):
+    fam = cfg.family
+    new_cache = dict(cache)
+    if fam in ("dense", "moe", "hybrid"):
+        h = rmsnorm(x1, bp["norm1"], cfg.norm_eps)
+        a_out, kv = attn.decode_attention(
+            h, bp["attn"], {"k": cache["k"], "v": cache["v"]}, pos,
+            window=window, rope_theta=cfg.rope_theta,
+        )
+        new_cache["k"], new_cache["v"] = kv["k"], kv["v"]
+    if fam == "hybrid":
+        s_out, s_state, conv = ssm_mod.ssm_decode(h, bp["ssm"], cfg, cache["ssm"], cache["conv"])
+        new_cache["ssm"], new_cache["conv"] = s_state, conv
+        mixed = 0.5 * (
+            rmsnorm(a_out, bp["norm_a"], cfg.norm_eps)
+            + rmsnorm(s_out, bp["norm_s"], cfg.norm_eps)
+        )
+        x1 = x1 + mixed
+    elif fam in ("dense", "moe"):
+        x1 = x1 + a_out
+    elif fam == "ssm":
+        h = rmsnorm(x1, bp["norm1"], cfg.norm_eps)
+        s_out, s_state, conv = ssm_mod.ssm_decode(h, bp["ssm"], cfg, cache["ssm"], cache["conv"])
+        new_cache["ssm"], new_cache["conv"] = s_state, conv
+        return x1 + s_out, new_cache
+
+    h2 = rmsnorm(x1, bp["norm2"], cfg.norm_eps)
+    if fam == "moe":
+        m_out, _ = ffn_mod.moe_ffn(h2, bp["moe"], cfg, mesh=mesh,
+                                   dp_axes=_dp_axes(mesh))
+        if cfg.dense_residual:
+            m_out = m_out + ffn_mod.dense_ffn(h2, bp["ffn"], cfg.ffn_kind)
+        x1 = x1 + m_out
+    else:
+        x1 = x1 + ffn_mod.dense_ffn(h2, bp["ffn"], cfg.ffn_kind)
+    return x1, new_cache
+
+
+def decode(params, token, caches, pos, cfg, mesh=None):
+    """One decode step. token: (B,) int32; caches from init_cache/prefill.
+    Returns (logits (B, V), hidden (B, D), new caches)."""
+    dt = compute_dtype(cfg)
+    x = jnp.take(params["embed"], token[:, None], axis=0).astype(dt)
+
+    if _uniform_family(cfg):
+        def body(x, inp):
+            bp, cache = inp
+            bp = jax.tree.map(lambda a: a.astype(dt) if a.dtype == jnp.float32 and a.ndim > 1 else a, bp)
+            x, nc = block_decode(x, bp, cfg, cache, pos,
+                                 window=cfg.sliding_window, mesh=mesh)
+            return x, nc
+
+        x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
+    else:
+        new_caches = []
+        for li in range(cfg.n_layers):
+            bp = jax.tree.map(lambda a: a[li], params["blocks"])
+            x, nc = block_decode(x, bp, cfg, caches[li], pos,
+                                 window=_layer_window(cfg, li), mesh=mesh)
+            new_caches.append(nc)
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_fn(params, x, cfg, mesh)
+    return logits[:, 0], x[:, 0], new_caches
+
+
+def prefill(params, tokens, cfg, mesh=None, cache_len=None):
+    """Prefill: forward with cache capture, padded to cache_len slots.
+    Returns (logits last position (B, V), hidden (B,T,D), caches)."""
+    hidden, caches, _ = forward(params, tokens, cfg, mesh, want_cache=True)
+    B, T = tokens.shape
+    cache_len = cache_len or T
+
+    def expand(c, window):
+        out = dict(c)
+        if "k" in c:
+            size = min(cache_len, window) if window else cache_len
+            pad = size - T
+            if pad > 0:
+                out["k"] = jnp.pad(c["k"], ((0, 0), (0, pad), (0, 0), (0, 0)))
+                out["v"] = jnp.pad(c["v"], ((0, 0), (0, pad), (0, 0), (0, 0)))
+            elif pad < 0:
+                # keep the last `size` positions; ring invariant: position
+                # p lives at slot p % size
+                out["k"] = jnp.roll(c["k"][:, -size:], T % size, axis=1)
+                out["v"] = jnp.roll(c["v"][:, -size:], T % size, axis=1)
+        return out
+
+    if _uniform_family(cfg):
+        caches = expand_stacked(caches, cfg, T, cache_len)
+    else:
+        caches = [expand(c, _layer_window(cfg, li)) for li, c in enumerate(caches)]
+    logits = logits_fn(params, hidden[:, -1:], cfg, mesh)
+    return logits[:, 0], hidden, caches
+
+
+def expand_stacked(caches, cfg, T, cache_len):
+    out = dict(caches)
+    if "k" in caches:
+        window = cfg.sliding_window
+        size = min(cache_len, window) if window else cache_len
+        pad = size - T
+        if pad > 0:
+            out["k"] = jnp.pad(caches["k"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            out["v"] = jnp.pad(caches["v"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        elif pad < 0:
+            out["k"] = caches["k"][:, :, pad:]
+            out["v"] = caches["v"][:, :, pad:]
+    return out

@@ -1,0 +1,194 @@
+"""Vision-language decoder (Llama-3.2-Vision-11B backbone).
+
+Per the assignment, the vision encoder is a STUB: the model consumes
+precomputed patch embeddings (B, n_img_tokens, d_vision), projects them
+to d_model, and cross-attends to them from gated cross-attention layers
+inserted after every ``cross_every``-th self-attention layer (Llama-3.2:
+8 cross layers among 40 total).
+
+Structure: n_groups = n_layers // cross_every groups, each =
+(cross_every - 1) self layers + 1 [self + gated-cross] layer, consumed
+with a nested scan (stacked self blocks reshaped (G, cross_every, ...)).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import ffn as ffn_mod
+from .common import compute_dtype, cross_entropy, dense_init, embed_init, rmsnorm
+from .transformer import init_block, logits_fn
+
+
+def _zeros(shape):
+    return jnp.zeros(shape, jnp.float32)
+
+
+def n_groups(cfg):
+    assert cfg.n_layers % cfg.cross_every == 0, (cfg.n_layers, cfg.cross_every)
+    return cfg.n_layers // cfg.cross_every
+
+
+def _cross_block_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": _zeros((cfg.d_model,)),
+        "xattn": attn.attn_params(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd),
+        "norm2": _zeros((cfg.d_model,)),
+        "ffn": ffn_mod.dense_ffn_params(k2, cfg.d_model, cfg.d_ff, cfg.ffn_kind),
+        "gate_attn": _zeros(()),
+        "gate_ffn": _zeros(()),
+    }
+
+
+def init_params(key, cfg):
+    ke, kb, kc, kp, kh = jax.random.split(key, 5)
+    dense_cfg = cfg.scaled(family="dense")
+    G = n_groups(cfg)
+    return {
+        "embed": embed_init(ke, (cfg.padded_vocab, cfg.d_model)),
+        "blocks": jax.vmap(lambda k: init_block(k, dense_cfg, kind="dense"))(
+            jax.random.split(kb, cfg.n_layers)
+        ),
+        "cross_blocks": jax.vmap(lambda k: _cross_block_init(k, cfg))(
+            jax.random.split(kc, G)
+        ),
+        "img_proj": dense_init(kp, (cfg.d_vision, cfg.d_model), cfg.d_vision),
+        "final_norm": _zeros((cfg.d_model,)),
+        "lm_head": dense_init(kh, (cfg.d_model, cfg.padded_vocab), cfg.d_model),
+    }
+
+
+def _cast(bp, dt):
+    return jax.tree.map(
+        lambda a: a.astype(dt) if a.dtype == jnp.float32 and a.ndim > 1 else a, bp
+    )
+
+
+def _grouped(blocks, cfg):
+    G = n_groups(cfg)
+    return jax.tree.map(
+        lambda a: a.reshape((G, cfg.cross_every) + a.shape[1:]), blocks
+    )
+
+
+def _self_block(x, bp, cfg, positions, mesh=None):
+    h = rmsnorm(x, bp["norm1"], cfg.norm_eps)
+    a, kv = attn.attention(h, bp["attn"], positions, causal=True,
+                           rope_theta=cfg.rope_theta, mesh=mesh)
+    x = x + a
+    h2 = rmsnorm(x, bp["norm2"], cfg.norm_eps)
+    return x + ffn_mod.dense_ffn(h2, bp["ffn"], cfg.ffn_kind), kv
+
+
+def _cross_block(x, cp, cfg, img_e, mesh=None):
+    h = rmsnorm(x, cp["norm1"], cfg.norm_eps)
+    c, xkv = attn.cross_attention(h, cp["xattn"], img_e, mesh=mesh)
+    x = x + jnp.tanh(cp["gate_attn"]).astype(x.dtype) * c
+    h2 = rmsnorm(x, cp["norm2"], cfg.norm_eps)
+    f = ffn_mod.dense_ffn(h2, cp["ffn"], cfg.ffn_kind)
+    return x + jnp.tanh(cp["gate_ffn"]).astype(x.dtype) * f, xkv
+
+
+def forward(params, tokens, images, cfg, mesh=None, want_cache=False):
+    """tokens (B,T), images (B, n_img, d_vision) -> hidden, caches."""
+    dt = compute_dtype(cfg)
+    B, T = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    img_e = jnp.einsum("bnv,vd->bnd", images.astype(dt), params["img_proj"].astype(dt))
+
+    def group_body(x, inp):
+        selfs, cross = inp
+
+        def inner(x, bp):
+            bp = _cast(bp, dt)
+            x, kv = _self_block(x, bp, cfg, positions, mesh)
+            return x, ({"k": kv[0], "v": kv[1]} if want_cache else {})
+
+        x, self_caches = jax.lax.scan(inner, x, selfs)
+        cross = _cast(cross, dt)
+        x, xkv = _cross_block(x, cross, cfg, img_e, mesh)
+        xc = {"xk": xkv[0], "xv": xkv[1]} if want_cache else {}
+        return x, (self_caches, xc)
+
+    group_body = jax.checkpoint(
+        group_body, policy=jax.checkpoint_policies.nothing_saveable
+    )
+    x, (self_caches, cross_caches) = jax.lax.scan(
+        group_body, x, (_grouped(params["blocks"], cfg), params["cross_blocks"])
+    )
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x, (self_caches, cross_caches)
+
+
+def loss_fn(params, batch, cfg, mesh=None):
+    hidden, _ = forward(params, batch["tokens"], batch["images"], cfg, mesh)
+    logits = logits_fn(params, hidden, cfg, mesh)
+    loss = cross_entropy(logits, batch["labels"], cfg.vocab_size)
+    return loss, {"ce": loss, "hidden": hidden}
+
+
+def prefill(params, batch, cfg, mesh=None, cache_len=None):
+    tokens = batch["tokens"]
+    hidden, (self_caches, cross_caches) = forward(
+        params, tokens, batch["images"], cfg, mesh, want_cache=True
+    )
+    B, T = tokens.shape
+    cache_len = cache_len or T
+    pad = cache_len - T
+    if pad > 0:
+        self_caches = {
+            "k": jnp.pad(self_caches["k"], ((0, 0),) * 3 + ((0, pad), (0, 0), (0, 0))),
+            "v": jnp.pad(self_caches["v"], ((0, 0),) * 3 + ((0, pad), (0, 0), (0, 0))),
+        }
+    logits = logits_fn(params, hidden[:, -1:], cfg, mesh)
+    return logits[:, 0], hidden, {"self": self_caches, "cross": cross_caches}
+
+
+def decode(params, token, caches, pos, cfg, mesh=None):
+    """caches = {'self': {'k','v': (G, cross_every, B, S, KV, hd)},
+    'cross': {'xk','xv': (G, B, n_img, KV, hd)}}."""
+    dt = compute_dtype(cfg)
+    x = jnp.take(params["embed"], token[:, None], axis=0).astype(dt)
+
+    def group_body(x, inp):
+        selfs, cross, scache, xcache = inp
+
+        def inner(x, inp2):
+            bp, cache = inp2
+            bp = _cast(bp, dt)
+            h = rmsnorm(x, bp["norm1"], cfg.norm_eps)
+            a, kv = attn.decode_attention(
+                h, bp["attn"], {"k": cache["k"], "v": cache["v"]}, pos,
+                rope_theta=cfg.rope_theta,
+            )
+            x = x + a
+            h2 = rmsnorm(x, bp["norm2"], cfg.norm_eps)
+            return x + ffn_mod.dense_ffn(h2, bp["ffn"], cfg.ffn_kind), kv
+
+        x, new_scache = jax.lax.scan(inner, x, (selfs, scache))
+        cross = _cast(cross, dt)
+        h = rmsnorm(x, cross["norm1"], cfg.norm_eps)
+        c = attn.decode_cross_attention(h, cross["xattn"], {"k": xcache["xk"], "v": xcache["xv"]})
+        x = x + jnp.tanh(cross["gate_attn"]).astype(x.dtype) * c
+        h2 = rmsnorm(x, cross["norm2"], cfg.norm_eps)
+        f = ffn_mod.dense_ffn(h2, cross["ffn"], cfg.ffn_kind)
+        x = x + jnp.tanh(cross["gate_ffn"]).astype(x.dtype) * f
+        return x, new_scache
+
+    x, new_self = jax.lax.scan(
+        group_body,
+        x,
+        (
+            _grouped(params["blocks"], cfg),
+            params["cross_blocks"],
+            caches["self"],
+            caches["cross"],
+        ),
+    )
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_fn(params, x, cfg, mesh)
+    return logits[:, 0], x[:, 0], {"self": new_self, "cross": caches["cross"]}

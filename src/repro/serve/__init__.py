@@ -1,0 +1,3 @@
+"""Serving substrate: continuous-batching engine + kNN-LM retrieval."""
+from .engine import Request, ServeEngine
+from .retrieval import Datastore, RetrievalLM, build_datastore, knn_probs

@@ -1,0 +1,147 @@
+"""Continuous-batching serving engine.
+
+Fixed pool of B decode slots over a shared stacked KV cache; requests
+are admitted by prefilling (B=1) and splicing the resulting cache into a
+free slot; every engine step decodes all live slots with per-slot
+positions; finished sequences (EOS / max_new_tokens) retire and free
+their slot. Supports the uniform-cache families (dense / moe / ssm) —
+hybrid/encdec/vlm cache splicing differs per layout and is served via
+the batch path instead.
+
+Sampling: greedy or temperature top-k, per-slot PRNG streams.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ServeEngine", "Request"]
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (T,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0  # 0 = greedy
+    top_k: int = 40
+    # filled by the engine:
+    output: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model, params, *, slots: int = 4, cache_len: int = 256,
+                 eos_id: int = -1, retrieval=None, seed: int = 0):
+        assert model.cfg.family in ("dense", "moe", "ssm"), (
+            "engine supports uniform-cache families; use the batch path "
+            "for hybrid/encdec/vlm"
+        )
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.cache_len = cache_len
+        self.eos_id = eos_id
+        self.retrieval = retrieval
+        self.caches = model.init_cache(slots, cache_len)
+        self.pos = np.zeros((slots,), np.int32)
+        self.live: list[Request | None] = [None] * slots
+        self.tokens = np.zeros((slots,), np.int32)
+        self.rng = jax.random.key(seed)
+        self.queue: list[Request] = []
+
+        self._decode = jax.jit(
+            lambda p, tok, caches, pos: (
+                self.retrieval.decode(p, tok, caches, pos)
+                if self.retrieval is not None
+                else model.decode(p, tok, caches, pos)
+            )
+        )
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, cache_len=cache_len)
+        )
+
+    # ------------------------------------------------------------------ admin
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _free_slot(self):
+        for i, r in enumerate(self.live):
+            if r is None:
+                return i
+        return None
+
+    def _admit(self):
+        while self.queue:
+            slot = self._free_slot()
+            if slot is None:
+                return
+            req = self.queue.pop(0)
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            logits, _, cache1 = self._prefill(self.params, {"tokens": prompt})
+            tok = self._sample(logits, req)
+            # splice the (*, 1, S, ...) cache into slot `slot` (batch axis 1)
+            self.caches = jax.tree.map(
+                lambda full, one: jax.lax.dynamic_update_slice_in_dim(
+                    full, one.astype(full.dtype), slot, axis=1
+                ),
+                self.caches,
+                cache1,
+            )
+            self.pos[slot] = len(req.prompt)
+            self.tokens[slot] = int(tok)
+            req.output.append(int(tok))
+            self.live[slot] = req
+
+    def _sample(self, logits, req: Request):
+        logits = jnp.asarray(logits)[0]
+        if req.temperature <= 0.0:
+            return jnp.argmax(logits)
+        self.rng, sub = jax.random.split(self.rng)
+        vals, idx = jax.lax.top_k(logits / req.temperature, req.top_k)
+        choice = jax.random.categorical(sub, vals)
+        return idx[choice]
+
+    # ------------------------------------------------------------------- step
+    def step(self):
+        """One engine iteration: admit -> decode all live slots -> retire."""
+        self._admit()
+        if not any(r is not None for r in self.live):
+            return False
+        tok = jnp.asarray(self.tokens)
+        pos = jnp.asarray(self.pos)
+        logits, hidden, self.caches = self._decode(self.params, tok, self.caches, pos)
+        logits = np.asarray(logits, np.float32)
+        for i, req in enumerate(self.live):
+            if req is None:
+                continue
+            self.pos[i] += 1
+            if req.temperature <= 0.0:
+                nxt = int(np.argmax(logits[i]))
+            else:
+                self.rng, sub = jax.random.split(self.rng)
+                vals, idx = jax.lax.top_k(
+                    jnp.asarray(logits[i]) / req.temperature, req.top_k
+                )
+                nxt = int(idx[jax.random.categorical(sub, vals)])
+            req.output.append(nxt)
+            self.tokens[i] = nxt
+            if (
+                nxt == self.eos_id
+                or len(req.output) >= req.max_new_tokens
+                or self.pos[i] >= self.cache_len - 1
+            ):
+                req.done = True
+                self.live[i] = None
+        return True
+
+    def run(self, max_steps: int = 10_000):
+        steps = 0
+        while (self.queue or any(r is not None for r in self.live)) and steps < max_steps:
+            self.step()
+            steps += 1
+        return steps

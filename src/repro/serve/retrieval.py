@@ -1,0 +1,112 @@
+"""kNN-LM retrieval head backed by DB-LSH — the integration that makes
+the paper's index a first-class feature of the serving stack.
+
+Datastore: (key = LM hidden state at position t, value = token t+1)
+pairs collected by a teacher-forced pass over a corpus (Khandelwal et
+al., ICLR 2020). At decode time the current hidden state queries the
+DB-LSH index ((c,k)-ANN, fixed-schedule batched path); retrieved
+neighbors vote with softmax(-dist^2 / T) mass on their value tokens and
+the result is interpolated with the LM distribution:
+
+    p(y) = (1 - lam) * p_LM(y) + lam * p_kNN(y)
+
+Distributed: the datastore shards over the mesh data axis via
+``repro.core.distributed`` (each device indexes n/P keys; global top-k
+merge), so the datastore scales with the fleet, not the chip.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..core import DBLSHParams, build, search_batch_fixed
+
+__all__ = ["Datastore", "build_datastore", "knn_probs", "RetrievalLM"]
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["index", "values"],
+    meta_fields=["temperature", "lam", "k"],
+)
+@dataclasses.dataclass
+class Datastore:
+    index: object  # DBLSHIndex over hidden-state keys
+    values: jax.Array  # (N,) int32 next-token ids
+    temperature: float
+    lam: float
+    k: int
+
+
+def build_datastore(
+    model,
+    params,
+    batches,
+    key,
+    *,
+    c: float = 1.5,
+    t: int = 64,
+    k: int = 16,
+    temperature: float = 10.0,
+    lam: float = 0.25,
+    block_size: int = 64,
+) -> Datastore:
+    """Teacher-forced pass over ``batches`` collecting (hidden, next_token)."""
+    keys_l, vals_l = [], []
+    loss_j = jax.jit(lambda p, b: model.loss(p, b)[1]["hidden"])
+    for batch in batches:
+        hidden = loss_j(params, batch)  # (B,T,D)
+        keys_l.append(hidden.reshape(-1, hidden.shape[-1]).astype(jnp.float32))
+        vals_l.append(batch["labels"].reshape(-1).astype(jnp.int32))
+    keys = jnp.concatenate(keys_l)
+    vals = jnp.concatenate(vals_l)
+    params_lsh = DBLSHParams.derive(
+        n=keys.shape[0], d=keys.shape[1], c=c, t=t, k=k, block_size=block_size
+    )
+    index = build(key, keys, params_lsh)
+    return Datastore(index, vals, temperature, lam, k)
+
+
+@partial(jax.jit, static_argnames=("vocab", "steps"))
+def knn_probs(ds: Datastore, queries: jax.Array, vocab: int, r0: float = 1.0,
+              steps: int = 6):
+    """(B, D) hidden states -> (B, vocab) retrieval distribution."""
+    dists, ids = search_batch_fixed(ds.index, queries, k=ds.k, r0=r0, steps=steps)
+    w = jax.nn.softmax(
+        jnp.where(jnp.isfinite(dists), -jnp.square(dists) / ds.temperature, -jnp.inf),
+        axis=-1,
+    )
+    w = jnp.where(jnp.isfinite(dists), w, 0.0)
+    toks = jnp.take(ds.values, jnp.minimum(ids, ds.values.shape[0] - 1), axis=0)
+    probs = jax.vmap(
+        lambda tw, tt: jnp.zeros((vocab,)).at[tt].add(tw, mode="drop")
+    )(w, toks)
+    return probs
+
+
+def interpolate(lm_logits, knn_p, lam):
+    lm_p = jax.nn.softmax(lm_logits.astype(jnp.float32), axis=-1)
+    return (1.0 - lam) * lm_p + lam * knn_p
+
+
+@dataclasses.dataclass
+class RetrievalLM:
+    """Serving wrapper: model decode + kNN-LM interpolation."""
+
+    model: object
+    datastore: Datastore
+    r0: float = 1.0
+    steps: int = 6
+
+    def decode(self, params, token, caches, pos):
+        logits, hidden, caches = self.model.decode(params, token, caches, pos)
+        vocab = logits.shape[-1]
+        knn_p = knn_probs(
+            self.datastore, hidden.astype(jnp.float32), vocab, self.r0, self.steps
+        )
+        probs = interpolate(logits, knn_p, self.datastore.lam)
+        return jnp.log(probs + 1e-20), hidden, caches

@@ -1,0 +1,116 @@
+"""GPipe pipeline parallelism over the 'pod' axis.
+
+The layer stack is split into `n_stages = mesh.shape['pod']` contiguous
+stages (stacked block params sharded P('pod') on the layer dim). The
+global batch is cut into M microbatches that flow through the stages;
+activations move stage-to-stage with a single `ppermute` per tick
+(M + S - 1 ticks per step; bubble fraction (S-1)/(M+S-1)).
+
+Embedding runs on stage 0, final-norm + LM head + CE on stage S-1;
+the loss is broadcast back with a psum. jax.grad differentiates through
+shard_map/ppermute (its transpose is the reverse permute), so this
+composes with the standard train step — PP×TP×DP = ('pod','model','data').
+
+Supports the uniform scanned families (dense/moe/ssm); layer count must
+divide the stage count.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..models import transformer
+from ..models.common import compute_dtype, cross_entropy, rmsnorm
+
+__all__ = ["pp_loss_fn", "pp_param_specs"]
+
+
+def pp_param_specs(params_shapes, base_specs):
+    """Add P('pod') on the leading (layer) dim of every blocks/* leaf."""
+
+    def one(path, leaf_spec, leaf_shape):
+        keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+        if keys and keys[0] == "blocks":
+            return P(*(("pod",) + tuple(leaf_spec)[1:]))
+        return leaf_spec
+
+    return jax.tree_util.tree_map_with_path(
+        lambda p, s, sh: one(p, s, sh), base_specs, params_shapes
+    )
+
+
+def pp_loss_fn(params, batch, cfg, mesh, microbatches: int = 8):
+    """Pipeline-parallel CE loss (replaces model.loss under PP)."""
+    n_stages = mesh.shape["pod"]
+    assert cfg.n_layers % n_stages == 0, (cfg.n_layers, n_stages)
+    dt = compute_dtype(cfg)
+    M = microbatches
+
+    def stage_fn(blocks_local, other, tokens, labels):
+        stage = jax.lax.axis_index("pod")
+        B, T = tokens.shape
+        assert B % M == 0, (B, M)
+        mb_tok = tokens.reshape(M, B // M, T)
+        mb_lab = labels.reshape(M, B // M, T)
+        positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B // M, T))
+
+        def run_stage(x):
+            def body(x, bp):
+                bp = jax.tree.map(
+                    lambda a: a.astype(dt) if a.dtype == jnp.float32 and a.ndim > 1 else a,
+                    bp,
+                )
+                x, _, _ = transformer.block_forward(
+                    x, bp, cfg, mesh, positions=positions,
+                    window=cfg.sliding_window,
+                )
+                return x, None
+
+            body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+            x, _ = jax.lax.scan(body, x, blocks_local)
+            return x
+
+        def tick(carry, t):
+            buf, loss_acc = carry
+            mb_idx = t - stage
+            active = (mb_idx >= 0) & (mb_idx < M)
+            safe = jnp.clip(mb_idx, 0, M - 1)
+            tok = jax.lax.dynamic_index_in_dim(mb_tok, safe, 0, keepdims=False)
+            lab = jax.lax.dynamic_index_in_dim(mb_lab, safe, 0, keepdims=False)
+            x0 = jnp.take(other["embed"], tok, axis=0).astype(dt)
+            x_in = jnp.where(stage == 0, x0, buf)
+            y = run_stage(x_in)
+            # last stage: head + CE for its active microbatch
+            h = rmsnorm(y, other["final_norm"], cfg.norm_eps)
+            w = other["embed"].T if cfg.tie_embeddings else other["lm_head"]
+            logits = jnp.einsum("btd,dv->btv", h, w.astype(h.dtype))
+            ce = cross_entropy(logits, lab, cfg.vocab_size)
+            is_last = stage == n_stages - 1
+            loss_acc = loss_acc + jnp.where(active & is_last, ce, 0.0)
+            # rotate activations: stage s -> s+1
+            perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+            buf_next = jax.lax.ppermute(y, "pod", perm)
+            return (buf_next, loss_acc), None
+
+        buf0 = jnp.zeros((B // M, T, cfg.d_model), dt)
+        (buf, loss_acc), _ = jax.lax.scan(
+            tick, (buf0, jnp.zeros((), jnp.float32)), jnp.arange(M + n_stages - 1)
+        )
+        # everyone returns the last stage's mean loss
+        return jax.lax.psum(loss_acc, "pod") / M
+
+    other = {k: v for k, v in params.items() if k != "blocks"}
+    blocks_spec = jax.tree.map(lambda _: P("pod"), params["blocks"])
+    other_spec = jax.tree.map(lambda _: P(), other)
+    return jax.shard_map(
+        stage_fn,
+        mesh=mesh,
+        in_specs=(blocks_spec, other_spec, P(), P()),
+        out_specs=P(),
+        check_vma=False,
+        axis_names={"pod"},
+    )(params["blocks"], other, batch["tokens"], batch["labels"])

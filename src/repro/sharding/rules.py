@@ -1,0 +1,241 @@
+"""Per-architecture PartitionSpec rules (DP / TP / EP / SP).
+
+Conventions (mesh axes: optional 'pod', 'data', 'model'):
+
+  * batch dims shard over ('pod', 'data') — DP everywhere;
+  * attention heads / FFN features / experts shard over 'model' — TP/EP;
+    GQA KV projections are replicated when n_kv < model-axis size;
+  * embeddings / LM head shard the vocab over 'model';
+  * SSM in/out projections shard their *contraction* dim over 'model'
+    (row-parallel; SPMD inserts the psum);
+  * decode KV caches shard batch over 'data' and KV heads over 'model'
+    when divisible, else the *sequence* dim over 'model' (sequence
+    parallelism — exact, GSPMD partitions the masked softmax);
+  * optimizer state mirrors the parameter specs (Adafactor row/col
+    factors drop the corresponding trailing dims).
+
+Matching is by parameter tree path, applied to a shape tree from
+jax.eval_shape — no allocation.
+"""
+
+from __future__ import annotations
+
+import re
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = ["param_specs", "state_specs", "batch_specs", "cache_specs",
+           "named", "dp_axes"]
+
+
+def dp_axes(mesh):
+    axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _tp(mesh):
+    return mesh.shape.get("model", 1)
+
+
+# (path regex, fn(shape, tp) -> PartitionSpec). First match wins. Paths
+# look like "blocks/attn/wq", "dec_blocks/ffn/w_up", "cross_blocks/...".
+def _rules(tp):
+    def heads_ok(n):
+        return n % tp == 0
+
+    return [
+        # embeddings / head: vocab over model
+        (r"^embed$", lambda s: P("model", None)),
+        (r"^lm_head$", lambda s: P(None, "model")),
+        (r"^img_proj$", lambda s: P(None, None)),
+        # attention (leading dims: layer stacks) — q/o shard heads
+        (r"(attn|xattn)/wq$", lambda s: P(*(None,) * (len(s) - 3), None, "model", None)),
+        (r"(attn|xattn)/w[kv]$", lambda s: (
+            P(*(None,) * (len(s) - 3), None, "model", None)
+            if heads_ok(s[-2]) else P(*(None,) * len(s))
+        )),
+        (r"(attn|xattn)/wo$", lambda s: P(*(None,) * (len(s) - 3), "model", None, None)),
+        # dense FFN
+        (r"ffn/w_(up|gate)$", lambda s: P(*(None,) * (len(s) - 2), None, "model")),
+        (r"ffn/w_down$", lambda s: P(*(None,) * (len(s) - 2), "model", None)),
+        # MoE: experts over model (EP); router replicated
+        (r"moe/router$", lambda s: P(*(None,) * len(s))),
+        (r"moe/w_(up|gate|down)$", lambda s: P(*(None,) * (len(s) - 3), "model", None, None)),
+        # SSM (§Perf A2): Megatron pairing — z/x segment column-parallel
+        # on the head-aligned dim, out_proj row-parallel (one psum/layer);
+        # depthwise conv weights follow the activation sharding.
+        (r"ssm/w_zx$", lambda s: P(*(None,) * (len(s) - 2), None, "model")),
+        (r"ssm/(conv_wx|conv_bx)$", lambda s: P(*(None,) * (len(s) - 1), "model")),
+        (r"ssm/out_proj$", lambda s: P(*(None,) * (len(s) - 2), "model", None)),
+        (r"ssm/", lambda s: P(*(None,) * len(s))),
+        # norms, gates, scalars: replicated
+        (r".*", lambda s: P(*(None,) * len(s))),
+    ]
+
+
+def _path_str(path):
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_specs(params_shapes, mesh, fsdp: bool = True, fsdp_min_size: int = 1 << 20):
+    """params shape-tree -> PartitionSpec tree.
+
+    fsdp=True additionally shards every large tensor's biggest
+    still-unsharded dim over the data axes (ZeRO-3 style: parameters and
+    optimizer state are fully sharded; GSPMD inserts the per-layer
+    all-gather at use and reduce-scatters the gradients)."""
+    rules = _rules(_tp(mesh))
+    dpa = dp_axes(mesh)
+    dp_size = 1
+    for a in (dpa if isinstance(dpa, tuple) else (dpa,)):
+        dp_size *= mesh.shape.get(a, 1)
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        for pat, fn in rules:
+            if re.search(pat, ps):
+                spec = fn(leaf.shape)
+                # guard: never shard a dim not divisible by the axis size
+                fixed = []
+                for dim, ax in zip(leaf.shape, spec):
+                    if ax is not None and dim % mesh.shape.get(ax, 1) != 0:
+                        fixed.append(None)
+                    else:
+                        fixed.append(ax)
+                if fsdp and leaf.size >= fsdp_min_size and dp_size > 1:
+                    # biggest unsharded, divisible dim -> data axes
+                    cands = [
+                        (dim, i) for i, (dim, ax) in enumerate(zip(leaf.shape, fixed))
+                        if ax is None and dim % dp_size == 0
+                    ]
+                    if cands:
+                        _, i = max(cands)
+                        fixed[i] = dpa
+                return P(*fixed)
+        raise AssertionError(ps)
+
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+def state_specs(state_shapes, pspecs, mesh):
+    """Train-state shape tree -> specs. Optimizer moments mirror params;
+    Adafactor factored stats drop the corresponding dims."""
+    flat_p = dict(
+        (_path_str(kp), s)
+        for kp, s in jax.tree_util.tree_flatten_with_path(pspecs)[0]
+    )
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        if ps.startswith("params/"):
+            return flat_p[ps[len("params/"):]]
+        if ps.startswith("err/"):
+            return flat_p[ps[len("err/"):]]
+        m = re.match(r"^opt/(m|v)/(.*)$", ps)
+        if m:
+            return flat_p[m.group(2)]
+        m = re.match(r"^opt/v/(.*)/(vr|vc|v)$", ps)
+        if m:
+            base = flat_p[m.group(1)]
+            if m.group(2) == "vr":
+                return P(*base[:-1])
+            if m.group(2) == "vc":
+                return P(*(base[:-2] + (base[-1],)))
+            return base
+        return P()  # step counters etc.
+
+    def one_checked(path, leaf):
+        ps = _path_str(path)
+        m = re.match(r"^opt/v/(.*)/(vr|vc|v)$", ps)
+        if m and m.group(1) in flat_p:
+            base = flat_p[m.group(1)]
+            if m.group(2) == "vr":
+                return P(*base[:-1])
+            if m.group(2) == "vc":
+                return P(*(base[:-2] + (base[-1],)))
+            return base
+        return one(path, leaf)
+
+    return jax.tree_util.tree_map_with_path(one_checked, state_shapes)
+
+
+def _axes_size(mesh, ax):
+    sz = 1
+    if ax is not None:
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            sz *= mesh.shape.get(a, 1)
+    return sz
+
+
+def _guard_spec(shape, spec, mesh):
+    """Drop axes whose size does not divide the dim (e.g. batch=1)."""
+    fixed = []
+    for dim, ax in zip(shape, spec):
+        fixed.append(None if (ax is not None and dim % _axes_size(mesh, ax) != 0) else ax)
+    return P(*fixed)
+
+
+def batch_specs(batch_shapes, mesh):
+    dp = dp_axes(mesh)
+    return jax.tree.map(
+        lambda s: _guard_spec(s.shape, (dp,) + (None,) * (len(s.shape) - 1), mesh),
+        batch_shapes,
+    )
+
+
+def cache_specs(cache_shapes, mesh, batch_axis=1):
+    """Decode caches: batch over data axes; KV heads over 'model' when
+    divisible, else sequence over 'model' (SP). Cache leaves are either
+    stacked (L, B, S, KV, hd) / (L, B, H, N, P) / (G, E, B, S, KV, hd)
+    or per-layer (B, S, KV, hd)."""
+    tp = _tp(mesh)
+    dp = dp_axes(mesh)
+
+    def one(path, leaf):
+        shape = leaf.shape
+        ps = _path_str(path)
+        # find batch dim: first dim whose index matches the layout
+        if ps.endswith("ssm"):  # (..., B, H, N, P)
+            nb = len(shape) - 4
+            spec = [None] * len(shape)
+            spec[nb] = dp
+            if shape[nb + 1] % tp == 0:
+                spec[nb + 1] = "model"
+            return P(*spec)
+        if ps.endswith("conv"):  # (..., B, W, C)
+            nb = len(shape) - 3
+            spec = [None] * len(shape)
+            spec[nb] = dp
+            if shape[-1] % tp == 0:
+                spec[-1] = "model"
+            return P(*spec)
+        # attention caches (..., B, S, KV, hd)
+        nb = len(shape) - 4
+        spec = [None] * len(shape)
+        spec[nb] = dp
+        if shape[nb + 2] % tp == 0:
+            spec[nb + 2] = "model"  # KV heads
+        elif shape[nb + 1] % tp == 0:
+            spec[nb + 1] = "model"  # sequence parallelism
+        return P(*spec)
+
+    def guard(path, leaf):
+        return _guard_spec(leaf.shape, one(path, leaf), mesh)
+
+    return jax.tree_util.tree_map_with_path(guard, cache_shapes)
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

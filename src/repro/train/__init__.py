@@ -1,0 +1,3 @@
+"""Training substrate: optimizers, train step, gradient compression, loop."""
+from .optimizer import adafactor, adamw, cosine_schedule, make_optimizer, wsd_schedule
+from .train_step import init_train_state, make_train_step

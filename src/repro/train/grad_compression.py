@@ -1,0 +1,76 @@
+"""Error-feedback int8 gradient compression for the cross-pod all-reduce.
+
+Cross-pod ICI/DCN links are the scarcest bandwidth in a multi-pod mesh.
+Per-pod gradients are block-quantized to int8 with an fp32 per-block
+scale (8.125 bits/element vs 16 for bf16 -> ~2x wire reduction), the
+codes+scales are exchanged with an ``all_gather`` over the pod axis, and
+each pod dequantizes and sums locally. The quantization residual is fed
+back into the next step's gradient (error feedback keeps convergence
+unbiased — Karimireddy et al., ICML 2019).
+
+Used by ``train_step.make_train_step(compress_pods=True)``: the step is
+shard_mapped *manually over the pod axis only* (data/model stay under
+automatic SPMD) so the compressed exchange is explicit in the HLO — the
+dry-run's collective-bytes parse sees int8 all-gathers instead of fp32
+all-reduces on the pod axis.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def quantize(x):
+    """x -> (int8 codes (nb, BLOCK), fp32 scales (nb,), residual like x)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    residual = (blocks - deq).reshape(-1)[: x.size].reshape(x.shape)
+    return q, scale[:, 0], residual
+
+
+def dequantize(q, scale, shape):
+    deq = q.astype(jnp.float32) * scale[:, None]
+    size = 1
+    for s in shape:
+        size *= s
+    return deq.reshape(-1)[:size].reshape(shape)
+
+
+def compressed_pmean(tree, axis_name, err_state):
+    """Error-feedback int8 mean-reduction over ``axis_name``.
+
+    tree: gradient pytree (local to this pod). err_state: residual pytree
+    carried across steps. Returns (reduced_tree, new_err_state)."""
+    npods = jax.lax.psum(1, axis_name)
+
+    def one(g, err):
+        g = g.astype(jnp.float32) + err
+        q, scale, residual = quantize(g)
+        q_all = jax.lax.all_gather(q, axis_name)  # (P, nb, BLOCK) int8 wire
+        s_all = jax.lax.all_gather(scale, axis_name)  # (P, nb) fp32 wire
+        total = jnp.einsum(
+            "pbk,pb->bk", q_all.astype(jnp.float32), s_all
+        )
+        size = g.size
+        out = total.reshape(-1)[:size].reshape(g.shape) / npods
+        return out, residual
+
+    flat, treedef = jax.tree.flatten(tree)
+    flat_err = treedef.flatten_up_to(err_state)
+    outs = [one(g, e) for g, e in zip(flat, flat_err)]
+    return (
+        treedef.unflatten([o[0] for o in outs]),
+        treedef.unflatten([o[1] for o in outs]),
+    )
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,176 @@
+"""Optimizers (no optax in this container): AdamW, Adafactor, schedules.
+
+Functional API:
+    opt = make_optimizer(cfg_or_name, lr_schedule)
+    state = opt.init(params)
+    params, state, stats = opt.update(grads, state, params)
+
+AdamW keeps fp32 (m, v); Adafactor keeps factored second moments
+(row/col vectors for matrices) — the memory-viable choice for the
+480B/1T MoE archs (see DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+
+def cosine_schedule(peak_lr, warmup, total):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def wsd_schedule(peak_lr, warmup, stable, decay, floor=0.1):
+    """Warmup-Stable-Decay (MiniCPM, arXiv:2404.06395): linear warmup,
+    long flat stage, short exponential-ish decay to floor*peak."""
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        dec_frac = jnp.clip((step - warmup - stable) / max(decay, 1), 0.0, 1.0)
+        dec = peak_lr * jnp.power(floor, dec_frac)
+        return jnp.where(step < warmup, warm, jnp.where(step < warmup + stable, peak_lr, dec))
+
+    return lr
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params) -> (params, state, stats)
+
+
+def adamw(lr_fn, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1, clip_norm=1.0):
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, clip_norm / (gnorm + 1e-9)) if clip_norm else 1.0
+        lr = lr_fn(step)
+        b1c = 1.0 - b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * scale
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            mh = m / b1c
+            vh = v / b2c
+            delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, {"step": step, "m": new_m, "v": new_v}, {"grad_norm": gnorm, "lr": lr}
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr_fn, eps=1e-30, clip_threshold=1.0, decay_rate=0.8,
+              weight_decay=0.0, min_dim_size_to_factor=32):
+    """Adafactor (Shazeer & Stern): factored 2nd moments, no 1st moment."""
+
+    def _factored(p):
+        return p.ndim >= 2 and p.shape[-1] >= min_dim_size_to_factor and p.shape[-2] >= min_dim_size_to_factor
+
+    def init(params):
+        def one(p):
+            if _factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"step": jnp.zeros((), jnp.int32), "v": jax.tree.map(one, params, is_leaf=lambda x: isinstance(x, jax.Array))}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        beta2 = 1.0 - jnp.power(t, -decay_rate)
+        lr = lr_fn(step)
+
+        def upd(g, v, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if _factored(p):
+                vr = beta2 * v["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * v["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                denom = jnp.sqrt(
+                    vr[..., :, None] * vc[..., None, :] / jnp.maximum(
+                        jnp.mean(vr, axis=-1, keepdims=True)[..., None], eps
+                    )
+                )
+                u = g / jnp.maximum(denom, eps)
+                nv = {"vr": vr, "vc": vc}
+            else:
+                vv = beta2 * v["v"] + (1 - beta2) * g2
+                u = g / jnp.sqrt(vv + eps)
+                nv = {"v": vv}
+            # update clipping (RMS)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), nv
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_v = treedef.flatten_up_to(state["v"])
+        out = [upd(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_v = treedef.unflatten([o[1] for o in out])
+        return new_p, {"step": step, "v": new_v}, {"lr": lr}
+
+    return Optimizer(init, update)
+
+
+def global_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def make_optimizer(name: str, lr_fn=None):
+    lr_fn = lr_fn or cosine_schedule(3e-4, 100, 10_000)
+    if name == "adamw":
+        return adamw(lr_fn)
+    if name == "adafactor":
+        return adafactor(lr_fn)
+    if name == "adamw_wsd":
+        return adamw(wsd_schedule(3e-4, 100, 8_000, 1_900))
+    raise ValueError(name)

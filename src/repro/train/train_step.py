@@ -1,0 +1,117 @@
+"""Train step assembly: loss -> grads -> (optional compressed pod
+reduction) -> optimizer update.
+
+Two flavors:
+
+* plain pjit step — gradients are reduced by XLA SPMD across all data
+  axes (pod included); simplest graph, fp32/bf16 all-reduce on the wire.
+* ``compress_pods=True`` — the step is shard_mapped manually over the
+  'pod' axis only (data/model stay automatic); the pod-axis reduction
+  runs through ``grad_compression.compressed_pmean`` (int8 + error
+  feedback). This is the §Perf 'collective' lever for multi-pod.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import grad_compression as gc
+
+__all__ = ["make_train_step", "init_train_state"]
+
+
+def init_train_state(model, opt, key, compress_pods=False):
+    params = model.init(key)
+    state = {"params": params, "opt": opt.init(params), "step": jnp.zeros((), jnp.int32)}
+    if compress_pods:
+        state["err"] = gc.init_error_state(params)
+    return state
+
+
+def make_train_step(model, opt, mesh=None, compress_pods=False, accum_steps=1):
+    """Returns step(state, batch) -> (state, metrics).
+
+    accum_steps > 1: gradient-accumulation microbatching — the global
+    batch is split into `accum_steps` scanned microbatches; activation
+    peak memory drops ~proportionally (the lever that fits the 480B/1T
+    archs on 16 GiB HBM). Gradients accumulate in the parameter dtype.
+    """
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch, mesh)
+        return loss, metrics
+
+    def grads_of(params, batch):
+        if accum_steps == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+            return loss, grads
+
+        mb = jax.tree.map(
+            lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps) + x.shape[1:]),
+            batch,
+        )
+
+        def body(carry, mbatch):
+            g_acc, l_acc = carry
+            (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mbatch)
+            g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), g_acc, g)
+            return (g_acc, l_acc + loss), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params)
+        (g_sum, l_sum), _ = jax.lax.scan(body, (g0, jnp.zeros(())), mb)
+        inv = 1.0 / accum_steps
+        return l_sum * inv, jax.tree.map(lambda g: g * inv, g_sum)
+
+    def plain_step(state, batch):
+        loss, grads = grads_of(state["params"], batch)
+        new_params, new_opt, stats = opt.update(grads, state["opt"], state["params"])
+        return (
+            {"params": new_params, "opt": new_opt, "step": state["step"] + 1},
+            {"loss": loss, **stats},
+        )
+
+    if not compress_pods:
+        return plain_step
+
+    assert mesh is not None and "pod" in mesh.axis_names, "compress_pods needs a pod axis"
+
+    def pod_step(state, batch):
+        loss, grads = grads_of(state["params"], batch)
+        # int8 error-feedback exchange across pods
+        grads, new_err = gc.compressed_pmean(grads, "pod", state["err"])
+        loss = jax.lax.pmean(loss, "pod")
+        new_params, new_opt, stats = opt.update(grads, state["opt"], state["params"])
+        return (
+            {
+                "params": new_params,
+                "opt": new_opt,
+                "step": state["step"] + 1,
+                "err": new_err,
+            },
+            {"loss": loss, "lr": stats.get("lr", jnp.zeros(())),
+             "grad_norm": stats.get("grad_norm", jnp.zeros(()))},
+        )
+
+    # manual over 'pod' only; data/model remain automatically partitioned.
+    rep = P()  # params/opt replicated across pods (sharded over data/model by SPMD)
+
+    def step(state, batch):
+        state_specs = jax.tree.map(lambda _: rep, state)
+        bspecs = jax.tree.map(lambda _: P("pod"), batch)
+        mspecs = {"loss": rep, "lr": rep, "grad_norm": rep}
+        return jax.shard_map(
+            pod_step,
+            mesh=mesh,
+            in_specs=(state_specs, bspecs),
+            out_specs=(state_specs, mspecs),
+            check_vma=False,
+            axis_names={"pod"},
+        )(state, batch)
+
+    return step

@@ -1,0 +1,49 @@
+"""KV-chunked (online-softmax) attention == full attention."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import _gqa_out, _gqa_scores, _kv_chunked_context, NEG
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 17)])
+@pytest.mark.parametrize("B,T,S,H,KV,hd,ck", [
+    (2, 32, 32, 8, 2, 16, 8),
+    (1, 48, 48, 4, 4, 8, 16),   # MHA, non-multiple handled by pad
+    (1, 40, 40, 6, 2, 8, 16),   # S % ck != 0
+])
+def test_chunked_matches_full(causal, window, B, T, S, H, KV, hd, ck):
+    ks = jax.random.split(jax.random.key(B * T + H), 3)
+    q = jax.random.normal(ks[0], (B, T, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+
+    ctx_chunked = _kv_chunked_context(q, k, v, causal=causal, window=window, ck=ck)
+
+    scores = _gqa_scores(q, k)
+    i = jax.lax.broadcasted_iota(jnp.int32, (T, S), 0)
+    j = jax.lax.broadcasted_iota(jnp.int32, (T, S), 1)
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask &= i >= j
+    if window:
+        mask &= (i - j) < window
+    scores = jnp.where(mask, scores, NEG)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(v.dtype)
+    G = H // KV
+    ctx_full = jnp.einsum("bkgts,bskh->btkgh", probs, v).reshape(B, T, H, hd)
+
+    np.testing.assert_allclose(
+        np.asarray(ctx_chunked), np.asarray(ctx_full), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_chunked_handles_fully_masked_rows():
+    """window smaller than chunk stride must not produce NaNs."""
+    q = jax.random.normal(jax.random.key(0), (1, 16, 2, 8))
+    k = jax.random.normal(jax.random.key(1), (1, 16, 2, 8))
+    v = jax.random.normal(jax.random.key(2), (1, 16, 2, 8))
+    ctx = _kv_chunked_context(q, k, v, causal=True, window=1, ck=4)
+    assert np.all(np.isfinite(np.asarray(ctx)))

@@ -1,0 +1,143 @@
+"""Per-kernel allclose tests vs the pure-jnp oracles (interpret mode).
+
+Sweeps shapes/dtypes per the kernel contract; hypothesis drives extra
+randomized shape cases.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import candidate_verify, pairwise_l2, window_verify
+from repro.kernels.ref import (
+    candidate_verify_ref,
+    pairwise_l2_ref,
+    window_verify_ref,
+)
+
+
+def _mk_candidates(key, Q, C, K, d, n):
+    ks = jax.random.split(key, 5)
+    cand_proj = jax.random.normal(ks[0], (Q, C, K)) * 2.0
+    cand_vecs = jax.random.normal(ks[1], (Q, C, d))
+    cand_ids = jax.random.randint(ks[2], (Q, C), 0, n + 1)  # includes invalid n
+    g = jax.random.normal(ks[3], (Q, K))
+    q = jax.random.normal(ks[4], (Q, d))
+    return cand_proj, cand_vecs, cand_ids, g, q
+
+
+def _assert_topk_equal(got, ref, msg=""):
+    """Top-k sets can permute among ties; compare distances exactly and
+    ids as multisets bucketed by distance."""
+    gd, gi = map(np.asarray, got)
+    rd, ri = map(np.asarray, ref)
+    np.testing.assert_allclose(gd, rd, rtol=1e-5, atol=1e-5, err_msg=msg)
+    for qq in range(gd.shape[0]):
+        finite = np.isfinite(rd[qq])
+        assert set(gi[qq][finite]) == set(ri[qq][finite]), (msg, qq)
+
+
+@pytest.mark.parametrize("Q,C,K,d,k", [
+    (1, 64, 4, 16, 5),
+    (3, 256, 12, 128, 50),
+    (2, 100, 8, 33, 10),   # non-multiple C and odd d
+    (4, 32, 2, 8, 32),     # k == C
+])
+def test_candidate_verify_matches_ref(Q, C, K, d, k):
+    n = 1000
+    args = _mk_candidates(jax.random.key(Q * C + d), Q, C, K, d, n)
+    w = 2.5
+    got = candidate_verify(*args, w, n=n, k=k, interpret=True)
+    ref = candidate_verify_ref(*args, w, n, k)
+    _assert_topk_equal(got, ref)
+
+
+def test_candidate_verify_dedup():
+    """Duplicate (id, dist) candidates must appear at most once in top-k."""
+    Q, C, K, d, n, k = 1, 64, 4, 16, 100, 8
+    cp, cv, ci, g, q = _mk_candidates(jax.random.key(0), Q, C, K, d, n)
+    # force duplicates: same candidate repeated 8x, all guaranteed in-box
+    cp = cp.at[:, :8, :].set(g[:, None, :])
+    cv = cv.at[:, :8, :].set(0.5)
+    ci = ci.at[:, :8].set(7)
+    got_d, got_i = candidate_verify(cp, cv, ci, g, q, 100.0, n=n, k=k, interpret=True)
+    ids = np.asarray(got_i)[0]
+    finite = np.isfinite(np.asarray(got_d)[0])
+    assert (ids[finite] == 7).sum() <= 1
+
+
+def test_candidate_verify_all_masked():
+    """w = 0 and far boxes -> empty result (+inf, id=n)."""
+    Q, C, K, d, n, k = 2, 64, 4, 16, 50, 5
+    cp, cv, ci, g, q = _mk_candidates(jax.random.key(1), Q, C, K, d, n)
+    got_d, got_i = candidate_verify(cp + 100.0, cv, ci, g, q, 0.5, n=n, k=k,
+                                    interpret=True)
+    assert np.all(np.isinf(np.asarray(got_d)))
+    assert np.all(np.asarray(got_i) == n)
+
+
+@pytest.mark.parametrize("Q,M,nb,B,K,d,k", [
+    (2, 4, 16, 32, 4, 16, 5),
+    (1, 8, 8, 64, 12, 96, 20),  # M == nb
+])
+def test_window_verify_matches_ref(Q, M, nb, B, K, d, k):
+    n = nb * B - 3
+    ks = jax.random.split(jax.random.key(Q + M + nb), 6)
+    proj_blocks = jax.random.normal(ks[0], (nb, B, K)) * 2.0
+    vec_blocks = jax.random.normal(ks[1], (nb, B, d))
+    # real tables hold each id at most once (ids >= n are padding slots)
+    ids_blocks = jax.random.permutation(ks[2], nb * B).reshape(nb, B).astype(jnp.int32)
+    # block ids include invalid sentinel nb
+    blk_idx = jax.random.randint(ks[3], (Q, M), 0, nb + 1).astype(jnp.int32)
+    g = jax.random.normal(ks[4], (Q, K))
+    q = jax.random.normal(ks[5], (Q, d))
+    w = 3.0
+    got = window_verify(blk_idx, proj_blocks, vec_blocks, ids_blocks, g, q, w,
+                        n=n, k=k, interpret=True)
+    ref = window_verify_ref(blk_idx, proj_blocks, vec_blocks, ids_blocks, g, q,
+                            w, n, k)
+    # ref gathers duplicate blocks twice; kernel dedups identical pairs, so
+    # compare distances only where both finite, and id-sets per query.
+    _assert_topk_equal(got, ref)
+
+
+@pytest.mark.parametrize("nq,nn,d", [
+    (8, 16, 8),
+    (256, 512, 128),
+    (100, 300, 65),      # ragged everything
+    (1, 1000, 960),      # gist-shaped
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pairwise_l2_matches_ref(nq, nn, d, dtype):
+    kq, kx = jax.random.split(jax.random.key(nq + nn))
+    Q = jax.random.normal(kq, (nq, d), dtype)
+    X = jax.random.normal(kx, (nn, d), dtype)
+    got = pairwise_l2(Q, X, interpret=True)
+    ref = pairwise_l2_ref(Q.astype(jnp.float32), X.astype(jnp.float32))
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=tol,
+                               atol=tol * d)
+
+
+@given(
+    nq=st.integers(1, 40),
+    nn=st.integers(1, 80),
+    d=st.integers(1, 70),
+)
+@settings(deadline=None, max_examples=10)
+def test_pairwise_l2_property(nq, nn, d):
+    kq, kx = jax.random.split(jax.random.key(nq * 7919 + nn * 31 + d))
+    Q = jax.random.normal(kq, (nq, d))
+    X = jax.random.normal(kx, (nn, d))
+    got = pairwise_l2(Q, X, tile_q=16, tile_n=16, tile_d=32, interpret=True)
+    ref = pairwise_l2_ref(Q, X)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=2e-4,
+                               atol=2e-3)
+
+
+def test_pairwise_l2_self_distance_zero():
+    X = jax.random.normal(jax.random.key(3), (64, 32))
+    got = np.asarray(pairwise_l2(X, X, interpret=True))
+    assert np.all(np.abs(np.diag(got)) < 1e-3)

@@ -1,0 +1,72 @@
+"""Engine-equivalence tests for the fixed-schedule batched search path."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import DBLSHParams, brute_force, build, search_batch, search_batch_fixed
+from repro.data import make_clustered, normalize_scale
+
+
+@pytest.fixture(scope="module")
+def setup():
+    key = jax.random.key(11)
+    kd, kb = jax.random.split(key)
+    allpts = make_clustered(kd, 2064, 24, n_clusters=12, spread=0.02)
+    data, queries = allpts[:2048], allpts[2048:]
+    data, queries, _ = normalize_scale(data, queries)
+    params = DBLSHParams.derive(
+        n=2048, d=24, c=1.5, t=48, k=10, K=8, L=3, inline_vectors=True
+    )
+    index = build(kb, data, params)
+    return data, queries, params, index
+
+
+def test_engines_agree(setup):
+    """jnp / kernel / inline engines return identical results."""
+    data, queries, params, index = setup
+    outs = {}
+    for engine in ["jnp", "kernel", "inline"]:
+        d, i = search_batch_fixed(
+            index, queries, k=8, r0=0.5, steps=6, engine=engine, interpret=True
+        )
+        outs[engine] = (np.asarray(d), np.asarray(i))
+    for engine in ["kernel", "inline"]:
+        np.testing.assert_allclose(
+            outs[engine][0], outs["jnp"][0], rtol=1e-5, atol=1e-5, err_msg=engine
+        )
+        # id sets must match wherever distances are finite (ties may permute)
+        for qq in range(outs["jnp"][0].shape[0]):
+            fin = np.isfinite(outs["jnp"][0][qq])
+            assert set(outs[engine][1][qq][fin]) == set(outs["jnp"][1][qq][fin])
+
+
+def test_fixed_matches_adaptive_recall(setup):
+    """The fixed schedule must be at least as accurate as the adaptive
+    while_loop path (it can only probe more)."""
+    data, queries, params, index = setup
+    k = 8
+    _, gt = brute_force(data, queries, k=k)
+    gt = np.asarray(gt)
+
+    _, ids_a = search_batch(index, queries, k=k, r0=0.5)
+    _, ids_f = search_batch_fixed(index, queries, k=k, r0=0.5, steps=10)
+    rec = lambda ids: np.mean(
+        [len(set(a.tolist()) & set(b.tolist())) / k for a, b in zip(np.asarray(ids), gt)]
+    )
+    assert rec(ids_f) >= rec(ids_a) - 1e-9
+    assert rec(ids_f) > 0.6
+
+
+def test_gather_vs_inline_params(setup):
+    """inline_vectors=False index + fixed search agrees with inline."""
+    data, queries, params, index = setup
+    p2 = dataclasses.replace(params, inline_vectors=False)
+    kb = jax.random.key(5)
+    ia = build(kb, data, p2)
+    ib = build(kb, data, params)
+    da, _ = search_batch_fixed(ia, queries[:8], k=5, r0=0.5, steps=6, engine="jnp")
+    db, _ = search_batch_fixed(ib, queries[:8], k=5, r0=0.5, steps=6, engine="jnp")
+    np.testing.assert_allclose(np.asarray(da), np.asarray(db), rtol=1e-5, atol=1e-5)

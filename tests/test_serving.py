@@ -1,0 +1,114 @@
+"""Serving stack tests: engine continuous batching + kNN-LM retrieval."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.registry import build_model
+from repro.serve import Request, ServeEngine, build_datastore, knn_probs
+from repro.data.pipeline import SyntheticTokens, make_batch_fn
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("yi-9b").smoke().scaled(n_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def test_engine_continuous_batching(tiny):
+    cfg, model, params = tiny
+    eng = ServeEngine(model, params, slots=2, cache_len=64)
+    reqs = [
+        Request(uid=i, prompt=np.arange(3 + i, dtype=np.int32) % cfg.vocab_size,
+                max_new_tokens=4 + i)
+        for i in range(5)  # more requests than slots -> queueing
+    ]
+    for r in reqs:
+        eng.submit(r)
+    steps = eng.run()
+    assert steps > 0
+    for r in reqs:
+        assert r.done
+        assert len(r.output) == r.max_new_tokens
+        assert all(0 <= t < cfg.padded_vocab for t in r.output)
+
+
+def test_engine_matches_single_stream(tiny):
+    """A request decoded alone == the same request decoded while another
+    request shares the batch (per-slot positions + caches are isolated)."""
+    cfg, model, params = tiny
+    p1 = np.arange(5, dtype=np.int32)
+    p2 = (np.arange(7, dtype=np.int32) * 3) % cfg.vocab_size
+
+    solo = Request(uid=0, prompt=p1, max_new_tokens=6)
+    eng1 = ServeEngine(model, params, slots=1, cache_len=64)
+    eng1.submit(solo)
+    eng1.run()
+
+    a = Request(uid=1, prompt=p1, max_new_tokens=6)
+    b = Request(uid=2, prompt=p2, max_new_tokens=6)
+    eng2 = ServeEngine(model, params, slots=2, cache_len=64)
+    eng2.submit(a)
+    eng2.submit(b)
+    eng2.run()
+
+    assert solo.output == a.output
+
+
+def test_engine_ssm_family():
+    cfg = get_config("mamba2-1.3b").smoke().scaled(n_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(1))
+    eng = ServeEngine(model, params, slots=2, cache_len=32)
+    reqs = [Request(uid=i, prompt=np.arange(4, dtype=np.int32), max_new_tokens=5)
+            for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert all(r.done and len(r.output) == 5 for r in reqs)
+
+
+def test_knn_probs_retrieves_neighbors(tiny):
+    """Keys clustered around distinct centroids with distinct values: a
+    query near a centroid must put most kNN mass on that value."""
+    from repro.core import DBLSHParams, build
+    from repro.serve.retrieval import Datastore
+
+    D, vocab = 16, 50
+    key = jax.random.key(3)
+    centers = jax.random.normal(key, (5, D)) * 10.0
+    pts = (centers[:, None, :] + 0.01 * jax.random.normal(key, (5, 200, D))).reshape(-1, D)
+    vals = jnp.repeat(jnp.arange(5, dtype=jnp.int32) + 10, 200)
+    params_lsh = DBLSHParams.derive(n=1000, d=D, c=1.5, t=32, k=8, K=8, L=3)
+    ds = Datastore(build(jax.random.key(4), pts, params_lsh), vals,
+                   temperature=1.0, lam=0.5, k=8)
+    q = centers[2:3] + 0.01
+    probs = knn_probs(ds, q, vocab, r0=0.05, steps=10)
+    assert probs.shape == (1, vocab)
+    assert float(probs[0, 12]) > 0.9  # value of cluster 2
+    np.testing.assert_allclose(float(jnp.sum(probs)), 1.0, rtol=1e-3)
+
+
+def test_retrieval_lm_end_to_end(tiny):
+    """Datastore built from the model's own hidden states; retrieval-
+    augmented decode returns a valid distribution and runs in the engine."""
+    from repro.serve import RetrievalLM
+
+    cfg, model, params = tiny
+    src = SyntheticTokens(cfg.vocab_size, 16, 2, seed=1)
+    batches = [make_batch_fn(src)(s) for s in range(3)]
+    ds = build_datastore(
+        model, params, batches, jax.random.key(5), t=16, k=4, block_size=32
+    )
+    assert ds.index.n == 3 * 2 * 16
+
+    rlm = RetrievalLM(model, ds, r0=0.5, steps=4)
+    eng = ServeEngine(model, params, slots=2, cache_len=64, retrieval=rlm)
+    req = Request(uid=0, prompt=np.arange(4, dtype=np.int32), max_new_tokens=4)
+    eng.submit(req)
+    eng.run()
+    assert req.done and len(req.output) == 4
