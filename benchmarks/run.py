@@ -14,6 +14,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=float, default=0.25)
     ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument("--skip-store", action="store_true",
+                    help="skip the store-throughput sweep (figures only)")
     args = ap.parse_args()
 
     from . import fig4_rho, fig5_effect_n, fig8_effect_k, fig9_recall_time, table4_query_perf
@@ -40,6 +42,18 @@ def main() -> None:
     for r in fig9_recall_time.run(scale=args.scale):
         print(f"fig9/recall_time,{r['query_ms_per_q']*1e3:.1f},"
               f"c={r['c']};steps={r['steps']};recall={r['recall']:.3f}")
+
+    if not args.skip_store:
+        from . import store_throughput
+
+        report = store_throughput.main(
+            scale=args.scale, out="store_throughput.json"
+        )
+        for r in report["results"]:
+            print(f"store/qps/{r['engine']}/bs{r['batch_size']},"
+                  f"{1e6 / r['sustained_qps']:.1f},"
+                  f"qps={r['sustained_qps']:.1f};p50ms={r['latency_ms_p50']:.1f};"
+                  f"p99ms={r['latency_ms_p99']:.1f}")
 
     if not args.skip_roofline:
         from . import roofline

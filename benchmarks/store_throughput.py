@@ -1,0 +1,134 @@
+"""Sustained-QPS benchmark for the store service layer.
+
+Streams single queries through the StoreService admission queue at each
+(engine, batch-size) point, measures sustained QPS and per-request
+latency percentiles after a compile warmup, and emits a JSON report:
+
+    PYTHONPATH=src python benchmarks/store_throughput.py \
+        [--scale 0.2] [--batch-sizes 8 32] [--engines jnp] \
+        [--out store_throughput.json]
+
+CPU-friendly at the default scale; on an accelerator raise --scale and
+add the Pallas engines (kernel / inline) to the sweep.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+try:
+    # python -m benchmarks.store_throughput
+    from .common import load_dataset, recall_and_ratio
+except ImportError:
+    # python benchmarks/store_throughput.py
+    from common import load_dataset, recall_and_ratio
+
+from repro.core import brute_force
+from repro.store import Collection, StoreService
+
+
+def _bench_point(col, queries, *, batch_size: int, engine: str, k: int,
+                 n_queries: int, r0: float, steps: int) -> dict:
+    reps = -(-n_queries // queries.shape[0])
+    stream = np.tile(queries, (reps, 1))[:n_queries]
+
+    def run():
+        svc = StoreService(
+            batch_shapes=(batch_size,), max_wait_ms=1e9, default_k=k,
+            r0=r0, steps=steps, engine=engine,
+        )
+        svc.attach(col)
+        t0 = time.perf_counter()
+        for q in stream:
+            svc.submit(col.name, q)
+            if svc.pending() >= batch_size:
+                svc.step(force=True)
+        svc.flush()
+        return svc, time.perf_counter() - t0
+
+    run()  # warmup: compiles the (batch_size, d) program
+    svc, wall = run()
+    stats = svc.stats(col.name)
+    return {
+        "engine": engine,
+        "batch_size": batch_size,
+        "queries": n_queries,
+        "wall_s": wall,
+        "sustained_qps": n_queries / wall,
+        "latency_ms_p50": stats["latency_ms_p50"],
+        "latency_ms_p99": stats["latency_ms_p99"],
+        "mean_radius_steps": stats["mean_radius_steps"],
+        "mean_candidates": stats["mean_candidates"],
+        "batches": stats["batches"],
+    }
+
+
+def main(
+    scale: float = 0.2,
+    dataset: str = "sift-s",
+    batch_sizes: tuple[int, ...] = (8, 32),
+    engines: tuple[str, ...] = ("jnp",),
+    n_queries: int = 128,
+    k: int = 10,
+    out: str = "store_throughput.json",
+):
+    data, queries = load_dataset(dataset, scale=scale)
+    col = Collection.create(
+        "bench", jax.random.key(1), data, c=1.5, t=64, k=k
+    )
+    # sanity: the collection actually answers (recall floor, not perf)
+    d_, i_ = col.search(queries, k=k, r0=0.5, steps=8)
+    gt_d, gt_i = brute_force(data, queries, k=k)
+    rec, _ = recall_and_ratio(d_, i_, gt_d, gt_i, k)
+
+    results = []
+    for engine in engines:
+        for bs in batch_sizes:
+            pt = _bench_point(
+                col, queries, batch_size=bs, engine=engine, k=k,
+                n_queries=n_queries, r0=0.5, steps=8,
+            )
+            results.append(pt)
+            print(
+                f"[{engine} bs={bs:3d}] {pt['sustained_qps']:8.1f} QPS  "
+                f"p50={pt['latency_ms_p50']:.1f}ms p99={pt['latency_ms_p99']:.1f}ms"
+            )
+
+    report = {
+        "dataset": dataset,
+        "scale": scale,
+        "n": int(data.shape[0]),
+        "d": int(data.shape[1]),
+        "k": k,
+        "recall_at_k": rec,
+        "device": str(jax.devices()[0]),
+        "results": results,
+    }
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"[report] recall@{k}={rec:.3f} -> {out}")
+    return report
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.2)
+    ap.add_argument("--dataset", default="sift-s")
+    ap.add_argument("--batch-sizes", type=int, nargs="+", default=[8, 32])
+    ap.add_argument("--engines", nargs="+", default=["jnp"])
+    ap.add_argument("--n-queries", type=int, default=128)
+    ap.add_argument("--out", default="store_throughput.json")
+    args = ap.parse_args()
+    main(
+        scale=args.scale,
+        dataset=args.dataset,
+        batch_sizes=tuple(args.batch_sizes),
+        engines=tuple(args.engines),
+        n_queries=args.n_queries,
+        out=args.out,
+    )

@@ -1,16 +1,65 @@
-"""End-to-end ANN benchmark driver: DB-LSH vs the paper's competitor
-families on a scaled dataset, with recall/ratio/time.
+"""ANN serving through the vector store: build a Collection, stream
+single queries through the StoreService micro-batching queue, mutate the
+collection online (add/remove -> auto-compaction), and report recall +
+service stats.
 
-    PYTHONPATH=src:. python examples/ann_search.py [--scale 0.5]
+    PYTHONPATH=src:. python examples/ann_search.py [--scale 0.25]
+
+For the paper-table benchmark (DB-LSH vs competitor families) run
+``python benchmarks/table4_query_perf.py``; for sustained-QPS curves run
+``python benchmarks/store_throughput.py``.
 """
 
 import argparse
+import json
 
-from benchmarks.table4_query_perf import main as table4
+import jax
+import numpy as np
+
+from benchmarks.common import load_dataset, recall_and_ratio
+from repro.core import brute_force
+from repro.store import Collection, CompactionPolicy, StoreService
+
+
+def main(scale: float = 0.25, dataset: str = "sift-s"):
+    data, queries = load_dataset(dataset, scale=scale)
+    n_hold = data.shape[0] // 4  # held back for the online-update phase
+    base, extra = data[:-n_hold], data[-n_hold:]
+    k = 10
+
+    print(f"[build] {dataset} scale={scale}: n={base.shape[0]} d={base.shape[1]}")
+    col = Collection.create(
+        "demo",
+        jax.random.key(1),
+        base,
+        c=1.5,
+        t=64,
+        k=k,
+        policy=CompactionPolicy(growth_ratio=1.25),
+        payload=np.arange(base.shape[0]),  # payload demo: row ids
+    )
+    svc = StoreService(batch_shapes=(1, 8, 32), default_k=k, r0=0.5, steps=8)
+    svc.attach(col)
+
+    # --- serve a stream of single queries through the admission queue ----
+    dists, ids, _ = svc.serve("demo", queries, k=k)
+    gt_d, gt_i = brute_force(base, queries, k=k)
+    rec, ratio = recall_and_ratio(dists, ids, gt_d, gt_i, k)
+    print(f"[serve] recall@{k}={rec:.3f} ratio={ratio:.3f}")
+    print(f"[stats] {json.dumps(svc.stats('demo'), indent=2)}")
+
+    # --- online growth: adds cross the policy threshold -> auto-compact ---
+    col.add(extra, payload=np.arange(base.shape[0], data.shape[0]))
+    print(f"[update] n={col.n} compactions={col.stats.compactions}")
+    dists, ids, _ = svc.serve("demo", queries, k=k)
+    gt_d, gt_i = brute_force(data, queries, k=k)
+    rec2, _ = recall_and_ratio(dists, ids, gt_d, gt_i, k)
+    print(f"[serve] post-growth recall@{k}={rec2:.3f}")
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=float, default=0.25)
+    ap.add_argument("--dataset", default="sift-s")
     args = ap.parse_args()
-    table4(scale=args.scale)
+    main(scale=args.scale, dataset=args.dataset)

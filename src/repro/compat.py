@@ -1,0 +1,45 @@
+"""jax cross-version compatibility (0.4.x <-> >= 0.6).
+
+Two API moves matter to this repo:
+
+* ``shard_map`` graduated from ``jax.experimental.shard_map`` to
+  ``jax.shard_map``, and its replication-check kwarg was renamed
+  (``check_rep`` -> ``check_vma``);
+* ``jax.make_mesh`` grew an ``axis_types`` parameter. Both versions
+  default every axis to Auto, so callers that want Auto simply omit it.
+
+Import :func:`shard_map` from here instead of from ``jax`` directly.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map"]
+
+if hasattr(jax, "shard_map"):  # jax >= 0.6
+    _shard_map = jax.shard_map
+    _NOCHECK = {"check_vma": False}
+else:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _NOCHECK = {"check_rep": False}
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check: bool = False):
+    """``jax.shard_map`` with the version-appropriate kwarg spellings.
+
+    ``check=False`` (the repo default) disables the replication/VMA
+    check — every call site here predates it and relies on manual spec
+    correctness.  ``axis_names`` selects *partial manual* mode (manual
+    over the named axes only); jax 0.4.x spells that as the complement,
+    ``auto=<other axes>``.
+    """
+    kw = {} if check else dict(_NOCHECK)
+    if axis_names is not None:
+        if hasattr(jax, "shard_map"):
+            kw["axis_names"] = set(axis_names)
+        else:
+            kw["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)

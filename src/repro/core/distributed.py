@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map as _shard_map
+
 from .index import DBLSHIndex, build
 from .params import DBLSHParams
 from .serve_search import search_batch_fixed
@@ -72,9 +74,8 @@ def build_sharded(key, data, params_local: DBLSHParams, mesh, axis: str = "data"
 
     specs = _index_specs(axis, params_local)
     idx = jax.jit(
-        jax.shard_map(
+        _shard_map(
             local_build, mesh=mesh, in_specs=P(axis), out_specs=specs,
-            check_vma=False,
         )
     )(data)
     return ShardedDBLSH(index=idx, axis=axis, n_total=n, n_local=n_local)
@@ -104,8 +105,7 @@ def search_sharded(s: ShardedDBLSH, Q: jax.Array, k: int = 0, r0: float = 1.0,
         return -neg, jnp.where(jnp.isfinite(-neg), ids, n_total)
 
     specs = _index_specs(axis, p)
-    return jax.shard_map(
+    return _shard_map(
         local_search, mesh=mesh,
         in_specs=(specs, P()), out_specs=(P(), P()),
-        check_vma=False,
     )(s.index, Q)

@@ -76,7 +76,7 @@ def _merge_dedup_topk(run_d, run_i, new_d, new_i, n, k):
     return jax.vmap(one)(d, i)
 
 
-@partial(jax.jit, static_argnames=("k", "steps", "engine", "interpret"))
+@partial(jax.jit, static_argnames=("k", "steps", "engine", "interpret", "with_stats"))
 def search_batch_fixed(
     index: DBLSHIndex,
     Q: jax.Array,
@@ -85,6 +85,7 @@ def search_batch_fixed(
     steps: int = 8,
     engine: str = "jnp",
     interpret=None,
+    with_stats: bool = False,
 ):
     """Fixed-schedule batched (c,k)-ANN.
 
@@ -93,9 +94,15 @@ def search_batch_fixed(
       Q: (Qn, d) query batch.
       k, r0, steps: top-k, initial radius, schedule length.
       engine: 'jnp' | 'kernel' | 'inline'.
+      with_stats: also return per-query probe statistics.
 
-    Returns: (Qn, k) distances ascending, (Qn, k) ids.
+    Returns: (Qn, k) distances ascending, (Qn, k) ids; with ``with_stats``
+    a third element ``{"radius_steps": (Qn,) int32, "candidates": (Qn,)
+    int32}`` — schedule steps run before the termination rule fired, and
+    candidate slots fetched (selected blocks x B, all tables) while active.
     """
+    if engine not in ("jnp", "kernel", "inline"):
+        raise ValueError(f"unknown engine {engine!r}: use jnp | kernel | inline")
     p = index.params
     k = k or p.k
     n = index.n
@@ -108,11 +115,18 @@ def search_batch_fixed(
     best_d = jnp.full((Qn, k), _INF)
     best_i = jnp.full((Qn, k), n, jnp.int32)
     done = jnp.zeros((Qn,), bool)
+    radius_steps = jnp.zeros((Qn,), jnp.int32)
+    candidates = jnp.zeros((Qn,), jnp.int32)
 
     r = jnp.asarray(r0, jnp.float32)
     for _ in range(steps):
         w = p.w0 * r
         blk = _select_blocks(index, G, w)  # (L, Qn, M)
+        if with_stats:
+            active = ~done
+            radius_steps = radius_steps + active.astype(jnp.int32)
+            n_slots = jnp.sum((blk < nb).astype(jnp.int32), axis=(0, 2)) * B
+            candidates = candidates + jnp.where(active, n_slots, 0)
 
         step_d = jnp.full((Qn, k), _INF)
         step_i = jnp.full((Qn, k), n, jnp.int32)
@@ -169,4 +183,7 @@ def search_batch_fixed(
         done = done | (best_d[:, k - 1] <= jnp.square(p.c * r))
         r = r * p.c
 
+    if with_stats:
+        stats = {"radius_steps": radius_steps, "candidates": candidates}
+        return jnp.sqrt(best_d), best_i, stats
     return jnp.sqrt(best_d), best_i

@@ -133,7 +133,10 @@ def _parse_ops(body: str):
     ops = []
     for name, out_type, kind, rest in lines:
         arg_txt = rest.split("), ")[0] if "), " in rest else rest.rstrip(")")
-        operand_names = re.findall(r"%([\w.\-]+)", arg_txt.split("{")[0])
+        # Some printers write operand types inline ("dot(f32[128,256]{1,0}
+        # %Arg_0.1, ...)"), so layout braces can precede the first operand
+        # name — scan the whole arg list rather than stopping at a "{".
+        operand_names = re.findall(r"%([\w.\-]+)", arg_txt)
         operand_bytes = sum(_shape_bytes(shapes.get(o, "")) for o in operand_names)
         out_bytes = _shape_bytes(out_type)
         flops = 0.0

@@ -19,9 +19,9 @@ __all__ = ["make_production_mesh", "make_local_mesh"]
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    # every axis Auto — the default on all supported jax versions (the
+    # axis_types parameter does not exist on jax 0.4.x)
+    return jax.make_mesh(shape, axes)
 
 
 def make_local_mesh(multi_pod: bool = False):
@@ -29,6 +29,4 @@ def make_local_mesh(multi_pod: bool = False):
     n = len(jax.devices())
     shape = (1, 1, n) if multi_pod else (1, n)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return jax.make_mesh(shape, axes)

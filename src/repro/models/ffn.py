@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map
 from .common import dense_init
 
 __all__ = ["dense_ffn_params", "dense_ffn", "moe_params", "moe_ffn"]
@@ -187,9 +188,8 @@ def moe_ffn(x, p, cfg, mesh=None, dp_axes=("data",), ep_axis="model"):
         in_specs = (dspec, dspec, dspec, espec, espec, espec)
         if kind != "swiglu":
             in_specs = (dspec, dspec, dspec, espec, P(), espec)
-        out = jax.shard_map(
+        out = shard_map(
             shard_fn, mesh=mesh, in_specs=in_specs, out_specs=ospec,
-            check_vma=False,
         )(xf, top_i, top_w, p["w_up"],
           w_gate if w_gate is not None else jnp.zeros((), x.dtype), p["w_down"])
 

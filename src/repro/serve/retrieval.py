@@ -1,18 +1,29 @@
-"""kNN-LM retrieval head backed by DB-LSH — the integration that makes
-the paper's index a first-class feature of the serving stack.
+"""kNN-LM retrieval head backed by the vector store — the integration
+that makes the paper's index a first-class feature of the serving stack.
 
 Datastore: (key = LM hidden state at position t, value = token t+1)
 pairs collected by a teacher-forced pass over a corpus (Khandelwal et
-al., ICLR 2020). At decode time the current hidden state queries the
-DB-LSH index ((c,k)-ANN, fixed-schedule batched path); retrieved
-neighbors vote with softmax(-dist^2 / T) mass on their value tokens and
-the result is interpolated with the LM distribution:
+al., ICLR 2020).  The pairs live in a ``repro.store.Collection`` whose
+payload is the value tokens, so the datastore inherits the store
+lifecycle: ``add``/``remove`` of corpus spans, auto-compaction as the
+corpus grows past the built K/L sizing, and ``snapshot``/``restore``
+persistence.  :class:`Datastore` is a thin client that adds the kNN-LM
+math on top.  Caveat for serving: ``ServeEngine`` jit-traces its decode
+closure once, baking the index arrays in as constants — mutate the
+collection *before* building the engine (or rebuild the engine after
+updates); mid-flight mutations are invisible to an already-traced
+decode path.
+
+At decode time the current hidden state queries the collection
+((c,k)-ANN, fixed-schedule batched path); retrieved neighbors vote with
+softmax(-dist^2 / T) mass on their value tokens and the result is
+interpolated with the LM distribution:
 
     p(y) = (1 - lam) * p_LM(y) + lam * p_kNN(y)
 
-Distributed: the datastore shards over the mesh data axis via
-``repro.core.distributed`` (each device indexes n/P keys; global top-k
-merge), so the datastore scales with the fleet, not the chip.
+Fleet scale: attach a ``repro.store.router.ShardedCollection`` instead —
+the same client code serves a datastore sharded over the mesh data axis
+(per-device local indexes, global top-k merge).
 """
 
 from __future__ import annotations
@@ -23,23 +34,38 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from ..core import DBLSHParams, build, search_batch_fixed
+from ..core import DBLSHParams
+from ..store import Collection
 
 __all__ = ["Datastore", "build_datastore", "knn_probs", "RetrievalLM"]
 
 
-@partial(
-    jax.tree_util.register_dataclass,
-    data_fields=["index", "values"],
-    meta_fields=["temperature", "lam", "k"],
-)
 @dataclasses.dataclass
 class Datastore:
-    index: object  # DBLSHIndex over hidden-state keys
-    values: jax.Array  # (N,) int32 next-token ids
+    """Thin kNN-LM client over a Collection (payload = next-token ids)."""
+
+    collection: Collection
     temperature: float
     lam: float
     k: int
+
+    # compat surface for callers that predate the store layer
+    @property
+    def index(self):
+        return self.collection.index
+
+    @property
+    def values(self) -> jax.Array:
+        return self.collection.payload
+
+    @classmethod
+    def from_index(
+        cls, index, values, *, temperature: float, lam: float, k: int,
+        name: str = "knnlm",
+    ) -> "Datastore":
+        """Wrap an already-built DBLSHIndex + value array."""
+        col = Collection.from_index(name, index, payload=jnp.asarray(values))
+        return cls(col, temperature, lam, k)
 
 
 def build_datastore(
@@ -67,25 +93,31 @@ def build_datastore(
     params_lsh = DBLSHParams.derive(
         n=keys.shape[0], d=keys.shape[1], c=c, t=t, k=k, block_size=block_size
     )
-    index = build(key, keys, params_lsh)
-    return Datastore(index, vals, temperature, lam, k)
+    col = Collection.create(
+        "knnlm", key, keys, params=params_lsh, payload=vals
+    )
+    return Datastore(col, temperature, lam, k)
 
 
-@partial(jax.jit, static_argnames=("vocab", "steps"))
-def knn_probs(ds: Datastore, queries: jax.Array, vocab: int, r0: float = 1.0,
-              steps: int = 6):
-    """(B, D) hidden states -> (B, vocab) retrieval distribution."""
-    dists, ids = search_batch_fixed(ds.index, queries, k=ds.k, r0=r0, steps=steps)
+@partial(jax.jit, static_argnames=("vocab",))
+def _scatter_probs(dists, toks, vocab: int, temperature):
+    """(B, k) neighbor dists + value tokens -> (B, vocab) distribution."""
     w = jax.nn.softmax(
-        jnp.where(jnp.isfinite(dists), -jnp.square(dists) / ds.temperature, -jnp.inf),
+        jnp.where(jnp.isfinite(dists), -jnp.square(dists) / temperature, -jnp.inf),
         axis=-1,
     )
     w = jnp.where(jnp.isfinite(dists), w, 0.0)
-    toks = jnp.take(ds.values, jnp.minimum(ids, ds.values.shape[0] - 1), axis=0)
-    probs = jax.vmap(
+    return jax.vmap(
         lambda tw, tt: jnp.zeros((vocab,)).at[tt].add(tw, mode="drop")
     )(w, toks)
-    return probs
+
+
+def knn_probs(ds: Datastore, queries: jax.Array, vocab: int, r0: float = 1.0,
+              steps: int = 6):
+    """(B, D) hidden states -> (B, vocab) retrieval distribution."""
+    dists, ids = ds.collection.search(queries, k=ds.k, r0=r0, steps=steps)
+    toks = ds.collection.get_payload(ids)
+    return _scatter_probs(dists, toks, vocab, ds.temperature)
 
 
 def interpolate(lm_logits, knn_p, lam):

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map
 from ..models import transformer
 from ..models.common import compute_dtype, cross_entropy, rmsnorm
 
@@ -106,11 +107,10 @@ def pp_loss_fn(params, batch, cfg, mesh, microbatches: int = 8):
     other = {k: v for k, v in params.items() if k != "blocks"}
     blocks_spec = jax.tree.map(lambda _: P("pod"), params["blocks"])
     other_spec = jax.tree.map(lambda _: P(), other)
-    return jax.shard_map(
+    return shard_map(
         stage_fn,
         mesh=mesh,
         in_specs=(blocks_spec, other_spec, P(), P()),
         out_specs=P(),
-        check_vma=False,
         axis_names={"pod"},
     )(params["blocks"], other, batch["tokens"], batch["labels"])

@@ -1,0 +1,58 @@
+"""repro.store — the vector-store service layer over the DB-LSH core.
+
+Module map (and how it relates to the rest of the repo):
+
+* ``collection``  — :class:`Collection`: a named DB-LSH index + aligned
+  payload with a managed lifecycle.  Wraps ``core.index.build`` /
+  ``core.updates`` (insert/delete/compact) behind ``add`` / ``remove``,
+  adds an auto-compaction policy (rebuild when n outgrows the built K/L
+  sizing or tombstones hollow the index), and persists through
+  ``checkpoint.Checkpointer`` (``snapshot`` / ``restore``).
+
+* ``service``     — :class:`StoreService`: the request frontend.  An
+  admission queue coalesces single queries into micro-batches padded to
+  a fixed menu of batch shapes (one XLA program per shape), dispatches
+  through ``core.serve_search.search_batch_fixed`` with engine selection
+  (``jnp`` | ``kernel`` | ``inline``), and aggregates per-collection
+  QPS / latency-percentile / probe-effort stats.
+
+* ``router``      — :class:`ShardedCollection` + :func:`open_collection`:
+  the same Collection query surface over ``core.distributed.ShardedDBLSH``
+  (per-device local indexes, replicated queries, global-id top-k merge)
+  for datasets too large for one device; the router picks local vs
+  sharded placement.
+
+Relation to neighbors:
+
+* ``core.distributed`` stays the *mechanism* (shard_map build/search);
+  ``store.router`` is the *policy* wrapper that gives it the Collection
+  API so the service can serve local and sharded data uniformly.
+* ``serve.retrieval`` (kNN-LM) is now a thin client: its ``Datastore``
+  holds a Collection whose payload is the next-token values, so the LM
+  retrieval head inherits updates, compaction, and persistence for free.
+
+Typical use::
+
+    from repro.store import Collection, StoreService
+
+    col = Collection.create("docs", jax.random.key(0), data, c=1.5, k=10)
+    svc = StoreService(batch_shapes=(1, 8, 32), default_k=10, r0=0.5)
+    svc.attach(col)
+    ticket = svc.submit("docs", q)     # single query -> micro-batched
+    svc.flush()
+    print(ticket.dists, ticket.ids, svc.stats("docs"))
+"""
+
+from .collection import Collection, CollectionStats, CompactionPolicy
+from .router import ShardedCollection, open_collection
+from .service import QueryRequest, StoreService
+
+__all__ = [
+    "Collection",
+    "CollectionStats",
+    "CompactionPolicy",
+    "QueryRequest",
+    "ShardedCollection",
+    "StoreService",
+    "open_collection",
+]

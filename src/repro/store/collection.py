@@ -1,0 +1,278 @@
+"""Named vector collections: index lifecycle over the DB-LSH primitives.
+
+A :class:`Collection` owns one :class:`~repro.core.index.DBLSHIndex` plus
+an optional *payload* array aligned row-for-row with the indexed vectors
+(the kNN-LM "value" generalized: token ids, document ids, metadata rows —
+anything that should ride along with a returned neighbor id).
+
+It turns the stateless library calls in ``core.updates`` into a managed
+lifecycle:
+
+* ``add`` / ``remove`` delegate to ``core.updates.insert`` / ``delete``
+  and keep the payload aligned;
+* an **auto-compaction policy** watches index health.  K and L are sized
+  for the build-time ``n`` (K ~ log n, see DESIGN.md §3), and deletes
+  only tombstone slots, so the index degrades on two axes: growth
+  (n past ``growth_ratio`` x the last built n) and hollowness (live
+  fraction under ``min_live_ratio``).  Crossing either threshold
+  triggers ``compact`` — a rebuild with freshly derived K/L — and the
+  payload is permuted through the returned id map;
+* ``snapshot`` / ``restore`` persist the whole state (index arrays,
+  payload, PRNG key, policy, counters) through
+  ``checkpoint.Checkpointer``'s atomic step directories.
+
+Repeated small ``add`` calls append padded STR blocks per call; the waste
+is bounded by ``block_size - 1`` slots per add per table and is reclaimed
+at the next compaction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import Checkpointer
+from ..core import DBLSHParams, build, search_batch_fixed
+from ..core.index import DBLSHIndex
+from ..core import updates as _updates
+
+__all__ = ["CompactionPolicy", "CollectionStats", "Collection"]
+
+_INDEX_ARRAY_FIELDS = (
+    "proj_vecs",
+    "proj_blocks",
+    "ids_blocks",
+    "mbr_lo",
+    "mbr_hi",
+    "data",
+    "vec_blocks",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompactionPolicy:
+    """When to rebuild. ``auto=False`` disables the triggers (manual
+    ``compact()`` still works)."""
+
+    growth_ratio: float = 2.0    # compact when n >= ratio * last-built n
+    min_live_ratio: float = 0.5  # compact when live/n drops below this
+    auto: bool = True
+
+
+@dataclasses.dataclass
+class CollectionStats:
+    inserted: int = 0
+    deleted: int = 0
+    compactions: int = 0
+    queries: int = 0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class Collection:
+    """A named DB-LSH index + payload with a managed lifecycle."""
+
+    def __init__(
+        self,
+        name: str,
+        index: DBLSHIndex,
+        *,
+        payload: jax.Array | np.ndarray | None = None,
+        policy: CompactionPolicy | None = None,
+        key: jax.Array | None = None,
+        built_n: int | None = None,
+        stats: CollectionStats | None = None,
+    ):
+        if payload is not None:
+            payload = jnp.asarray(payload)
+            assert payload.shape[0] == index.n, (payload.shape, index.n)
+        self.name = name
+        self.index = index
+        self.payload = payload
+        self.policy = policy or CompactionPolicy()
+        self._key = jax.random.key(0) if key is None else key
+        self.built_n = index.n if built_n is None else built_n
+        self.stats = stats or CollectionStats()
+
+    # ------------------------------------------------------------ construction
+    @classmethod
+    def create(
+        cls,
+        name: str,
+        key: jax.Array,
+        data,
+        *,
+        params: DBLSHParams | None = None,
+        payload=None,
+        policy: CompactionPolicy | None = None,
+        **derive_kw,
+    ) -> "Collection":
+        """Build a fresh index over ``data`` (params derived if omitted)."""
+        data = jnp.asarray(data, jnp.float32)
+        kb, kc = jax.random.split(key)
+        if params is None:
+            params = DBLSHParams.derive(
+                n=data.shape[0], d=data.shape[1], **derive_kw
+            )
+        index = build(kb, data, params)
+        return cls(name, index, payload=payload, policy=policy, key=kc)
+
+    @classmethod
+    def from_index(
+        cls, name: str, index: DBLSHIndex, *, payload=None,
+        policy: CompactionPolicy | None = None, key=None,
+    ) -> "Collection":
+        """Wrap an already-built index (e.g. a kNN-LM datastore)."""
+        return cls(name, index, payload=payload, policy=policy, key=key)
+
+    # -------------------------------------------------------------- properties
+    @property
+    def n(self) -> int:
+        """Indexed rows including tombstones and pre-compaction growth."""
+        return self.index.n
+
+    @property
+    def d(self) -> int:
+        return self.index.data.shape[1]
+
+    def live_count(self) -> int:
+        return _updates.live_count(self.index)
+
+    # ----------------------------------------------------------------- writes
+    def add(self, points, payload=None) -> np.ndarray:
+        """Insert ``points`` (m, d); returns their ids (post-compaction ids
+        if the policy fired)."""
+        points = jnp.atleast_2d(jnp.asarray(points, jnp.float32))
+        m = points.shape[0]
+        if (payload is None) != (self.payload is None):
+            raise ValueError(
+                f"collection {self.name!r}: payload must be provided iff the "
+                "collection carries one"
+            )
+        ids = np.arange(self.n, self.n + m, dtype=np.int64)
+        self.index = _updates.insert(self.index, points)
+        if payload is not None:
+            self.payload = jnp.concatenate(
+                [self.payload, jnp.asarray(payload)], axis=0
+            )
+        self.stats.inserted += m
+        id_map = self._maybe_compact()
+        if id_map is not None:
+            ids = id_map[ids]
+        return ids
+
+    def remove(self, ids) -> np.ndarray | None:
+        """Tombstone ``ids``; space is reclaimed at the next compaction.
+
+        Returns the compaction id map (old id -> new id, -1 if deleted)
+        when the policy fired — every outstanding id must be remapped
+        through it — or None when no compaction happened."""
+        ids = jnp.atleast_1d(jnp.asarray(ids, jnp.int32))
+        self.index = _updates.delete(self.index, ids)
+        self.stats.deleted += int(ids.shape[0])
+        return self._maybe_compact()
+
+    # ------------------------------------------------------------- compaction
+    def should_compact(self) -> bool:
+        n = self.index.n
+        if n >= self.policy.growth_ratio * self.built_n and n > self.built_n:
+            return True
+        return self.live_count() < self.policy.min_live_ratio * n
+
+    def compact(self) -> np.ndarray:
+        """Rebuild now. Returns id_map (n_old,): old id -> new id or -1."""
+        self._key, kc = jax.random.split(self._key)
+        self.index, id_map = _updates.compact(self.index, kc)
+        id_map = np.asarray(id_map)
+        if self.payload is not None:
+            live_old = np.flatnonzero(id_map >= 0)
+            # compact assigns new ids in ascending old-id order, so this
+            # gather lands each payload row at its new id.
+            self.payload = jnp.asarray(self.payload)[live_old]
+        self.built_n = self.index.n
+        self.stats.compactions += 1
+        return id_map
+
+    def _maybe_compact(self) -> np.ndarray | None:
+        if self.policy.auto and self.should_compact():
+            return self.compact()
+        return None
+
+    # ------------------------------------------------------------------ reads
+    def search(
+        self,
+        Q,
+        k: int = 0,
+        *,
+        r0: float = 1.0,
+        steps: int = 8,
+        engine: str = "jnp",
+        with_stats: bool = False,
+    ):
+        """Batched (c,k)-ANN through the fixed-schedule serving path."""
+        Q = jnp.atleast_2d(jnp.asarray(Q, jnp.float32))
+        self.stats.queries += int(Q.shape[0])
+        return search_batch_fixed(
+            self.index, Q, k=k, r0=r0, steps=steps, engine=engine,
+            with_stats=with_stats,
+        )
+
+    def get_payload(self, ids):
+        """Payload rows for returned neighbor ids. Invalid slots (id == n,
+        the not-found sentinel) clamp to the *last* payload row — always
+        mask on the distances (+inf marks unfilled slots), not on ids."""
+        if self.payload is None:
+            raise ValueError(f"collection {self.name!r} has no payload")
+        ids = jnp.asarray(ids)
+        return jnp.take(
+            self.payload, jnp.minimum(ids, self.payload.shape[0] - 1), axis=0
+        )
+
+    # ------------------------------------------------------------ persistence
+    def snapshot(self, directory: str, step: int | None = None) -> int:
+        """Atomic checkpoint via Checkpointer; returns the step written.
+        Defaults to one past the latest step already in ``directory`` so
+        successive snapshots never overwrite each other (Checkpointer
+        keeps the most recent few and GCs the rest)."""
+        ck = Checkpointer(directory)
+        if step is None:
+            latest = ck.latest_step()
+            step = 0 if latest is None else latest + 1
+        tree = {f: np.asarray(getattr(self.index, f)) for f in _INDEX_ARRAY_FIELDS}
+        tree["prng_key"] = np.asarray(jax.random.key_data(self._key))
+        if self.payload is not None:
+            tree["payload"] = np.asarray(self.payload)
+        meta = {
+            "name": self.name,
+            "params": dataclasses.asdict(self.index.params),
+            "policy": dataclasses.asdict(self.policy),
+            "built_n": self.built_n,
+            "stats": self.stats.as_dict(),
+            "has_payload": self.payload is not None,
+        }
+        ck.save(step, tree, meta)
+        return step
+
+    @classmethod
+    def restore(cls, directory: str, step: int | None = None) -> "Collection":
+        tree, meta = Checkpointer(directory).restore(step)
+        params = DBLSHParams(**meta["params"])
+        index = DBLSHIndex(
+            **{f: jnp.asarray(tree[f]) for f in _INDEX_ARRAY_FIELDS},
+            params=params,
+        )
+        payload = jnp.asarray(tree["payload"]) if meta["has_payload"] else None
+        col = cls(
+            meta["name"],
+            index,
+            payload=payload,
+            policy=CompactionPolicy(**meta["policy"]),
+            key=jax.random.wrap_key_data(jnp.asarray(tree["prng_key"])),
+            built_n=meta["built_n"],
+            stats=CollectionStats(**meta["stats"]),
+        )
+        return col

@@ -1,0 +1,148 @@
+"""Shard-aware routing: the Collection API over ``core.distributed``.
+
+A dataset too large for one device shards over the mesh 'data' axis:
+every device builds a local DB-LSH index with the *same* LSH functions
+(``core.distributed.build_sharded``), queries replicate, and per-shard
+top-k merge with one all_gather into globally-id'd results.
+:class:`ShardedCollection` hides all of that behind the same ``search``
+/ ``get_payload`` / ``name`` surface as a local
+:class:`~repro.store.collection.Collection`, so a
+:class:`~repro.store.service.StoreService` can serve both through one
+admission queue.
+
+:func:`open_collection` is the router decision point: it places data on
+a single device when it fits (``max_points_per_shard``), otherwise
+fans out over the mesh.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import DBLSHParams
+from ..core.distributed import ShardedDBLSH, build_sharded, search_sharded
+from .collection import Collection, CompactionPolicy
+
+__all__ = ["ShardedCollection", "open_collection"]
+
+
+class ShardedCollection:
+    """A collection fanned out over the mesh ``axis``; read path only.
+
+    Updates go through per-shard rebuilds (``create`` again) — online
+    insert/delete into a sharded index is a later-PR concern; the
+    service only needs the query surface here.  The payload stays global
+    (replicated): it is indexed by *global* ids after the top-k merge,
+    which is exactly what ``search_sharded`` returns.
+    """
+
+    def __init__(self, name: str, sharded: ShardedDBLSH, mesh, *, payload=None):
+        self.name = name
+        self.sharded = sharded
+        self.mesh = mesh
+        self.payload = None if payload is None else jnp.asarray(payload)
+        if self.payload is not None:
+            assert self.payload.shape[0] == sharded.n_total
+
+    @classmethod
+    def create(
+        cls,
+        name: str,
+        key: jax.Array,
+        data,
+        mesh,
+        *,
+        axis: str = "data",
+        params: DBLSHParams | None = None,
+        payload=None,
+        **derive_kw,
+    ) -> "ShardedCollection":
+        data = jnp.asarray(data, jnp.float32)
+        n, d = data.shape
+        pn = mesh.shape[axis]
+        if params is None:
+            # size K/L for the per-shard n: each device answers locally.
+            params = DBLSHParams.derive(n=n // pn, d=d, **derive_kw)
+        sharded = build_sharded(key, data, params, mesh, axis=axis)
+        return cls(name, sharded, mesh, payload=payload)
+
+    # ---------------------------------------------------------------- surface
+    @property
+    def n(self) -> int:
+        return self.sharded.n_total
+
+    @property
+    def d(self) -> int:
+        return self.sharded.index.data.shape[1]
+
+    def search(
+        self,
+        Q,
+        k: int = 0,
+        *,
+        r0: float = 1.0,
+        steps: int = 8,
+        engine: str = "jnp",
+        with_stats: bool = False,
+    ):
+        """Global (c,k)-ANN: per-shard fixed-schedule search + all_gather
+        top-k merge. ``engine`` is accepted for API parity; the sharded
+        path always verifies through the jnp engine."""
+        del engine
+        Q = jnp.atleast_2d(jnp.asarray(Q, jnp.float32))
+        k = k or self.sharded.index.params.k
+        d, i = search_sharded(
+            self.sharded, Q, k=k, r0=r0, steps=steps, mesh=self.mesh
+        )
+        if with_stats:
+            # per-shard probe stats don't survive the collective merge yet;
+            # report the schedule length as a conservative step count.
+            qn = Q.shape[0]
+            stats = {
+                "radius_steps": jnp.full((qn,), steps, jnp.int32),
+                "candidates": jnp.zeros((qn,), jnp.int32),
+            }
+            return d, i, stats
+        return d, i
+
+    def get_payload(self, ids):
+        """Global-id payload lookup; sentinel ids clamp to the last row —
+        mask on distances, as with Collection.get_payload."""
+        if self.payload is None:
+            raise ValueError(f"collection {self.name!r} has no payload")
+        ids = jnp.asarray(ids)
+        return jnp.take(
+            self.payload, jnp.minimum(ids, self.payload.shape[0] - 1), axis=0
+        )
+
+
+def open_collection(
+    name: str,
+    key: jax.Array,
+    data,
+    *,
+    mesh=None,
+    axis: str = "data",
+    max_points_per_shard: int = 1_000_000,
+    payload=None,
+    policy: CompactionPolicy | None = None,
+    **derive_kw,
+):
+    """Route a dataset to local or sharded placement.
+
+    Local :class:`Collection` when ``data`` fits one device (or no mesh
+    given); :class:`ShardedCollection` fan-out otherwise.  ``policy``
+    only applies to the local path: the sharded collection is read-only
+    (no updates, hence nothing to compact), so a supplied policy is
+    ignored there.
+    """
+    n = np.asarray(data).shape[0]
+    if mesh is not None and mesh.shape[axis] > 1 and n > max_points_per_shard:
+        return ShardedCollection.create(
+            name, key, data, mesh, axis=axis, payload=payload, **derive_kw
+        )
+    return Collection.create(
+        name, key, data, payload=payload, policy=policy, **derive_kw
+    )

@@ -1,0 +1,259 @@
+"""StoreService: the query-serving frontend over named collections.
+
+Single queries arrive one at a time (``submit``) and would waste the
+vector units if dispatched alone, but XLA recompiles on every new batch
+shape — so the service coalesces an **admission queue** into dynamic
+micro-batches padded to a small fixed menu of batch shapes:
+
+* a queue drains when it can fill the largest batch shape, when its
+  oldest request has waited ``max_wait_ms``, or on ``flush()``;
+* the drained requests are padded (zero query rows) up to the smallest
+  ``batch_shapes`` entry that fits, so every dispatch hits one of
+  ``len(batch_shapes)`` compiled programs per engine;
+* results are sliced back per request.  The fixed-schedule search is
+  row-independent (every op in ``search_batch_fixed`` maps over the
+  query axis), so padding cannot perturb a real request's result — the
+  end-to-end test asserts bit-equality against a direct batched call.
+
+Top-k is a *service-level* constant (``default_k``): per-request ``k``
+may be any value up to it and is sliced from the service-k result, which
+keeps the dispatch shape set closed.  Per-collection stats aggregate
+QPS, latency percentiles, padding efficiency, and the per-query probe
+stats (radius steps, candidates fetched) from the search engine.
+
+Any object with ``search(Q, k=..., r0=..., steps=..., engine=...,
+with_stats=...)`` and ``name`` can be attached — a local
+:class:`~repro.store.collection.Collection` or the sharded router
+wrapper in :mod:`repro.store.router`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+
+import numpy as np
+
+__all__ = ["QueryRequest", "StoreService"]
+
+
+@dataclasses.dataclass
+class QueryRequest:
+    """One in-flight query; filled in place when its batch completes."""
+
+    uid: int
+    collection: str
+    query: np.ndarray  # (d,)
+    k: int
+    submitted: float
+    done: bool = False
+    dists: np.ndarray | None = None   # (k,) ascending; +inf = unfilled slot
+    ids: np.ndarray | None = None     # (k,) neighbor ids; index.n = sentinel
+    payload: object = None            # payload rows when the collection has one
+    latency_ms: float = 0.0
+    radius_steps: int = 0
+    candidates: int = 0
+
+
+class _CollectionStats:
+    def __init__(self):
+        self.served = 0
+        self.batches = 0
+        self.padded_slots = 0
+        self.latencies_ms: list[float] = []
+        self.radius_steps = 0
+        self.candidates = 0
+        self.t_first: float | None = None
+        self.t_last: float | None = None
+
+    def record_batch(self, reqs, shape, now):
+        self.served += len(reqs)
+        self.batches += 1
+        self.padded_slots += shape - len(reqs)
+        if self.t_first is None:
+            self.t_first = min(r.submitted for r in reqs)
+        self.t_last = now
+        for r in reqs:
+            self.latencies_ms.append(r.latency_ms)
+            self.radius_steps += r.radius_steps
+            self.candidates += r.candidates
+
+    def snapshot(self) -> dict:
+        lat = np.asarray(self.latencies_ms, np.float64)
+        span = (
+            (self.t_last - self.t_first)
+            if (self.t_first is not None and self.t_last > self.t_first)
+            else 0.0
+        )
+        return {
+            "queries": self.served,
+            "batches": self.batches,
+            "qps": self.served / span if span > 0 else float("nan"),
+            "latency_ms_p50": float(np.percentile(lat, 50)) if lat.size else float("nan"),
+            "latency_ms_p99": float(np.percentile(lat, 99)) if lat.size else float("nan"),
+            "mean_radius_steps": self.radius_steps / max(self.served, 1),
+            "mean_candidates": self.candidates / max(self.served, 1),
+            "padding_efficiency": (
+                self.served / (self.served + self.padded_slots)
+                if self.served else float("nan")
+            ),
+        }
+
+
+class StoreService:
+    """Admission queue + dynamic micro-batching over attached collections."""
+
+    def __init__(
+        self,
+        *,
+        batch_shapes: tuple[int, ...] = (1, 4, 16, 64),
+        max_wait_ms: float = 2.0,
+        default_k: int = 10,
+        r0: float = 1.0,
+        steps: int = 8,
+        engine: str = "jnp",
+    ):
+        assert batch_shapes == tuple(sorted(batch_shapes)) and batch_shapes
+        self.batch_shapes = batch_shapes
+        self.max_wait_ms = max_wait_ms
+        self.default_k = default_k
+        self.r0 = r0
+        self.steps = steps
+        self.engine = engine
+        self.collections: dict[str, object] = {}
+        self._queues: dict[str, deque[QueryRequest]] = {}
+        self._stats: dict[str, _CollectionStats] = {}
+        self._uid = 0
+
+    # ----------------------------------------------------------------- admin
+    def attach(self, collection) -> None:
+        """Register a Collection (or any search-compatible object)."""
+        self.collections[collection.name] = collection
+        self._queues.setdefault(collection.name, deque())
+        self._stats.setdefault(collection.name, _CollectionStats())
+
+    def create_collection(self, name: str, key, data, **kw):
+        from .collection import Collection
+
+        col = Collection.create(name, key, data, **kw)
+        self.attach(col)
+        return col
+
+    def drop_collection(self, name: str) -> None:
+        if self._queues.get(name):
+            raise RuntimeError(f"collection {name!r} has pending requests")
+        self.collections.pop(name, None)
+        self._queues.pop(name, None)
+        self._stats.pop(name, None)
+
+    def __getitem__(self, name: str):
+        return self.collections[name]
+
+    # ---------------------------------------------------------------- submit
+    def submit(self, collection: str, query, k: int | None = None) -> QueryRequest:
+        """Enqueue one query; returns its ticket (filled once dispatched)."""
+        if collection not in self.collections:
+            raise KeyError(f"unknown collection {collection!r}")
+        k = self.default_k if k is None else k
+        if k > self.default_k:
+            raise ValueError(
+                f"k={k} exceeds service default_k={self.default_k}; raise "
+                "default_k at construction (k is compiled into the dispatch)"
+            )
+        req = QueryRequest(
+            uid=self._uid,
+            collection=collection,
+            query=np.asarray(query, np.float32).reshape(-1),
+            k=k,
+            submitted=time.monotonic(),
+        )
+        self._uid += 1
+        self._queues[collection].append(req)
+        return req
+
+    def pending(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    # -------------------------------------------------------------- dispatch
+    def step(self, force: bool = False) -> int:
+        """One scheduler pass: drain every queue that is full enough (or
+        whose head request timed out, or everything when ``force``).
+        Returns the number of requests dispatched."""
+        now = time.monotonic()
+        dispatched = 0
+        cap = self.batch_shapes[-1]
+        for name, queue in self._queues.items():
+            while queue:
+                timed_out = (now - queue[0].submitted) * 1e3 >= self.max_wait_ms
+                if not (force or timed_out or len(queue) >= cap):
+                    break
+                reqs = [queue.popleft() for _ in range(min(cap, len(queue)))]
+                self._dispatch(name, reqs)
+                dispatched += len(reqs)
+        return dispatched
+
+    def flush(self) -> int:
+        """Dispatch everything pending; returns requests served."""
+        total = 0
+        while self.pending():
+            total += self.step(force=True)
+        return total
+
+    def _shape_for(self, m: int) -> int:
+        for s in self.batch_shapes:
+            if s >= m:
+                return s
+        return self.batch_shapes[-1]
+
+    def _dispatch(self, name: str, reqs: list[QueryRequest]) -> None:
+        col = self.collections[name]
+        m = len(reqs)
+        shape = self._shape_for(m)
+        d = reqs[0].query.shape[0]
+        Q = np.zeros((shape, d), np.float32)
+        for j, r in enumerate(reqs):
+            Q[j] = r.query
+        dists, ids, stats = col.search(
+            Q, k=self.default_k, r0=self.r0, steps=self.steps,
+            engine=self.engine, with_stats=True,
+        )
+        dists = np.asarray(dists)
+        ids = np.asarray(ids)
+        steps_taken = np.asarray(stats["radius_steps"])
+        cands = np.asarray(stats["candidates"])
+        # the collection counted the padded batch; only m rows were real
+        cstats = getattr(col, "stats", None)
+        if cstats is not None:
+            cstats.queries -= shape - m
+        now = time.monotonic()
+        has_payload = getattr(col, "payload", None) is not None
+        if has_payload:
+            payloads = np.asarray(col.get_payload(ids[:m]))
+        for j, r in enumerate(reqs):
+            r.dists = dists[j, : r.k]
+            r.ids = ids[j, : r.k]
+            if has_payload:
+                r.payload = payloads[j, : r.k]
+            r.radius_steps = int(steps_taken[j])
+            r.candidates = int(cands[j])
+            r.latency_ms = (now - r.submitted) * 1e3
+            r.done = True
+        self._stats[name].record_batch(reqs, shape, now)
+
+    # ------------------------------------------------------------ convenience
+    def serve(self, collection: str, Q, k: int | None = None):
+        """Submit a whole query matrix as single requests, flush, and return
+        stacked (dists, ids) — the micro-batching round trip."""
+        reqs = [self.submit(collection, q, k=k) for q in np.atleast_2d(Q)]
+        self.flush()
+        return (
+            np.stack([r.dists for r in reqs]),
+            np.stack([r.ids for r in reqs]),
+            reqs,
+        )
+
+    def stats(self, collection: str | None = None) -> dict:
+        if collection is not None:
+            return self._stats[collection].snapshot()
+        return {name: s.snapshot() for name, s in self._stats.items()}

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map
 from . import grad_compression as gc
 
 __all__ = ["make_train_step", "init_train_state"]
@@ -105,12 +106,11 @@ def make_train_step(model, opt, mesh=None, compress_pods=False, accum_steps=1):
         state_specs = jax.tree.map(lambda _: rep, state)
         bspecs = jax.tree.map(lambda _: P("pod"), batch)
         mspecs = {"loss": rep, "lr": rep, "grad_norm": rep}
-        return jax.shard_map(
+        return shard_map(
             pod_step,
             mesh=mesh,
             in_specs=(state_specs, bspecs),
             out_specs=(state_specs, mspecs),
-            check_vma=False,
             axis_names={"pod"},
         )(state, batch)
 

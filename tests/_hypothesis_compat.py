@@ -1,0 +1,92 @@
+"""`hypothesis` import shim for the property tests.
+
+Uses the real library when it is installed (``pip install -r
+requirements-optional.txt``). When it is missing — the default CI /
+container image ships without it — a tiny deterministic fallback runs
+each ``@given`` test over a fixed pseudo-random sample of the strategy
+space (seeded, so failures are reproducible) instead of skipping it.
+
+Only the surface the test-suite uses is emulated: ``st.floats``,
+``st.integers``, ``@given(**kwargs)`` and ``@settings(max_examples=,
+deadline=)``.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import inspect
+    import random
+
+    _FALLBACK_SEED = 0xDB15
+    _DEFAULT_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def floats(min_value: float, max_value: float) -> _Strategy:
+            # include the endpoints early: boundary values find most bugs
+            def draw(rng, _edge=[min_value, max_value]):
+                if _edge:
+                    return _edge.pop(0)
+                return rng.uniform(min_value, max_value)
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            def draw(rng, _edge=[min_value, max_value]):
+                if _edge:
+                    return _edge.pop(0)
+                return rng.randint(min_value, max_value)
+
+            return _Strategy(draw)
+
+    st = _Strategies()
+
+    def settings(**kw):
+        """Record max_examples on the function; other knobs are no-ops."""
+
+        def deco(fn):
+            fn._max_examples = kw.get("max_examples", _DEFAULT_EXAMPLES)
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            sig = inspect.signature(fn)
+            remaining = [
+                p for name, p in sig.parameters.items() if name not in strategies
+            ]
+
+            def wrapper(*args, **kwargs):
+                rng = random.Random(_FALLBACK_SEED)
+                n = getattr(fn, "_max_examples", _DEFAULT_EXAMPLES)
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    fn(*args, **drawn, **kwargs)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            # pytest reads __signature__ for fixture injection: the drawn
+            # parameters must not look like fixtures.
+            wrapper.__signature__ = sig.replace(parameters=remaining)
+            return wrapper
+
+        return deco
+
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

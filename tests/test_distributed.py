@@ -5,7 +5,14 @@ import os
 import subprocess
 import sys
 
+import jax
 import pytest
+
+# jax 0.4.x lowers axis_index over a partial-manual shard_map axis to a
+# PartitionId instruction its SPMD partitioner rejects; the PP schedule
+# needs exactly that (stage = axis_index('pod')). Fixed upstream in the
+# jax versions that ship jax.shard_map.
+_OLD_JAX = not hasattr(jax, "shard_map")
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -17,7 +24,7 @@ from repro.core import DBLSHParams, brute_force, build, search_batch_fixed
 from repro.core.distributed import build_sharded, search_sharded
 from repro.data import make_clustered, normalize_scale
 
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = jax.make_mesh((8,), ("data",))  # axis_types default to Auto
 key = jax.random.key(3)
 kd, kb = jax.random.split(key)
 allpts = make_clustered(kd, 4128, 24, n_clusters=16, spread=0.02)
@@ -70,8 +77,7 @@ for t in range(4):
     losses_ref.append(float(m["loss"]))
 
 # 2x4 mesh (data x model) distributed run
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = jax.make_mesh((2, 4), ("data", "model"))  # Auto axes
 with mesh:
     state_shapes = jax.eval_shape(lambda k: init_train_state(model, opt, k), jax.random.key(0))
     pspecs = rules.param_specs(state_shapes["params"], mesh, fsdp_min_size=1<<10)
@@ -110,8 +116,7 @@ batch = {
 }
 loss_1dev = float(jax.jit(lambda p, b: model.loss(p, b)[0])(params, batch))
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = jax.make_mesh((2, 4), ("data", "model"))  # Auto axes
 with mesh:
     loss_dist = float(
         jax.jit(lambda p, b: model.loss(p, b, mesh)[0])(params, batch)
@@ -167,8 +172,7 @@ batch = {
 }
 ref = float(jax.jit(lambda p, b: model.loss(p, b)[0])(params, batch))
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))  # Auto axes
 with mesh:
     pp = float(jax.jit(
         lambda p, b: pp_loss_fn(p, b, cfg, mesh, microbatches=4)
@@ -187,5 +191,9 @@ print("PP_PARITY_OK", ref, pp)
 
 
 @pytest.mark.slow
+@pytest.mark.xfail(
+    _OLD_JAX, reason="partial-manual axis_index -> PartitionId, "
+    "unsupported by jax 0.4.x SPMD partitioning", strict=False,
+)
 def test_pp_parity_8dev():
     _run(SCRIPT_PP_PARITY, "PP_PARITY_OK")

@@ -40,17 +40,18 @@ def test_scan_trip_count_multiplies():
 
 
 def test_collective_bytes_sharded_matmul():
-    import os
     # runs under the default single device: simulate with 4 via subprocess?
     # here: spot-check that an explicit psum shows up.
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import shard_map
+
+    mesh = jax.make_mesh((1,), ("model",))  # axis_types default to Auto
 
     def f(x):
-        return jax.shard_map(
+        return shard_map(
             lambda a: jax.lax.psum(a, "model"), mesh=mesh,
             in_specs=jax.sharding.PartitionSpec("model"),
             out_specs=jax.sharding.PartitionSpec(),
+            check=True,
         )(x)
 
     x = jax.ShapeDtypeStruct((64,), jnp.float32)

@@ -84,8 +84,8 @@ def test_knn_probs_retrieves_neighbors(tiny):
     pts = (centers[:, None, :] + 0.01 * jax.random.normal(key, (5, 200, D))).reshape(-1, D)
     vals = jnp.repeat(jnp.arange(5, dtype=jnp.int32) + 10, 200)
     params_lsh = DBLSHParams.derive(n=1000, d=D, c=1.5, t=32, k=8, K=8, L=3)
-    ds = Datastore(build(jax.random.key(4), pts, params_lsh), vals,
-                   temperature=1.0, lam=0.5, k=8)
+    ds = Datastore.from_index(build(jax.random.key(4), pts, params_lsh), vals,
+                              temperature=1.0, lam=0.5, k=8)
     q = centers[2:3] + 0.01
     probs = knn_probs(ds, q, vocab, r0=0.05, steps=10)
     assert probs.shape == (1, vocab)

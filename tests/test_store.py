@@ -1,0 +1,277 @@
+"""Vector-store subsystem tests: micro-batching service equivalence,
+auto-compaction policy, payload alignment, persistence round-trip, and
+the sharded router surface."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import brute_force, search_batch_fixed
+from repro.data import make_clustered, normalize_scale
+from repro.store import (
+    Collection,
+    CompactionPolicy,
+    ShardedCollection,
+    StoreService,
+    open_collection,
+)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    kd, kb = jax.random.split(jax.random.key(17))
+    allpts = make_clustered(kd, 1232, 16, n_clusters=10, spread=0.02)
+    data, queries = allpts[:1200], allpts[1200:]
+    data, queries, _ = normalize_scale(data, queries)
+    return np.asarray(data), np.asarray(queries), kb
+
+
+def _recall(ids, gt_i, k):
+    return np.mean(
+        [len(set(a.tolist()) & set(b.tolist())) / k
+         for a, b in zip(np.asarray(ids), np.asarray(gt_i))]
+    )
+
+
+# ---------------------------------------------------------------------------
+# StoreService: micro-batching equivalence (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+def test_service_stream_matches_direct_batch(setup):
+    """A mixed stream of single queries through the admission queue must
+    return results identical to one direct search_batch_fixed call —
+    padding to fixed batch shapes introduces no drift."""
+    data, queries, kb = setup
+    k = 10
+    col = Collection.create("s", kb, data, c=1.5, w0=3.6, t=32, k=k)
+    svc = StoreService(batch_shapes=(1, 4, 16), default_k=k, r0=0.5, steps=8)
+    svc.attach(col)
+
+    # mixed stream: irregular arrival chunks -> batches of size 3, 7, 1,
+    # 16, 5 (each padded to the smallest fitting shape)
+    reqs = []
+    cuts = [3, 10, 11, 27, 32]
+    start = 0
+    for cut in cuts:
+        for q in queries[start:cut]:
+            reqs.append(svc.submit("s", q))
+        svc.step(force=True)
+        start = cut
+    assert svc.pending() == 0
+    assert all(r.done for r in reqs)
+
+    d_direct, i_direct = search_batch_fixed(
+        col.index, jnp.asarray(queries), k=k, r0=0.5, steps=8
+    )
+    np.testing.assert_array_equal(
+        np.stack([r.ids for r in reqs]), np.asarray(i_direct)
+    )
+    np.testing.assert_array_equal(
+        np.stack([r.dists for r in reqs]), np.asarray(d_direct)
+    )
+
+    stats = svc.stats("s")
+    assert stats["queries"] == queries.shape[0]
+    assert stats["batches"] == len(cuts)
+    assert 0 < stats["mean_radius_steps"] <= 8
+    assert stats["mean_candidates"] > 0
+    assert 0 < stats["padding_efficiency"] <= 1.0
+
+
+def test_service_per_request_k_sliced(setup):
+    """Requests with k below the service default get a sliced prefix of
+    the service-k result (no recompilation per k)."""
+    data, queries, kb = setup
+    col = Collection.create("s2", kb, data, c=1.5, w0=3.6, t=32, k=10)
+    svc = StoreService(batch_shapes=(4,), default_k=10, r0=0.5, steps=8)
+    svc.attach(col)
+    r_small = svc.submit("s2", queries[0], k=3)
+    r_full = svc.submit("s2", queries[0], k=10)
+    svc.flush()
+    assert r_small.ids.shape == (3,)
+    np.testing.assert_array_equal(r_small.ids, r_full.ids[:3])
+    with pytest.raises(ValueError):
+        svc.submit("s2", queries[0], k=11)
+
+
+# ---------------------------------------------------------------------------
+# Auto-compaction policy (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+def test_auto_compaction_restores_recall(setup):
+    """A stream of small adds growing the collection past 2x the built n
+    must trigger compact, and recall@10 vs brute force on the grown
+    dataset must be >= the never-compacted recall."""
+    data, queries, kb = setup
+    base, extra = data[:500], data[500:1200]
+    k = 10
+
+    def make(auto):
+        return Collection.create(
+            "g", jax.random.key(17), base, c=1.5, w0=3.6, t=32, k=k,
+            policy=CompactionPolicy(growth_ratio=2.0, auto=auto),
+        )
+
+    frozen, managed = make(False), make(True)
+    for j in range(0, 700, 35):  # 20 small appends -> sparse padded blocks
+        frozen.add(extra[j:j + 35])
+        managed.add(extra[j:j + 35])
+
+    assert frozen.stats.compactions == 0
+    assert managed.stats.compactions >= 1
+    assert managed.n == frozen.n == 1200
+    assert managed.built_n >= 1000  # policy fired at the 2x threshold
+    # the rebuild re-derives K for the grown n (K ~ log n)
+    assert managed.index.params.K >= frozen.index.params.K
+    # and packs away the per-add padding waste
+    assert managed.index.nb < frozen.index.nb
+
+    _, gt_i = brute_force(jnp.asarray(data), jnp.asarray(queries), k=k)
+    _, ids_pre = frozen.search(queries, k=k, r0=0.5, steps=8)
+    _, ids_post = managed.search(queries, k=k, r0=0.5, steps=8)
+    rec_pre, rec_post = _recall(ids_pre, gt_i, k), _recall(ids_post, gt_i, k)
+    assert rec_post >= rec_pre, (rec_pre, rec_post)
+    assert rec_post > 0.85, rec_post
+
+
+def test_hollowness_triggers_compaction(setup):
+    """Deleting past min_live_ratio triggers a rebuild that reclaims
+    tombstoned slots and remaps payload ids."""
+    data, _, kb = setup
+    col = Collection.create(
+        "h", kb, data[:600], c=1.5, w0=3.6, t=32, k=10,
+        payload=np.arange(600),
+        policy=CompactionPolicy(min_live_ratio=0.5),
+    )
+    col.remove(np.arange(0, 301))  # live 299/600 < 0.5
+    assert col.stats.compactions == 1
+    assert col.n == 299
+    assert col.live_count() == 299
+    # payload rows followed the compaction id map
+    np.testing.assert_array_equal(np.asarray(col.payload), np.arange(301, 600))
+
+
+def test_payload_alignment_through_updates(setup):
+    """add -> remove -> compact keeps payload aligned: querying exactly on
+    a surviving point returns its original payload tag."""
+    data, _, kb = setup
+    base, extra = data[:500], data[500:600]
+    col = Collection.create(
+        "p", kb, base, c=1.5, w0=3.6, t=32, k=10,
+        payload=np.arange(500), policy=CompactionPolicy(auto=False),
+    )
+    new_ids = col.add(extra, payload=np.arange(500, 600))
+    np.testing.assert_array_equal(new_ids, np.arange(500, 600))
+    col.remove(np.arange(0, 50))
+    col.compact()
+    assert col.stats.compactions == 1 and col.n == 550
+
+    probe_tag = 570  # an inserted, surviving point
+    d, ids = col.search(data[probe_tag:probe_tag + 1], k=1, r0=0.25, steps=8)
+    assert float(d[0, 0]) < 1e-3
+    tag = int(np.asarray(col.get_payload(ids))[0, 0])
+    assert tag == probe_tag
+
+
+# ---------------------------------------------------------------------------
+# Persistence: snapshot / restore round-trip (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_restore_identical_results(setup, tmp_path):
+    """save -> restore -> bit-identical search results, with payload,
+    policy, counters, and the compaction PRNG key preserved."""
+    data, queries, kb = setup
+    col = Collection.create(
+        "ck", kb, data, c=1.5, w0=3.6, t=32, k=10, payload=np.arange(1200),
+        policy=CompactionPolicy(growth_ratio=3.0),
+    )
+    d0, i0 = col.search(queries, k=10, r0=0.5, steps=8)
+    step = col.snapshot(str(tmp_path))
+
+    col2 = Collection.restore(str(tmp_path), step)
+    assert col2.name == "ck"
+    assert col2.index.params == col.index.params
+    assert col2.policy == col.policy
+    assert col2.built_n == col.built_n
+    d1, i1 = col2.search(queries, k=10, r0=0.5, steps=8)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i0))
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d0))
+    np.testing.assert_array_equal(np.asarray(col2.payload), np.asarray(col.payload))
+
+    # restored collections keep evolving: the preserved key makes the next
+    # compaction deterministic across the save/restore boundary
+    col.remove(np.arange(100))
+    col2.remove(np.arange(100))
+    col.compact()
+    col2.compact()
+    d2a, i2a = col.search(queries, k=10, r0=0.5, steps=8)
+    d2b, i2b = col2.search(queries, k=10, r0=0.5, steps=8)
+    np.testing.assert_array_equal(np.asarray(i2a), np.asarray(i2b))
+
+
+def test_snapshot_restore_after_updates(setup, tmp_path):
+    """The round-trip also holds for a mutated (inserted + tombstoned)
+    index — the exact dynamic state is what persists."""
+    data, queries, kb = setup
+    col = Collection.create(
+        "ck2", kb, data[:800], c=1.5, w0=3.6, t=32, k=10,
+        policy=CompactionPolicy(auto=False),
+    )
+    col.add(data[800:1000])
+    col.remove(np.arange(40, 80))
+    d0, i0 = col.search(queries, k=10, r0=0.5, steps=8)
+    col.snapshot(str(tmp_path))
+    col2 = Collection.restore(str(tmp_path))
+    assert col2.live_count() == col.live_count() == 960
+    d1, i1 = col2.search(queries, k=10, r0=0.5, steps=8)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i0))
+
+
+# ---------------------------------------------------------------------------
+# Router: sharded surface + placement decision
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_collection_matches_local(setup):
+    """On a 1-shard mesh the ShardedCollection must agree exactly with a
+    local index built from the same key (the merge is an identity)."""
+    from repro.core import DBLSHParams, build
+
+    data, queries, kb = setup
+    mesh = jax.make_mesh((1,), ("data",))
+    params = DBLSHParams.derive(n=1200, d=16, c=1.5, w0=3.6, t=32, k=10)
+    sc = ShardedCollection.create(
+        "sh", kb, data, mesh, params=params, payload=np.arange(1200)
+    )
+    assert sc.n == 1200
+    d_s, i_s = sc.search(queries, k=10, r0=0.5, steps=8)
+
+    local = build(kb, jnp.asarray(data), params)
+    d_l, i_l = search_batch_fixed(local, jnp.asarray(queries), k=10, r0=0.5, steps=8)
+    np.testing.assert_array_equal(np.asarray(i_s), np.asarray(i_l))
+    np.testing.assert_allclose(np.asarray(d_s), np.asarray(d_l), rtol=1e-6)
+
+    # the service serves a sharded collection through the same queue
+    svc = StoreService(batch_shapes=(8,), default_k=10, r0=0.5, steps=8)
+    svc.attach(sc)
+    dd, ii, reqs = svc.serve("sh", queries[:8], k=10)
+    np.testing.assert_array_equal(ii, np.asarray(i_l[:8]))
+    assert reqs[0].payload is not None
+
+
+def test_open_collection_routing(setup):
+    data, _, kb = setup
+    mesh = jax.make_mesh((1,), ("data",))
+    col = open_collection("a", kb, data, mesh=None, c=1.5, w0=3.6, t=32, k=10)
+    assert isinstance(col, Collection)
+    # a 1-device mesh can never fan out
+    col2 = open_collection(
+        "b", kb, data, mesh=mesh, max_points_per_shard=100,
+        c=1.5, w0=3.6, t=32, k=10,
+    )
+    assert isinstance(col2, Collection)

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import DBLSHParams, brute_force, build, search_batch_fixed
 from repro.core.updates import compact, delete, insert, live_count
@@ -88,6 +88,59 @@ def test_compact_after_delete(setup):
     # search works and never returns pre-compact ids >= 1500
     _, ids = search_batch_fixed(idx3, queries, k=5, r0=0.5, steps=8)
     assert np.asarray(ids).max() <= 1500
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(deadline=None, max_examples=4)
+def test_update_roundtrip_vs_brute_force(setup, seed):
+    """Property: insert -> delete -> compact round-trips against a
+    brute-force scan of the surviving point set — deleted ids are never
+    returned, surviving inserted points stay findable under the id map,
+    and live_count tracks every transition."""
+    data, extra, queries, index = setup
+    rng = np.random.default_rng(seed)
+    n0 = 2000
+    m = int(rng.integers(16, 96))
+    ins = extra[:m]
+    n_tot = n0 + m
+
+    idx2 = insert(index, ins)
+    assert live_count(idx2) == n_tot
+
+    n_del = int(rng.integers(10, 200))
+    del_ids = rng.choice(n_tot, size=n_del, replace=False).astype(np.int32)
+    idx3 = delete(idx2, jnp.asarray(del_ids))
+    assert live_count(idx3) == n_tot - n_del
+
+    # deleted ids can never be returned, even pre-compaction
+    _, ids = search_batch_fixed(idx3, queries, k=10, r0=0.5, steps=8)
+    leaked = set(del_ids.tolist()) & set(np.asarray(ids).reshape(-1).tolist())
+    assert not leaked, leaked
+
+    idx4, id_map = compact(idx3, jax.random.key(seed))
+    id_map = np.asarray(id_map)
+    assert idx4.n == n_tot - n_del
+    assert live_count(idx4) == idx4.n
+
+    # the compacted data is exactly the brute-force surviving scan
+    full = np.concatenate([np.asarray(data), np.asarray(ins)])
+    live_mask = np.ones(n_tot, bool)
+    live_mask[del_ids] = False
+    np.testing.assert_allclose(
+        np.asarray(idx4.data), full[live_mask], rtol=1e-6
+    )
+    assert np.all(id_map[~live_mask] == -1)
+    assert np.array_equal(np.sort(id_map[live_mask]), np.arange(idx4.n))
+
+    # a surviving inserted point is findable at its remapped id
+    surviving_ins = np.flatnonzero(live_mask[n0:]) + n0
+    if surviving_ins.size:
+        old_id = int(surviving_ins[0])
+        d, i2 = search_batch_fixed(
+            idx4, jnp.asarray(full[old_id][None]), k=1, r0=0.25, steps=8
+        )
+        assert int(i2[0, 0]) == int(id_map[old_id])
+        assert float(d[0, 0]) < 1e-3
 
 
 @given(m=st.integers(1, 130))
