@@ -1,8 +1,18 @@
-"""Sustained-QPS benchmark for the store service layer.
+"""Sustained-QPS benchmark for the store scheduler.
 
 Streams single queries through the StoreService admission queue at each
-(engine, batch-size) point, measures sustained QPS and per-request
-latency percentiles after a compile warmup, and emits a JSON report:
+(engine, batch-size) point in three modes — synchronous dispatch
+(``inflight_depth=0``), overlapped dispatch (the in-flight ring), and
+overlapped + query-result cache on a repeat-heavy stream — plus one
+multi-tenant point with a quota-limited tenant.  Emits a JSON report
+with per-point ``overlap_ratio`` / ``cache_hit_rate`` and per-tenant
+QPS.
+
+Caveat for CPU-only hosts: the "device" shares cores with the host, so
+overlapped dispatch has nothing to hide behind and lands within noise
+of sync (~0.95-1.05x) — the overlap win needs a real accelerator,
+where issue returns while the TPU/GPU runs the batch.  The cache mode
+is host-independent and shows its full gain everywhere.
 
     PYTHONPATH=src python benchmarks/store_throughput.py \
         [--scale 0.2] [--batch-sizes 8 32] [--engines jnp] \
@@ -29,49 +39,141 @@ except ImportError:
     from common import load_dataset, recall_and_ratio
 
 from repro.core import brute_force
-from repro.store import Collection, StoreService
+from repro.store import Collection, QuotaExceeded, StoreService
 
 
-def _bench_point(col, queries, *, batch_size: int, engine: str, k: int,
-                 n_queries: int, r0: float, steps: int) -> dict:
+def _make_service(col, *, batch_size: int, engine: str, k: int, r0: float,
+                  steps: int, inflight_depth: int, cache_size: int):
+    svc = StoreService(
+        batch_shapes=(batch_size,), max_wait_ms=1e9, default_k=k,
+        r0=r0, steps=steps, engine=engine, inflight_depth=inflight_depth,
+        cache_size=cache_size,
+    )
+    svc.attach(col)
+    return svc
+
+
+def _stream(svc, col_name, stream, batch_size):
+    # depth 0 completes each batch inside step() (synchronous); depth > 0
+    # leaves the ring full and only flush() syncs the tail.
+    t0 = time.perf_counter()
+    for q in stream:
+        svc.submit(col_name, q)
+        if svc.pending() >= batch_size:
+            svc.step()
+    svc.flush()
+    return time.perf_counter() - t0
+
+
+def _bench_modes(col, queries, *, batch_size: int, engine: str, k: int,
+                 n_queries: int, r0: float, steps: int,
+                 rounds: int = 3) -> dict:
+    """All three modes at one (engine, batch-size) point.
+
+    ``sync``/``overlapped`` measure dispatch on an all-unique stream
+    (cache off — the tiled stream repeats queries, and serving repeats
+    from the cache would measure the wrong thing); ``cached`` measures a
+    repeat-heavy stream with the cache on.  The modes are measured
+    *interleaved* round-robin and each keeps its best round: machine
+    speed drifts on shared hosts, and interleaving keeps the drift from
+    loading onto whichever mode happened to run last.
+    """
+    reps = -(-n_queries // queries.shape[0])
+    tiled = np.tile(queries, (reps, 1))[:n_queries]
+    # all-unique stream: perturb each row so no two are bit-equal
+    jitter = 1e-4 * np.arange(n_queries, dtype=np.float32)[:, None]
+    distinct = (tiled + jitter).astype(np.float32)
+    # repeat-heavy stream for the cache point: few uniques, many repeats
+    n_unique = max(1, min(queries.shape[0], n_queries // 4))
+    repeats = np.tile(queries[:n_unique], (-(-n_queries // n_unique), 1))
+    repeats = repeats[:n_queries].astype(np.float32)
+
+    # depth 2 = the two-stage pipeline (pad batch i+1 while the device
+    # runs batch i); much deeper rings contend on CPU.
+    modes = {
+        "sync": (distinct, 0, 0),
+        "overlapped": (distinct, 2, 0),
+        "cached": (repeats, 2, 4 * n_queries),
+    }
+
+    def run(mode):
+        stream, depth, cache_size = modes[mode]
+        svc = _make_service(
+            col, batch_size=batch_size, engine=engine, k=k, r0=r0,
+            steps=steps, inflight_depth=depth, cache_size=cache_size,
+        )
+        wall = _stream(svc, col.name, stream, batch_size)
+        return svc, wall
+
+    best: dict[str, tuple] = {}
+    for mode in modes:
+        run(mode)  # warmup: compiles the (batch_size, d) program
+    for _ in range(rounds):
+        for mode in modes:
+            svc, wall = run(mode)
+            if mode not in best or wall < best[mode][1]:
+                best[mode] = (svc, wall)
+
+    out = {}
+    for mode, (svc, wall) in best.items():
+        stats = svc.stats(col.name)
+        out[mode] = {
+            "mode": mode,
+            "engine": engine,
+            "batch_size": batch_size,
+            "inflight_depth": modes[mode][1],
+            "queries": n_queries,
+            "wall_s": wall,
+            "sustained_qps": n_queries / wall,
+            "latency_ms_p50": stats["latency_ms_p50"],
+            "latency_ms_p99": stats["latency_ms_p99"],
+            "mean_radius_steps": stats["mean_radius_steps"],
+            "mean_candidates": stats["mean_candidates"],
+            "batches": stats["batches"],
+            "overlap_ratio": stats["overlap_ratio"],
+            "cache_hit_rate": stats["cache_hit_rate"],
+        }
+    return out
+
+
+def _bench_tenants(col, queries, *, batch_size: int, engine: str, k: int,
+                   n_queries: int, r0: float, steps: int) -> dict:
+    """Two tenants share the queue: 'bulk' is unlimited, 'capped' has a
+    small token bucket.  Reports per-tenant QPS / rejects and shows WRR
+    draining keeps serving both."""
+    svc = _make_service(
+        col, batch_size=batch_size, engine=engine, k=k, r0=r0, steps=steps,
+        inflight_depth=4, cache_size=0,
+    )
+    svc.set_quota("bulk", weight=3)
+    svc.set_quota("capped", rate=200.0, burst=16, weight=1)
     reps = -(-n_queries // queries.shape[0])
     stream = np.tile(queries, (reps, 1))[:n_queries]
-
-    def run():
-        svc = StoreService(
-            batch_shapes=(batch_size,), max_wait_ms=1e9, default_k=k,
-            r0=r0, steps=steps, engine=engine,
-        )
-        svc.attach(col)
-        t0 = time.perf_counter()
-        for q in stream:
-            svc.submit(col.name, q)
-            if svc.pending() >= batch_size:
-                svc.step(force=True)
-        svc.flush()
-        return svc, time.perf_counter() - t0
-
-    run()  # warmup: compiles the (batch_size, d) program
-    svc, wall = run()
-    stats = svc.stats(col.name)
+    rejected = 0
+    t0 = time.perf_counter()
+    for i, q in enumerate(stream):
+        tenant = "capped" if i % 4 == 0 else "bulk"
+        try:
+            svc.submit(col.name, q, tenant=tenant)
+        except QuotaExceeded:
+            rejected += 1
+        if svc.pending() >= batch_size:
+            svc.step()
+    svc.flush()
+    wall = time.perf_counter() - t0
     return {
-        "engine": engine,
         "batch_size": batch_size,
-        "queries": n_queries,
+        "engine": engine,
         "wall_s": wall,
-        "sustained_qps": n_queries / wall,
-        "latency_ms_p50": stats["latency_ms_p50"],
-        "latency_ms_p99": stats["latency_ms_p99"],
-        "mean_radius_steps": stats["mean_radius_steps"],
-        "mean_candidates": stats["mean_candidates"],
-        "batches": stats["batches"],
+        "rejected": rejected,
+        "per_tenant": svc.tenant_stats(),
     }
 
 
 def main(
     scale: float = 0.2,
     dataset: str = "sift-s",
-    batch_sizes: tuple[int, ...] = (8, 32),
+    batch_sizes: tuple[int, ...] = (16, 32),
     engines: tuple[str, ...] = ("jnp",),
     n_queries: int = 128,
     k: int = 10,
@@ -79,7 +181,8 @@ def main(
 ):
     data, queries = load_dataset(dataset, scale=scale)
     col = Collection.create(
-        "bench", jax.random.key(1), data, c=1.5, t=64, k=k
+        "bench", jax.random.key(1), data, c=1.5, t=64, k=k,
+        payload=np.arange(data.shape[0]),  # realistic serving: ids ride along
     )
     # sanity: the collection actually answers (recall floor, not perf)
     d_, i_ = col.search(queries, k=k, r0=0.5, steps=8)
@@ -87,17 +190,43 @@ def main(
     rec, _ = recall_and_ratio(d_, i_, gt_d, gt_i, k)
 
     results = []
+    speedups = []
     for engine in engines:
         for bs in batch_sizes:
-            pt = _bench_point(
+            by_mode = _bench_modes(
                 col, queries, batch_size=bs, engine=engine, k=k,
                 n_queries=n_queries, r0=0.5, steps=8,
             )
-            results.append(pt)
-            print(
-                f"[{engine} bs={bs:3d}] {pt['sustained_qps']:8.1f} QPS  "
-                f"p50={pt['latency_ms_p50']:.1f}ms p99={pt['latency_ms_p99']:.1f}ms"
-            )
+            for mode, pt in by_mode.items():
+                results.append(pt)
+                print(
+                    f"[{engine} bs={bs:3d} {mode:>10s}] "
+                    f"{pt['sustained_qps']:8.1f} QPS  "
+                    f"p50={pt['latency_ms_p50']:.1f}ms "
+                    f"p99={pt['latency_ms_p99']:.1f}ms  "
+                    f"overlap={pt['overlap_ratio']:.2f} "
+                    f"cache={pt['cache_hit_rate']:.2f}"
+                )
+            speedups.append({
+                "engine": engine,
+                "batch_size": bs,
+                "overlapped_vs_sync": (
+                    by_mode["overlapped"]["sustained_qps"]
+                    / by_mode["sync"]["sustained_qps"]
+                ),
+                "cached_vs_sync": (
+                    by_mode["cached"]["sustained_qps"]
+                    / by_mode["sync"]["sustained_qps"]
+                ),
+            })
+
+    tenants = _bench_tenants(
+        col, queries, batch_size=batch_sizes[0], engine=engines[0], k=k,
+        n_queries=n_queries, r0=0.5, steps=8,
+    )
+    for t, s in tenants["per_tenant"].items():
+        print(f"[tenant {t:>8s}] served={s['served']} rejected={s['rejected']} "
+              f"qps={s['qps']:.1f}")
 
     report = {
         "dataset": dataset,
@@ -108,6 +237,8 @@ def main(
         "recall_at_k": rec,
         "device": str(jax.devices()[0]),
         "results": results,
+        "speedups": speedups,
+        "tenants": tenants,
     }
     with open(out, "w") as f:
         json.dump(report, f, indent=2)
@@ -119,7 +250,7 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=float, default=0.2)
     ap.add_argument("--dataset", default="sift-s")
-    ap.add_argument("--batch-sizes", type=int, nargs="+", default=[8, 32])
+    ap.add_argument("--batch-sizes", type=int, nargs="+", default=[16, 32])
     ap.add_argument("--engines", nargs="+", default=["jnp"])
     ap.add_argument("--n-queries", type=int, default=128)
     ap.add_argument("--out", default="store_throughput.json")

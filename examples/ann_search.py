@@ -1,7 +1,8 @@
 """ANN serving through the vector store: build a Collection, stream
-single queries through the StoreService micro-batching queue, mutate the
-collection online (add/remove -> auto-compaction), and report recall +
-service stats.
+single queries from two tenants through the StoreService scheduler
+(overlapped dispatch + query-result cache + per-tenant quotas), mutate
+the collection online (add/remove -> auto-compaction, which invalidates
+the cache by version), and report recall + scheduler stats.
 
     PYTHONPATH=src:. python examples/ann_search.py [--scale 0.25]
 
@@ -18,7 +19,7 @@ import numpy as np
 
 from benchmarks.common import load_dataset, recall_and_ratio
 from repro.core import brute_force
-from repro.store import Collection, CompactionPolicy, StoreService
+from repro.store import Collection, CompactionPolicy, QuotaExceeded, StoreService
 
 
 def main(scale: float = 0.25, dataset: str = "sift-s"):
@@ -38,20 +39,44 @@ def main(scale: float = 0.25, dataset: str = "sift-s"):
         policy=CompactionPolicy(growth_ratio=1.25),
         payload=np.arange(base.shape[0]),  # payload demo: row ids
     )
-    svc = StoreService(batch_shapes=(1, 8, 32), default_k=k, r0=0.5, steps=8)
+    svc = StoreService(
+        batch_shapes=(1, 8, 32), default_k=k, r0=0.5, steps=8,
+        inflight_depth=2,  # overlap: pad batch i+1 while the device runs i
+    )
     svc.attach(col)
+    # two tenants share the queue: 'web' gets 3x the batch share, 'batch'
+    # is capped to a small token bucket (over-quota submits are rejected)
+    svc.set_quota("web", weight=3)
+    svc.set_quota("batch", rate=50.0, burst=8, weight=1)
 
     # --- serve a stream of single queries through the admission queue ----
-    dists, ids, _ = svc.serve("demo", queries, k=k)
+    dists, ids, _ = svc.serve("demo", queries, k=k, tenant="web")
     gt_d, gt_i = brute_force(base, queries, k=k)
     rec, ratio = recall_and_ratio(dists, ids, gt_d, gt_i, k)
     print(f"[serve] recall@{k}={rec:.3f} ratio={ratio:.3f}")
+
+    # repeats hit the query-result cache (no device dispatch at all)
+    dists_c, ids_c, reqs_c = svc.serve("demo", queries, k=k, tenant="web")
+    assert all(r.cached for r in reqs_c) and np.array_equal(ids_c, ids)
+    rejected = 0
+    for q in queries:
+        try:
+            svc.submit("demo", q, k=k, tenant="batch")
+        except QuotaExceeded:
+            rejected += 1
+    svc.flush()
+    print(f"[tenants] {json.dumps(svc.tenant_stats(), indent=2)}")
     print(f"[stats] {json.dumps(svc.stats('demo'), indent=2)}")
+    print(f"[cache] {svc.cache_stats()} rejected={rejected}")
 
     # --- online growth: adds cross the policy threshold -> auto-compact ---
+    # (every mutation bumps col.version, so cached results can't go stale)
+    v0 = col.version
     col.add(extra, payload=np.arange(base.shape[0], data.shape[0]))
-    print(f"[update] n={col.n} compactions={col.stats.compactions}")
-    dists, ids, _ = svc.serve("demo", queries, k=k)
+    print(f"[update] n={col.n} compactions={col.stats.compactions} "
+          f"version {v0} -> {col.version}")
+    dists, ids, reqs = svc.serve("demo", queries, k=k, tenant="web")
+    assert not any(r.cached for r in reqs)  # old entries unreachable
     gt_d, gt_i = brute_force(data, queries, k=k)
     rec2, _ = recall_and_ratio(dists, ids, gt_d, gt_i, k)
     print(f"[serve] post-growth recall@{k}={rec2:.3f}")

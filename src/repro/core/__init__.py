@@ -14,7 +14,7 @@ from .hashing import collision_prob, project, sample_projections
 from .index import DBLSHIndex, build
 from .query import rc_nn, search, search_batch, probe_radius
 from .baselines import C2Index, FBLSH, MQIndex, brute_force
-from .serve_search import search_batch_fixed
+from .serve_search import PendingSearch, search_batch_fixed, search_batch_fixed_dispatch
 from .updates import compact, delete, insert, live_count
 
 __all__ = [
@@ -29,6 +29,8 @@ __all__ = [
     "search",
     "search_batch",
     "search_batch_fixed",
+    "search_batch_fixed_dispatch",
+    "PendingSearch",
     "rc_nn",
     "probe_radius",
     "brute_force",

@@ -26,7 +26,7 @@ import jax.numpy as jnp
 from .index import DBLSHIndex
 from .. import kernels
 
-__all__ = ["search_batch_fixed"]
+__all__ = ["search_batch_fixed", "search_batch_fixed_dispatch", "PendingSearch"]
 
 _INF = jnp.inf
 
@@ -187,3 +187,75 @@ def search_batch_fixed(
         stats = {"radius_steps": radius_steps, "candidates": candidates}
         return jnp.sqrt(best_d), best_i, stats
     return jnp.sqrt(best_d), best_i
+
+
+class PendingSearch:
+    """Handle for an issued-but-not-awaited ``search_batch_fixed`` call.
+
+    JAX dispatch is asynchronous: the jitted search returns device
+    futures immediately, and the host only stalls when it *reads* them.
+    This handle makes the two stages explicit so a serving loop can
+    issue batch i+1 (host-side padding, slicing, queue work) while the
+    device still executes batch i:
+
+        pending = search_batch_fixed_dispatch(index, Q, k=10)
+        ...host work for the next batch...
+        dists, ids = pending.result()        # first host sync
+
+    ``ready()`` is a non-blocking readiness probe (used by the store
+    scheduler to opportunistically retire in-flight batches).
+    """
+
+    __slots__ = ("dists", "ids", "stats")
+
+    def __init__(self, dists, ids, stats=None):
+        self.dists = dists
+        self.ids = ids
+        self.stats = stats
+
+    def _leaves(self):
+        leaves = [self.dists, self.ids]
+        if self.stats is not None:
+            leaves.extend(jax.tree_util.tree_leaves(self.stats))
+        return leaves
+
+    def ready(self) -> bool:
+        """True once every output buffer has materialized (never blocks)."""
+        return all(
+            x.is_ready() for x in self._leaves() if hasattr(x, "is_ready")
+        )
+
+    def result(self):
+        """Block until complete; returns (dists, ids[, stats])."""
+        jax.block_until_ready(self._leaves())
+        if self.stats is not None:
+            return self.dists, self.ids, self.stats
+        return self.dists, self.ids
+
+
+def search_batch_fixed_dispatch(
+    index: DBLSHIndex,
+    Q: jax.Array,
+    k: int = 0,
+    r0: float = 1.0,
+    steps: int = 8,
+    engine: str = "jnp",
+    interpret=None,
+    with_stats: bool = False,
+) -> PendingSearch:
+    """Issue a fixed-schedule search without blocking on the device.
+
+    Same arguments and numerics as :func:`search_batch_fixed` (it *is*
+    the same compiled program — bit-equality between the overlapped and
+    synchronous paths is by construction), but the return value is a
+    :class:`PendingSearch` whose ``result()`` performs the only host
+    sync.  This is the dispatch half of the store scheduler's two-stage
+    pipeline.
+    """
+    out = search_batch_fixed(
+        index, Q, k=k, r0=r0, steps=steps, engine=engine,
+        interpret=interpret, with_stats=with_stats,
+    )
+    if with_stats:
+        return PendingSearch(out[0], out[1], out[2])
+    return PendingSearch(out[0], out[1])

@@ -9,12 +9,21 @@ Module map (and how it relates to the rest of the repo):
   sizing or tombstones hollow the index), and persists through
   ``checkpoint.Checkpointer`` (``snapshot`` / ``restore``).
 
-* ``service``     — :class:`StoreService`: the request frontend.  An
-  admission queue coalesces single queries into micro-batches padded to
-  a fixed menu of batch shapes (one XLA program per shape), dispatches
-  through ``core.serve_search.search_batch_fixed`` with engine selection
-  (``jnp`` | ``kernel`` | ``inline``), and aggregates per-collection
-  QPS / latency-percentile / probe-effort stats.
+* ``service``     — :class:`StoreService`: the request scheduler.
+  Per-tenant admission queues (token-bucket quotas, weighted
+  round-robin draining) coalesce single queries into micro-batches
+  padded to a fixed menu of batch shapes (one XLA program per shape),
+  issued *overlapped* — the device executes batch i while the host pads
+  batch i+1, up to ``inflight_depth`` deep — through
+  ``core.serve_search.search_batch_fixed`` with engine selection
+  (``jnp`` | ``kernel`` | ``inline``).  Aggregates per-collection QPS /
+  latency-percentile / probe-effort / cache / overlap stats and
+  per-tenant admission stats.
+
+* ``cache``       — :class:`QueryResultCache`: LRU over
+  (collection, version, query, k, engine, r0, steps).  Collection
+  mutations bump the version, so invalidation is by construction; see
+  DESIGN.md §6 for the contract.
 
 * ``router``      — :class:`ShardedCollection` + :func:`open_collection`:
   the same Collection query surface over ``core.distributed.ShardedDBLSH``
@@ -43,16 +52,22 @@ Typical use::
     print(ticket.dists, ticket.ids, svc.stats("docs"))
 """
 
-from .collection import Collection, CollectionStats, CompactionPolicy
+from .cache import CachedResult, QueryResultCache
+from .collection import Collection, CollectionStats, CompactionPolicy, version_clock
 from .router import ShardedCollection, open_collection
-from .service import QueryRequest, StoreService
+from .service import QueryRequest, QuotaExceeded, StoreService, TenantQuota
 
 __all__ = [
+    "CachedResult",
     "Collection",
     "CollectionStats",
     "CompactionPolicy",
     "QueryRequest",
+    "QueryResultCache",
+    "QuotaExceeded",
     "ShardedCollection",
     "StoreService",
+    "TenantQuota",
     "open_collection",
+    "version_clock",
 ]

@@ -1,0 +1,113 @@
+"""Query-result cache for the store layer: version-keyed LRU.
+
+DB-LSH queries are read-mostly and heavily repeated in real serving
+traffic (the same embedding re-queried across sessions, retries, or
+kNN-LM decode loops), yet every repeat re-runs the full window-query
+cascade.  :class:`QueryResultCache` short-circuits exact repeats at the
+service frontend.
+
+Invalidation is by **version**, not by flushing: the cache key embeds
+the collection's monotonic ``version`` (bumped by ``add`` / ``remove``
+/ ``compact``, refreshed on ``restore`` — see
+:mod:`repro.store.collection`), so a mutation never has to find and
+evict its stale entries — they simply stop matching and age out of the
+LRU.  Version equality implies state equality (the version clock is
+process-wide), which gives the contract the property tests pin down: a
+cache hit is bit-identical to a fresh search at the collection's
+current version.
+
+Keys quantize the query to float32 bytes — the same dtype the dispatch
+path casts to — so a hit requires a bit-exact query.  An optional
+``quantize`` (decimal places) widens hits to near-identical queries at
+the cost of exactness; it is **off by default** because it breaks the
+bit-equality contract and is only safe for readers that tolerate
+approximate neighbors anyway.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass
+
+import numpy as np
+
+__all__ = ["CachedResult", "QueryResultCache"]
+
+
+@dataclass(frozen=True)
+class CachedResult:
+    """One cached service-k result row (sliced to per-request k on hit)."""
+
+    dists: np.ndarray          # (k_service,) ascending
+    ids: np.ndarray            # (k_service,)
+    payload: np.ndarray | None  # (k_service, ...) when the collection has one
+    radius_steps: int
+    candidates: int
+
+
+class QueryResultCache:
+    """Bounded LRU over (collection, version, query-bytes, k, engine, r0,
+    steps) -> :class:`CachedResult`."""
+
+    def __init__(self, capacity: int = 4096, quantize: int | None = None):
+        assert capacity > 0
+        self.capacity = capacity
+        self.quantize = quantize
+        self._entries: OrderedDict[tuple, CachedResult] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    # ------------------------------------------------------------------ keys
+    def _qbytes(self, query: np.ndarray) -> bytes:
+        q = np.ascontiguousarray(query, np.float32)
+        if self.quantize is not None:
+            q = np.round(q, self.quantize)
+        return q.tobytes()
+
+    def key(
+        self, collection: str, version: int, query, k: int, engine: str,
+        r0: float, steps: int,
+    ) -> tuple:
+        return (collection, version, self._qbytes(query), k, engine, r0, steps)
+
+    # ---------------------------------------------------------------- access
+    def get(self, key: tuple) -> CachedResult | None:
+        entry = self._entries.get(key)
+        if entry is None:
+            self.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.hits += 1
+        return entry
+
+    def put(self, key: tuple, entry: CachedResult) -> None:
+        self._entries[key] = entry
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+
+    def invalidate(self, collection: str | None = None) -> int:
+        """Drop entries for one collection (or everything).  Only needed
+        for explicit teardown — version keys already make stale entries
+        unreachable after a mutation."""
+        if collection is None:
+            n = len(self._entries)
+            self._entries.clear()
+            return n
+        drop = [k for k in self._entries if k[0] == collection]
+        for k in drop:
+            del self._entries[k]
+        return len(drop)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def stats(self) -> dict:
+        total = self.hits + self.misses
+        return {
+            "size": len(self._entries),
+            "capacity": self.capacity,
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_rate": self.hits / total if total else float("nan"),
+        }

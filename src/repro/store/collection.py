@@ -18,8 +18,18 @@ lifecycle:
   triggers ``compact`` — a rebuild with freshly derived K/L — and the
   payload is permuted through the returned id map;
 * ``snapshot`` / ``restore`` persist the whole state (index arrays,
-  payload, PRNG key, policy, counters) through
+  payload, PRNG key, policy, counters, version) through
   ``checkpoint.Checkpointer``'s atomic step directories.
+
+Every mutation (``add`` / ``remove`` / ``compact``) advances a
+**version** drawn from a process-wide monotonic clock.  The version is
+the cache-invalidation token for the store layer (DESIGN.md §6): a
+query result cached under ``(name, version, ...)`` can only ever be
+served while the collection is bit-identical to the state that produced
+it.  ``restore`` deliberately assigns a *fresh* version past both the
+persisted one and everything the process has handed out — two
+collections diverging from one snapshot (or a restore racing live
+updates) must never alias each other's cache entries.
 
 Repeated small ``add`` calls append padded STR blocks per call; the waste
 is bounded by ``block_size - 1`` slots per add per table and is reclaimed
@@ -39,7 +49,34 @@ from ..core import DBLSHParams, build, search_batch_fixed
 from ..core.index import DBLSHIndex
 from ..core import updates as _updates
 
-__all__ = ["CompactionPolicy", "CollectionStats", "Collection"]
+__all__ = ["CompactionPolicy", "CollectionStats", "Collection", "version_clock"]
+
+
+class _VersionClock:
+    """Process-wide monotonic source of collection versions.
+
+    A plain per-collection counter would alias: two collections restored
+    from the same snapshot both sit at version v yet may diverge, and a
+    cache keyed on (name, v) would serve one the other's results.  A
+    single process-wide clock makes every (mutation, restore) event
+    globally unique, so version equality implies state equality.
+    """
+
+    def __init__(self):
+        self._v = 0
+
+    def next(self) -> int:
+        self._v += 1
+        return self._v
+
+    def advance_past(self, v: int) -> int:
+        """A fresh version strictly greater than both ``v`` and anything
+        already handed out (used by restore)."""
+        self._v = max(self._v, int(v))
+        return self.next()
+
+
+version_clock = _VersionClock()
 
 _INDEX_ARRAY_FIELDS = (
     "proj_vecs",
@@ -86,6 +123,7 @@ class Collection:
         key: jax.Array | None = None,
         built_n: int | None = None,
         stats: CollectionStats | None = None,
+        version: int | None = None,
     ):
         if payload is not None:
             payload = jnp.asarray(payload)
@@ -97,6 +135,7 @@ class Collection:
         self._key = jax.random.key(0) if key is None else key
         self.built_n = index.n if built_n is None else built_n
         self.stats = stats or CollectionStats()
+        self.version = version_clock.next() if version is None else version
 
     # ------------------------------------------------------------ construction
     @classmethod
@@ -160,6 +199,7 @@ class Collection:
                 [self.payload, jnp.asarray(payload)], axis=0
             )
         self.stats.inserted += m
+        self.version = version_clock.next()
         id_map = self._maybe_compact()
         if id_map is not None:
             ids = id_map[ids]
@@ -174,6 +214,7 @@ class Collection:
         ids = jnp.atleast_1d(jnp.asarray(ids, jnp.int32))
         self.index = _updates.delete(self.index, ids)
         self.stats.deleted += int(ids.shape[0])
+        self.version = version_clock.next()
         return self._maybe_compact()
 
     # ------------------------------------------------------------- compaction
@@ -195,6 +236,7 @@ class Collection:
             self.payload = jnp.asarray(self.payload)[live_old]
         self.built_n = self.index.n
         self.stats.compactions += 1
+        self.version = version_clock.next()
         return id_map
 
     def _maybe_compact(self) -> np.ndarray | None:
@@ -212,13 +254,22 @@ class Collection:
         steps: int = 8,
         engine: str = "jnp",
         with_stats: bool = False,
+        interpret: bool | None = None,
+        rows: int | None = None,
     ):
-        """Batched (c,k)-ANN through the fixed-schedule serving path."""
+        """Batched (c,k)-ANN through the fixed-schedule serving path.
+
+        ``rows`` is the number of *real* query rows when ``Q`` carries
+        padding (the StoreService pads to its fixed batch-shape menu);
+        the query counter advances by ``rows``, not the padded shape.
+        The returned arrays are device futures — nothing here blocks, so
+        a caller may overlap host work with the search (DESIGN.md §6).
+        """
         Q = jnp.atleast_2d(jnp.asarray(Q, jnp.float32))
-        self.stats.queries += int(Q.shape[0])
+        self.stats.queries += int(Q.shape[0]) if rows is None else int(rows)
         return search_batch_fixed(
             self.index, Q, k=k, r0=r0, steps=steps, engine=engine,
-            with_stats=with_stats,
+            with_stats=with_stats, interpret=interpret,
         )
 
     def get_payload(self, ids):
@@ -253,6 +304,7 @@ class Collection:
             "built_n": self.built_n,
             "stats": self.stats.as_dict(),
             "has_payload": self.payload is not None,
+            "version": self.version,
         }
         ck.save(step, tree, meta)
         return step
@@ -274,5 +326,9 @@ class Collection:
             key=jax.random.wrap_key_data(jnp.asarray(tree["prng_key"])),
             built_n=meta["built_n"],
             stats=CollectionStats(**meta["stats"]),
+            # fresh version past the persisted one: a restored collection
+            # must never alias cache entries of any live (possibly
+            # diverged) collection with the same name — see module doc.
+            version=version_clock.advance_past(meta.get("version", 0)),
         )
         return col

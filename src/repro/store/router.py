@@ -23,7 +23,7 @@ import numpy as np
 
 from ..core import DBLSHParams
 from ..core.distributed import ShardedDBLSH, build_sharded, search_sharded
-from .collection import Collection, CompactionPolicy
+from .collection import Collection, CompactionPolicy, version_clock
 
 __all__ = ["ShardedCollection", "open_collection"]
 
@@ -45,6 +45,10 @@ class ShardedCollection:
         self.payload = None if payload is None else jnp.asarray(payload)
         if self.payload is not None:
             assert self.payload.shape[0] == sharded.n_total
+        # read-only collection: the version is fixed at creation but still
+        # drawn from the shared clock so service-level caches key on it
+        # exactly like a local Collection's.
+        self.version = version_clock.next()
 
     @classmethod
     def create(
@@ -86,11 +90,15 @@ class ShardedCollection:
         steps: int = 8,
         engine: str = "jnp",
         with_stats: bool = False,
+        interpret: bool | None = None,
+        rows: int | None = None,
     ):
         """Global (c,k)-ANN: per-shard fixed-schedule search + all_gather
-        top-k merge. ``engine`` is accepted for API parity; the sharded
-        path always verifies through the jnp engine."""
-        del engine
+        top-k merge. ``engine`` / ``interpret`` are accepted for API
+        parity; the sharded path always verifies through the jnp engine.
+        ``rows`` (real rows in a service-padded batch) is accepted for
+        parity too — the sharded collection keeps no query counter."""
+        del engine, interpret, rows
         Q = jnp.atleast_2d(jnp.asarray(Q, jnp.float32))
         k = k or self.sharded.index.params.k
         d, i = search_sharded(

@@ -1,41 +1,65 @@
-"""StoreService: the query-serving frontend over named collections.
+"""StoreService: the overlapped, multi-tenant query scheduler.
 
 Single queries arrive one at a time (``submit``) and would waste the
 vector units if dispatched alone, but XLA recompiles on every new batch
-shape — so the service coalesces an **admission queue** into dynamic
-micro-batches padded to a small fixed menu of batch shapes:
+shape — so the service coalesces per-(collection, tenant) **admission
+queues** into dynamic micro-batches padded to a small fixed menu of
+batch shapes.  v2 turns the synchronous dispatch loop into an actual
+serving scheduler with three independent mechanisms:
 
-* a queue drains when it can fill the largest batch shape, when its
-  oldest request has waited ``max_wait_ms``, or on ``flush()``;
-* the drained requests are padded (zero query rows) up to the smallest
-  ``batch_shapes`` entry that fits, so every dispatch hits one of
-  ``len(batch_shapes)`` compiled programs per engine;
-* results are sliced back per request.  The fixed-schedule search is
-  row-independent (every op in ``search_batch_fixed`` maps over the
-  query axis), so padding cannot perturb a real request's result — the
-  end-to-end test asserts bit-equality against a direct batched call.
+**Overlapped dispatch.**  ``_dispatch`` is split into an *issue* stage
+(host-side padding + the jitted ``search_batch_fixed`` call, which
+returns device futures without blocking) and a *complete* stage (the
+only host sync).  Issued batches sit in an in-flight ring of depth
+``inflight_depth``; while the device executes batch *i*, the host pads
+and issues batch *i+1*.  ``inflight_depth=0`` recovers the synchronous
+v1 behavior exactly — both paths run the same compiled program, so
+results are bit-identical by construction (the scheduler tests assert
+this for every batch shape, timeout drains included).
+
+**Query-result cache.**  An LRU (:mod:`repro.store.cache`) keyed on
+(collection, *version*, query bytes, k, engine, r0, steps).  The
+version is the collection's monotonic mutation counter, so
+``add``/``remove``/``compact``/``restore`` invalidate by construction:
+stale entries stop matching rather than needing eviction.  Hits are
+served at drain time without touching the device.
+
+**Admission control.**  Per-tenant token buckets (``set_quota``) reject
+over-quota ``submit`` calls with :class:`QuotaExceeded`, and ``step``
+drains the per-tenant queues weighted-round-robin so one hot tenant
+cannot starve the rest of a batch.  Per-tenant served/rejected/QPS
+stats sit alongside the per-collection QPS/latency/probe snapshot.
+
+Time is read exclusively through an injectable ``clock`` (defaults to
+``time.monotonic``) so quota refill, timeout drains, and latency
+percentiles are deterministic under test.
 
 Top-k is a *service-level* constant (``default_k``): per-request ``k``
-may be any value up to it and is sliced from the service-k result, which
-keeps the dispatch shape set closed.  Per-collection stats aggregate
-QPS, latency percentiles, padding efficiency, and the per-query probe
-stats (radius steps, candidates fetched) from the search engine.
-
-Any object with ``search(Q, k=..., r0=..., steps=..., engine=...,
-with_stats=...)`` and ``name`` can be attached — a local
-:class:`~repro.store.collection.Collection` or the sharded router
-wrapper in :mod:`repro.store.router`.
+may be any value up to it and is sliced from the service-k result
+(cached entries store the full service-k row), which keeps the dispatch
+shape set closed.  Any object with ``search(Q, k=..., r0=..., steps=...,
+engine=..., with_stats=..., rows=...)``, ``name``, and ``version`` can
+be attached — a local :class:`~repro.store.collection.Collection` or
+the sharded router wrapper in :mod:`repro.store.router`.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from collections import deque
 
 import numpy as np
 
-__all__ = ["QueryRequest", "StoreService"]
+from ..core.serve_search import PendingSearch
+from .cache import CachedResult, QueryResultCache
+
+__all__ = ["QueryRequest", "QuotaExceeded", "StoreService", "TenantQuota"]
+
+
+class QuotaExceeded(RuntimeError):
+    """Raised by ``submit`` when the tenant's token bucket is empty."""
 
 
 @dataclasses.dataclass
@@ -47,7 +71,9 @@ class QueryRequest:
     query: np.ndarray  # (d,)
     k: int
     submitted: float
+    tenant: str = "default"
     done: bool = False
+    cached: bool = False              # served from the query-result cache
     dists: np.ndarray | None = None   # (k,) ascending; +inf = unfilled slot
     ids: np.ndarray | None = None     # (k,) neighbor ids; index.n = sentinel
     payload: object = None            # payload rows when the collection has one
@@ -56,28 +82,118 @@ class QueryRequest:
     candidates: int = 0
 
 
+@dataclasses.dataclass(frozen=True)
+class TenantQuota:
+    """Admission policy for one tenant.
+
+    ``rate`` is the sustained queries/second refill, ``burst`` the bucket
+    capacity (defaults to ``rate``, min 1), ``weight`` the tenant's share
+    when a batch drains multiple tenants round-robin."""
+
+    rate: float = math.inf
+    burst: float | None = None
+    weight: int = 1
+
+    @property
+    def capacity(self) -> float:
+        if self.burst is not None:
+            return self.burst
+        return self.rate if math.isfinite(self.rate) else math.inf
+
+
+class _TokenBucket:
+    def __init__(self, quota: TenantQuota, now: float):
+        self.quota = quota
+        self.tokens = max(1.0, quota.capacity) if math.isfinite(quota.capacity) else math.inf
+        self.t_last = now
+
+    def try_take(self, now: float) -> bool:
+        if math.isinf(self.tokens):
+            return True
+        self.tokens = min(
+            max(1.0, self.quota.capacity),
+            self.tokens + (now - self.t_last) * self.quota.rate,
+        )
+        self.t_last = now
+        if self.tokens >= 1.0:
+            self.tokens -= 1.0
+            return True
+        return False
+
+
+class _TenantStats:
+    def __init__(self):
+        self.submitted = 0
+        self.served = 0
+        self.rejected = 0
+        self.cache_hits = 0
+        self.t_first: float | None = None
+        self.t_last: float | None = None
+
+    def record_served(self, req: QueryRequest, now: float):
+        self.served += 1
+        if req.cached:
+            self.cache_hits += 1
+        if self.t_first is None or req.submitted < self.t_first:
+            self.t_first = req.submitted
+        self.t_last = now
+
+    def snapshot(self) -> dict:
+        span = (
+            (self.t_last - self.t_first)
+            if (self.t_first is not None and self.t_last > self.t_first)
+            else 0.0
+        )
+        return {
+            "submitted": self.submitted,
+            "served": self.served,
+            "rejected": self.rejected,
+            "cache_hits": self.cache_hits,
+            "qps": self.served / span if span > 0 else float("nan"),
+        }
+
+
 class _CollectionStats:
     def __init__(self):
         self.served = 0
         self.batches = 0
+        self.batches_overlapped = 0
+        self.cache_hits = 0
         self.padded_slots = 0
-        self.latencies_ms: list[float] = []
+        # bounded reservoir: percentiles over the most recent window, so
+        # a long-lived serving process doesn't grow memory per request
+        self.latencies_ms: deque[float] = deque(maxlen=8192)
         self.radius_steps = 0
         self.candidates = 0
         self.t_first: float | None = None
         self.t_last: float | None = None
 
-    def record_batch(self, reqs, shape, now):
+    def _record_req(self, r: QueryRequest):
+        self.latencies_ms.append(r.latency_ms)
+        self.radius_steps += r.radius_steps
+        self.candidates += r.candidates
+
+    def record_batch(self, reqs, shape, now, *, overlapped: bool):
         self.served += len(reqs)
         self.batches += 1
+        self.batches_overlapped += int(overlapped)
         self.padded_slots += shape - len(reqs)
-        if self.t_first is None:
-            self.t_first = min(r.submitted for r in reqs)
+        first = min(r.submitted for r in reqs)
+        # min-merge: a cache hit may have recorded a later t_first while
+        # this batch sat in the in-flight ring
+        if self.t_first is None or first < self.t_first:
+            self.t_first = first
         self.t_last = now
         for r in reqs:
-            self.latencies_ms.append(r.latency_ms)
-            self.radius_steps += r.radius_steps
-            self.candidates += r.candidates
+            self._record_req(r)
+
+    def record_hit(self, req: QueryRequest, now: float):
+        self.served += 1
+        self.cache_hits += 1
+        if self.t_first is None or req.submitted < self.t_first:
+            self.t_first = req.submitted
+        self.t_last = now
+        self._record_req(req)
 
     def snapshot(self) -> dict:
         lat = np.asarray(self.latencies_ms, np.float64)
@@ -98,11 +214,33 @@ class _CollectionStats:
                 self.served / (self.served + self.padded_slots)
                 if self.served else float("nan")
             ),
+            "cache_hits": self.cache_hits,
+            "cache_hit_rate": (
+                self.cache_hits / self.served if self.served else float("nan")
+            ),
+            "overlap_ratio": (
+                self.batches_overlapped / self.batches
+                if self.batches else float("nan")
+            ),
         }
 
 
+@dataclasses.dataclass
+class _InFlight:
+    """One issued-but-not-completed batch in the overlap ring."""
+
+    name: str
+    reqs: list[QueryRequest]
+    shape: int
+    pending: PendingSearch
+    payload: object        # device future (m, k, ...) or None
+    version: int | None    # version the results belong to; None = uncacheable
+    overlapped: bool       # issued while another batch was in flight
+
+
 class StoreService:
-    """Admission queue + dynamic micro-batching over attached collections."""
+    """Admission control + overlapped micro-batch scheduling over
+    attached collections."""
 
     def __init__(
         self,
@@ -113,24 +251,42 @@ class StoreService:
         r0: float = 1.0,
         steps: int = 8,
         engine: str = "jnp",
+        interpret: bool | None = None,
+        inflight_depth: int = 2,
+        cache: QueryResultCache | None = None,
+        cache_size: int = 1024,
+        clock=time.monotonic,
     ):
         assert batch_shapes == tuple(sorted(batch_shapes)) and batch_shapes
+        assert inflight_depth >= 0
         self.batch_shapes = batch_shapes
         self.max_wait_ms = max_wait_ms
         self.default_k = default_k
         self.r0 = r0
         self.steps = steps
         self.engine = engine
+        self.interpret = interpret
+        self.inflight_depth = inflight_depth
+        if cache is not None:
+            self.cache = cache
+        else:
+            self.cache = QueryResultCache(cache_size) if cache_size > 0 else None
+        self._clock = clock
         self.collections: dict[str, object] = {}
-        self._queues: dict[str, deque[QueryRequest]] = {}
+        self.quotas: dict[str, TenantQuota] = {}
+        self._buckets: dict[str, _TokenBucket] = {}
+        self._queues: dict[str, dict[str, deque[QueryRequest]]] = {}
+        self._rr_pos: dict[str, int] = {}
         self._stats: dict[str, _CollectionStats] = {}
+        self._tenant_stats: dict[str, _TenantStats] = {}
+        self._inflight: deque[_InFlight] = deque()
         self._uid = 0
 
     # ----------------------------------------------------------------- admin
     def attach(self, collection) -> None:
         """Register a Collection (or any search-compatible object)."""
         self.collections[collection.name] = collection
-        self._queues.setdefault(collection.name, deque())
+        self._queues.setdefault(collection.name, {})
         self._stats.setdefault(collection.name, _CollectionStats())
 
     def create_collection(self, name: str, key, data, **kw):
@@ -141,18 +297,40 @@ class StoreService:
         return col
 
     def drop_collection(self, name: str) -> None:
-        if self._queues.get(name):
+        if any(q for q in self._queues.get(name, {}).values()):
             raise RuntimeError(f"collection {name!r} has pending requests")
+        if any(b.name == name for b in self._inflight):
+            raise RuntimeError(f"collection {name!r} has in-flight batches")
         self.collections.pop(name, None)
         self._queues.pop(name, None)
         self._stats.pop(name, None)
+        self._rr_pos.pop(name, None)
+        if self.cache is not None:
+            self.cache.invalidate(name)
+
+    def set_quota(
+        self, tenant: str, *, rate: float = math.inf,
+        burst: float | None = None, weight: int = 1,
+    ) -> TenantQuota:
+        """Install (or replace) a tenant's admission policy; the token
+        bucket restarts full at the next ``submit``."""
+        assert weight >= 1
+        quota = TenantQuota(rate=rate, burst=burst, weight=weight)
+        self.quotas[tenant] = quota
+        self._buckets.pop(tenant, None)  # rebuilt lazily from the new quota
+        return quota
 
     def __getitem__(self, name: str):
         return self.collections[name]
 
     # ---------------------------------------------------------------- submit
-    def submit(self, collection: str, query, k: int | None = None) -> QueryRequest:
-        """Enqueue one query; returns its ticket (filled once dispatched)."""
+    def submit(
+        self, collection: str, query, k: int | None = None,
+        tenant: str = "default",
+    ) -> QueryRequest:
+        """Enqueue one query; returns its ticket (filled once dispatched).
+        Raises :class:`QuotaExceeded` when the tenant is over quota —
+        rejected requests are never enqueued."""
         if collection not in self.collections:
             raise KeyError(f"unknown collection {collection!r}")
         k = self.default_k if k is None else k
@@ -161,43 +339,91 @@ class StoreService:
                 f"k={k} exceeds service default_k={self.default_k}; raise "
                 "default_k at construction (k is compiled into the dispatch)"
             )
+        now = self._clock()
+        tstats = self._tenant_stats.setdefault(tenant, _TenantStats())
+        bucket = self._buckets.get(tenant)
+        if bucket is None:
+            bucket = _TokenBucket(self.quotas.get(tenant, TenantQuota()), now)
+            self._buckets[tenant] = bucket
+        if not bucket.try_take(now):
+            tstats.rejected += 1
+            raise QuotaExceeded(
+                f"tenant {tenant!r} over quota "
+                f"(rate={bucket.quota.rate}/s, burst={bucket.quota.capacity})"
+            )
         req = QueryRequest(
             uid=self._uid,
             collection=collection,
             query=np.asarray(query, np.float32).reshape(-1),
             k=k,
-            submitted=time.monotonic(),
+            submitted=now,
+            tenant=tenant,
         )
         self._uid += 1
-        self._queues[collection].append(req)
+        self._queues[collection].setdefault(tenant, deque()).append(req)
+        tstats.submitted += 1
         return req
 
     def pending(self) -> int:
-        return sum(len(q) for q in self._queues.values())
+        """Queued (not yet issued) requests."""
+        return sum(
+            len(q) for per in self._queues.values() for q in per.values()
+        )
+
+    def in_flight(self) -> int:
+        """Requests issued to the device but not yet completed."""
+        return sum(len(b.reqs) for b in self._inflight)
 
     # -------------------------------------------------------------- dispatch
     def step(self, force: bool = False) -> int:
-        """One scheduler pass: drain every queue that is full enough (or
-        whose head request timed out, or everything when ``force``).
-        Returns the number of requests dispatched."""
-        now = time.monotonic()
-        dispatched = 0
+        """One scheduler pass.
+
+        Retires any in-flight batches that are already ready (never
+        blocks for them), then drains every collection whose queues are
+        full enough (or whose oldest request timed out, or everything
+        when ``force``) — serving cache hits inline and issuing the rest
+        without waiting on the device, up to ``inflight_depth`` batches
+        deep.  With ``force`` the pass ends fully synchronous: every
+        in-flight batch is completed before returning.  Returns the
+        number of requests drained (hits + issued)."""
+        self.poll()
+        now = self._clock()
+        drained = 0
         cap = self.batch_shapes[-1]
-        for name, queue in self._queues.items():
-            while queue:
-                timed_out = (now - queue[0].submitted) * 1e3 >= self.max_wait_ms
-                if not (force or timed_out or len(queue) >= cap):
+        for name, per_tenant in self._queues.items():
+            while True:
+                total = sum(len(q) for q in per_tenant.values())
+                if total == 0:
                     break
-                reqs = [queue.popleft() for _ in range(min(cap, len(queue)))]
-                self._dispatch(name, reqs)
-                dispatched += len(reqs)
-        return dispatched
+                oldest = min(q[0].submitted for q in per_tenant.values() if q)
+                timed_out = (now - oldest) * 1e3 >= self.max_wait_ms
+                if not (force or timed_out or total >= cap):
+                    break
+                reqs = self._drain_wrr(name, cap)
+                drained += len(reqs)
+                misses = self._serve_cached(name, reqs)
+                if misses:
+                    self._issue(name, misses)
+        if force:
+            self._complete_all()
+        return drained
+
+    def poll(self) -> int:
+        """Retire ready in-flight batches without blocking; returns the
+        number of batches completed. Completion stays in issue order —
+        the ring head is the only candidate."""
+        done = 0
+        while self._inflight and self._inflight[0].pending.ready():
+            self._complete(self._inflight.popleft())
+            done += 1
+        return done
 
     def flush(self) -> int:
-        """Dispatch everything pending; returns requests served."""
+        """Drain and complete everything pending; returns requests served."""
         total = 0
         while self.pending():
             total += self.step(force=True)
+        self._complete_all()
         return total
 
     def _shape_for(self, m: int) -> int:
@@ -206,7 +432,76 @@ class StoreService:
                 return s
         return self.batch_shapes[-1]
 
-    def _dispatch(self, name: str, reqs: list[QueryRequest]) -> None:
+    def _drain_wrr(self, name: str, cap: int) -> list[QueryRequest]:
+        """Pop up to ``cap`` requests across the collection's tenant
+        queues, weighted round-robin: each cycle visits the non-empty
+        tenants in rotated order and takes up to ``quota.weight`` from
+        each, so a backlogged tenant gets its share — never the whole
+        batch — while light tenants pass through untouched."""
+        per_tenant = self._queues[name]
+        tenants = sorted(t for t, q in per_tenant.items() if q)
+        if not tenants:
+            return []
+        start = self._rr_pos.get(name, 0) % len(tenants)
+        order = tenants[start:] + tenants[:start]
+        self._rr_pos[name] = self._rr_pos.get(name, 0) + 1
+        out: list[QueryRequest] = []
+        while len(out) < cap and any(per_tenant[t] for t in order):
+            for t in order:
+                weight = max(1, self.quotas.get(t, TenantQuota()).weight)
+                for _ in range(weight):
+                    if len(out) >= cap or not per_tenant[t]:
+                        break
+                    out.append(per_tenant[t].popleft())
+                if len(out) >= cap:
+                    break
+        return out
+
+    # ------------------------------------------------------------- the cache
+    def _cache_key(self, name: str, version: int, query: np.ndarray):
+        return self.cache.key(
+            name, version, query, self.default_k, self.engine, self.r0,
+            self.steps,
+        )
+
+    def _serve_cached(self, name: str, reqs: list[QueryRequest]):
+        """Fill cache hits in place; returns the misses to dispatch."""
+        if self.cache is None:
+            return reqs
+        # no version attribute -> no invalidation signal: never cache
+        # (serving version-0 hits forever is exactly the staleness the
+        # version contract exists to prevent)
+        version = getattr(self.collections[name], "version", None)
+        if version is None:
+            return reqs
+        misses = []
+        for r in reqs:
+            entry = self.cache.get(self._cache_key(name, version, r.query))
+            if entry is None:
+                misses.append(r)
+                continue
+            now = self._clock()
+            # copies: tickets are handed to callers who may mutate them
+            # in place, and the cached row must stay bit-identical
+            r.dists = entry.dists[: r.k].copy()
+            r.ids = entry.ids[: r.k].copy()
+            if entry.payload is not None:
+                r.payload = entry.payload[: r.k].copy()
+            r.radius_steps = entry.radius_steps
+            r.candidates = entry.candidates
+            r.latency_ms = (now - r.submitted) * 1e3
+            r.cached = True
+            r.done = True
+            self._stats[name].record_hit(r, now)
+            self._tenant_stats.setdefault(
+                r.tenant, _TenantStats()
+            ).record_served(r, now)
+        return misses
+
+    # ------------------------------------------------- issue / complete stages
+    def _issue(self, name: str, reqs: list[QueryRequest]) -> None:
+        """Stage 1: pad host-side and put the batch on the device without
+        blocking (``col.search`` returns device futures)."""
         col = self.collections[name]
         m = len(reqs)
         shape = self._shape_for(m)
@@ -216,36 +511,89 @@ class StoreService:
             Q[j] = r.query
         dists, ids, stats = col.search(
             Q, k=self.default_k, r0=self.r0, steps=self.steps,
-            engine=self.engine, with_stats=True,
+            engine=self.engine, with_stats=True, interpret=self.interpret,
+            rows=m,  # only m of `shape` rows are real queries
         )
+        payload = None
+        if getattr(col, "payload", None) is not None:
+            payload = col.get_payload(ids[:m])  # async gather, same stream
+        batch = _InFlight(
+            name=name,
+            reqs=reqs,
+            shape=shape,
+            pending=PendingSearch(dists, ids, stats),
+            payload=payload,
+            version=getattr(col, "version", None),  # None = uncacheable
+            overlapped=len(self._inflight) > 0,
+        )
+        self._inflight.append(batch)
+        while len(self._inflight) > self.inflight_depth:
+            self._complete(self._inflight.popleft())
+
+    def _complete(self, batch: _InFlight) -> None:
+        """Stage 2: the only host sync — materialize the device results,
+        fill the tickets, and publish cache entries under the version the
+        batch was issued at (a mutation mid-flight bumps the version, so
+        those entries are born unreachable rather than stale)."""
+        dists, ids, stats = batch.pending.result()
         dists = np.asarray(dists)
         ids = np.asarray(ids)
         steps_taken = np.asarray(stats["radius_steps"])
         cands = np.asarray(stats["candidates"])
-        # the collection counted the padded batch; only m rows were real
-        cstats = getattr(col, "stats", None)
-        if cstats is not None:
-            cstats.queries -= shape - m
-        now = time.monotonic()
-        has_payload = getattr(col, "payload", None) is not None
-        if has_payload:
-            payloads = np.asarray(col.get_payload(ids[:m]))
-        for j, r in enumerate(reqs):
+        payloads = None if batch.payload is None else np.asarray(batch.payload)
+        now = self._clock()
+        for j, r in enumerate(batch.reqs):
             r.dists = dists[j, : r.k]
             r.ids = ids[j, : r.k]
-            if has_payload:
+            if payloads is not None:
                 r.payload = payloads[j, : r.k]
             r.radius_steps = int(steps_taken[j])
             r.candidates = int(cands[j])
             r.latency_ms = (now - r.submitted) * 1e3
             r.done = True
-        self._stats[name].record_batch(reqs, shape, now)
+            if self.cache is not None and batch.version is not None:
+                # copies: r.dists/r.ids above are views of the same batch
+                # arrays, and callers own (and may mutate) their tickets
+                self.cache.put(
+                    self._cache_key(batch.name, batch.version, r.query),
+                    CachedResult(
+                        dists=dists[j].copy(),
+                        ids=ids[j].copy(),
+                        payload=None if payloads is None else payloads[j].copy(),
+                        radius_steps=int(steps_taken[j]),
+                        candidates=int(cands[j]),
+                    ),
+                )
+            self._tenant_stats.setdefault(
+                r.tenant, _TenantStats()
+            ).record_served(r, now)
+        self._stats[batch.name].record_batch(
+            batch.reqs, batch.shape, now, overlapped=batch.overlapped
+        )
+
+    def _complete_all(self) -> None:
+        while self._inflight:
+            self._complete(self._inflight.popleft())
 
     # ------------------------------------------------------------ convenience
-    def serve(self, collection: str, Q, k: int | None = None):
+    def serve(self, collection: str, Q, k: int | None = None,
+              tenant: str = "default"):
         """Submit a whole query matrix as single requests, flush, and return
-        stacked (dists, ids) — the micro-batching round trip."""
-        reqs = [self.submit(collection, q, k=k) for q in np.atleast_2d(Q)]
+        stacked (dists, ids) — the micro-batching round trip.  All-or-
+        nothing under quota: if any row is rejected, the rows already
+        enqueued are withdrawn before :class:`QuotaExceeded` propagates
+        (no orphaned tickets dispatching work nobody observes)."""
+        reqs = []
+        try:
+            for q in np.atleast_2d(Q):
+                reqs.append(self.submit(collection, q, k=k, tenant=tenant))
+        except QuotaExceeded:
+            queue = self._queues[collection].get(tenant)
+            for r in reqs:
+                if queue is not None and r in queue:
+                    queue.remove(r)
+                    self._tenant_stats[tenant].submitted -= 1
+            raise
         self.flush()
         return (
             np.stack([r.dists for r in reqs]),
@@ -257,3 +605,13 @@ class StoreService:
         if collection is not None:
             return self._stats[collection].snapshot()
         return {name: s.snapshot() for name, s in self._stats.items()}
+
+    def tenant_stats(self, tenant: str | None = None) -> dict:
+        """Per-tenant admission/serving counters (+ QPS)."""
+        if tenant is not None:
+            return self._tenant_stats[tenant].snapshot()
+        return {t: s.snapshot() for t, s in self._tenant_stats.items()}
+
+    def cache_stats(self) -> dict:
+        return {"size": 0, "hits": 0, "misses": 0} if self.cache is None \
+            else self.cache.stats()
