@@ -16,6 +16,8 @@ def main() -> None:
     ap.add_argument("--skip-roofline", action="store_true")
     ap.add_argument("--skip-store", action="store_true",
                     help="skip the store-throughput sweep (figures only)")
+    ap.add_argument("--skip-hotpath", action="store_true",
+                    help="skip the one-pass search hot-path comparison")
     args = ap.parse_args()
 
     from . import fig4_rho, fig5_effect_n, fig8_effect_k, fig9_recall_time, table4_query_perf
@@ -54,6 +56,17 @@ def main() -> None:
                   f"{1e6 / r['sustained_qps']:.1f},"
                   f"qps={r['sustained_qps']:.1f};p50ms={r['latency_ms_p50']:.1f};"
                   f"p99ms={r['latency_ms_p99']:.1f}")
+
+    if not args.skip_hotpath:
+        from . import search_hotpath
+
+        rep = search_hotpath.run(
+            n=max(4096, int(100_000 * args.scale)), smoke=args.scale < 1.0
+        )
+        for eng, r in rep["engines"].items():
+            print(f"hotpath/{eng},{1e6 / r['qps_new']:.1f},"
+                  f"speedup={r['speedup']};qps_ref={r['qps_ref']};"
+                  f"recall={r['recall_new']:.3f}")
 
     if not args.skip_roofline:
         from . import roofline

@@ -1,0 +1,255 @@
+"""Serving hot-path benchmark: one-pass pipeline vs the multi-pass seed.
+
+Measures ``search_batch_fixed`` (one-pass incremental probing) against
+``search_batch_fixed_ref`` (the per-radius re-selection seed algorithm)
+on a synthetic reference workload and emits ``BENCH_search_hotpath.json``
+— the repo's BENCH trajectory point for the serving search core:
+
+* per-engine QPS for both paths + the old-vs-new speedup,
+* recall@10 of both paths vs brute force (parity gate: ±0.5pt),
+* per-step verified-slot counts for both paths (the one-pass schedule
+  admits each selected block exactly once, so its per-step counts decay
+  to the fresh-block delta while the seed recounts the full selection
+  every radius),
+* a hard slot-accounting gate: the one-pass path must never verify
+  more total slots than the seed (exit 1 otherwise — CI runs this in
+  smoke mode on every push).
+
+Full mode (default): n=100k, d=64, steps=8, L from params.  Smoke mode
+(``--smoke``): tiny n, two engines, seconds on CPU.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    brute_force,
+    build,
+    DBLSHParams,
+    search_batch_fixed,
+    search_batch_fixed_ref,
+)
+from repro.core.serve_search import _select_blocks
+from repro.data import make_clustered, normalize_scale
+
+
+def _timed(fn, repeats: int):
+    out = fn()
+    jax.block_until_ready(out)
+    best = np.inf
+    for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def _recall(ids, gt_i, k):
+    ids = np.asarray(ids)
+    gt_i = np.asarray(gt_i)
+    return float(np.mean([
+        len(set(a[:k].tolist()) & set(b[:k].tolist())) / k
+        for a, b in zip(ids, gt_i)
+    ]))
+
+
+def per_step_slots(index, Q, r0: float, steps: int):
+    """Hardware-level verified-slot counts per schedule step.
+
+    seed: every selected (blk < nb) slot of every step's fresh selection;
+    new:  only the slots of blocks newly admitted at that step (the
+    final-radius selection masked on block halfwidths).  Both count the
+    full compiled program's gather work (no done-masking), which is what
+    the device actually executes."""
+    p = index.params
+    nb = index.nb
+    B = p.block_size
+    G = jnp.einsum("lkd,qd->qlk", index.proj_vecs, jnp.asarray(Q))
+
+    seed_counts, new_counts = [], []
+    r = jnp.asarray(r0, jnp.float32)
+    r_last = jnp.asarray(r0, jnp.float32)
+    for _ in range(steps - 1):
+        r_last = r_last * p.c
+    _, bhw = _select_blocks(index, G, p.w0 * r_last)
+    prev_half = -np.inf
+    for _ in range(steps):
+        half = 0.5 * (p.w0 * r)
+        blk_j, _ = _select_blocks(index, G, p.w0 * r)
+        seed_counts.append(int(jnp.sum(blk_j < nb)) * B)
+        newly = (bhw <= half) & (bhw > prev_half)
+        new_counts.append(int(jnp.sum(newly)) * B)
+        prev_half = half
+        r = r * p.c
+    return seed_counts, new_counts
+
+
+def run(
+    n: int = 100_000,
+    d: int = 64,
+    n_queries: int = 64,
+    steps: int = 8,
+    k: int = 10,
+    r0: float = 0.5,
+    engines: tuple[str, ...] = ("jnp",),
+    repeats: int = 3,
+    pallas_queries: int = 8,
+    smoke: bool = False,
+    seed: int = 7,
+) -> dict:
+    key = jax.random.key(seed)
+    kd, kb = jax.random.split(key)
+    allpts = make_clustered(kd, n + n_queries, d,
+                            n_clusters=max(8, n // 4000), spread=0.02)
+    data, queries = allpts[:n], allpts[n:]
+    data, queries, _ = normalize_scale(data, queries)
+    inline = any(e == "inline" for e in engines)
+    params = DBLSHParams.derive(
+        n=n, d=d, c=1.5, t=64, k=max(k, 10), K=10, L=5,
+        inline_vectors=inline,
+    )
+    t0 = time.perf_counter()
+    index = build(kb, jnp.asarray(data), params)
+    jax.block_until_ready(index.proj_blocks)
+    build_s = time.perf_counter() - t0
+
+    _, gt_i = brute_force(jnp.asarray(data), jnp.asarray(queries), k=k)
+
+    report = {
+        "bench": "search_hotpath",
+        "smoke": smoke,
+        "notes": (
+            "CPU host: Pallas engines (kernel/inline) run in interpret "
+            "mode at a reduced query batch — their QPS reflects "
+            "interpreter overhead, not the TPU compile target; the jnp "
+            "engine row is the load-bearing comparison off-TPU."
+        ),
+        "workload": {
+            "n": n, "d": d, "n_queries": n_queries, "steps": steps,
+            "k": k, "r0": r0, "K": params.K, "L": params.L,
+            "max_blocks": params.max_blocks, "block_size": params.block_size,
+            "build_s": round(build_s, 3),
+        },
+        "engines": {},
+    }
+
+    for engine in engines:
+        # Pallas engines run interpret-mode on CPU (the compile target is
+        # TPU); keep their measured batch small so the bench stays
+        # CPU-minutes sized. QPS normalizes by the measured batch.
+        nq = n_queries if engine == "jnp" else min(n_queries, pallas_queries)
+        Q = jnp.asarray(queries[:nq])
+        rep = repeats if engine == "jnp" else 1
+
+        _, t_ref = _timed(
+            lambda: search_batch_fixed_ref(
+                index, Q, k=k, r0=r0, steps=steps, engine=engine
+            ),
+            rep,
+        )
+        (d_new, i_new), t_new = _timed(
+            lambda: search_batch_fixed(
+                index, Q, k=k, r0=r0, steps=steps, engine=engine
+            ),
+            rep,
+        )
+        d_ref, i_ref = search_batch_fixed_ref(
+            index, Q, k=k, r0=r0, steps=steps, engine=engine
+        )
+        rec_ref = _recall(i_ref, gt_i[:nq], k)
+        rec_new = _recall(i_new, gt_i[:nq], k)
+        report["engines"][engine] = {
+            "n_queries": nq,
+            "qps_ref": round(nq / t_ref, 2),
+            "qps_new": round(nq / t_new, 2),
+            "speedup": round(t_ref / t_new, 3),
+            "recall_ref": round(rec_ref, 4),
+            "recall_new": round(rec_new, 4),
+        }
+
+    seed_steps, new_steps = per_step_slots(
+        index, queries[: min(n_queries, 32)], r0, steps
+    )
+    report["per_step_slots"] = {"ref": seed_steps, "new": new_steps}
+    report["slot_check"] = {
+        "total_ref": int(sum(seed_steps)),
+        "total_new": int(sum(new_steps)),
+        "ok": sum(new_steps) <= sum(seed_steps),
+    }
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workload, two engines (CI gate)")
+    ap.add_argument("--out", default="BENCH_search_hotpath.json")
+    ap.add_argument("--n", type=int, default=None)
+    ap.add_argument("--engines", default=None,
+                    help="comma-separated subset of jnp,kernel,inline")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        engines = ("jnp", "kernel")
+        if args.engines:
+            engines = tuple(args.engines.split(","))
+        report = run(n=args.n or 4096, d=24, n_queries=16, repeats=1,
+                     engines=engines, smoke=True)
+    else:
+        engines = ("jnp", "kernel", "inline")
+        if args.engines:
+            engines = tuple(args.engines.split(","))
+        report = run(n=args.n or 100_000, engines=engines)
+
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    for eng, r in report["engines"].items():
+        print(f"search_hotpath/{eng}: ref {r['qps_ref']} qps -> new "
+              f"{r['qps_new']} qps ({r['speedup']}x), recall "
+              f"{r['recall_ref']} -> {r['recall_new']}")
+    print("per-step slots ref:", report["per_step_slots"]["ref"])
+    print("per-step slots new:", report["per_step_slots"]["new"])
+
+    ok = True
+    sc = report["slot_check"]
+    if not sc["ok"]:
+        print(f"FAIL: one-pass verified {sc['total_new']} slots > seed "
+              f"{sc['total_ref']}", file=sys.stderr)
+        ok = False
+    # per-step decay gate (the acceptance criterion): after step 0 the
+    # one-pass path only verifies fresh-block deltas, so each step must
+    # sit strictly below the seed's full re-selection
+    ref_steps = report["per_step_slots"]["ref"]
+    new_steps = report["per_step_slots"]["new"]
+    for j, (rj, nj) in enumerate(zip(ref_steps, new_steps)):
+        bad = nj > rj if j == 0 else (rj > 0 and nj >= rj)
+        if bad:
+            print(f"FAIL: step {j} one-pass verified {nj} slots vs seed "
+                  f"{rj} (no per-step decay)", file=sys.stderr)
+            ok = False
+    for eng, r in report["engines"].items():
+        if abs(r["recall_new"] - r["recall_ref"]) > 0.005 + 1e-9:
+            print(f"FAIL: {eng} recall drift {r['recall_ref']} -> "
+                  f"{r['recall_new']} exceeds 0.5pt", file=sys.stderr)
+            ok = False
+    if not report["smoke"] and report["engines"].get("jnp", {}).get(
+            "speedup", 0.0) < 1.5:
+        print("FAIL: jnp speedup below 1.5x", file=sys.stderr)
+        ok = False
+    print("slot check:", "OK" if ok else "FAILED",
+          f"(new {sc['total_new']} <= ref {sc['total_ref']})")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

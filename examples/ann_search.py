@@ -38,6 +38,7 @@ def main(scale: float = 0.25, dataset: str = "sift-s"):
         k=k,
         policy=CompactionPolicy(growth_ratio=1.25),
         payload=np.arange(base.shape[0]),  # payload demo: row ids
+        engine="jnp",  # per-collection default; submit/serve may override
     )
     svc = StoreService(
         batch_shapes=(1, 8, 32), default_k=k, r0=0.5, steps=8,

@@ -11,10 +11,17 @@ Public API:
 
 from .params import DBLSHParams, alpha_of_gamma, rho_star
 from .hashing import collision_prob, project, sample_projections
-from .index import DBLSHIndex, build
-from .query import rc_nn, search, search_batch, probe_radius
+from .index import DBLSHIndex, build, compute_norm_blocks
+from .query import merge_dedup_topk, rc_nn, search, search_batch, probe_radius
 from .baselines import C2Index, FBLSH, MQIndex, brute_force
-from .serve_search import PendingSearch, search_batch_fixed, search_batch_fixed_dispatch
+from .serve_search import (
+    ENGINES,
+    PendingSearch,
+    search_batch_fixed,
+    search_batch_fixed_dispatch,
+    search_batch_fixed_ref,
+    validate_engine,
+)
 from .updates import compact, delete, insert, live_count
 
 __all__ = [
@@ -26,11 +33,16 @@ __all__ = [
     "sample_projections",
     "DBLSHIndex",
     "build",
+    "compute_norm_blocks",
     "search",
     "search_batch",
     "search_batch_fixed",
     "search_batch_fixed_dispatch",
+    "search_batch_fixed_ref",
     "PendingSearch",
+    "ENGINES",
+    "validate_engine",
+    "merge_dedup_topk",
     "rc_nn",
     "probe_radius",
     "brute_force",

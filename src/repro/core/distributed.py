@@ -56,6 +56,7 @@ def _index_specs(axis: str, params) -> DBLSHIndex:
         mbr_hi=P(None, axis),
         data=P(axis),
         vec_blocks=P(None, axis) if params.inline_vectors else P(),
+        norm_blocks=P(None, axis),
         params=params,
     )
 
@@ -81,17 +82,30 @@ def build_sharded(key, data, params_local: DBLSHParams, mesh, axis: str = "data"
     return ShardedDBLSH(index=idx, axis=axis, n_total=n, n_local=n_local)
 
 
-@partial(jax.jit, static_argnames=("k", "steps", "mesh"))
+@partial(jax.jit, static_argnames=("k", "steps", "mesh", "with_stats", "exact"))
 def search_sharded(s: ShardedDBLSH, Q: jax.Array, k: int = 0, r0: float = 1.0,
-                   steps: int = 8, mesh=None):
-    """Replicated queries -> (Q, k) global distances/ids."""
+                   steps: int = 8, mesh=None, with_stats: bool = False,
+                   exact: bool = False):
+    """Replicated queries -> (Q, k) global distances/ids.
+
+    With ``with_stats`` the per-shard probe statistics survive the
+    collective merge instead of being dropped at the boundary: a third
+    return aggregates them per query — ``candidates`` is the psum over
+    shards (total distinct slots fetched fleet-wide on the query's
+    behalf) and ``radius_steps`` the pmax (the schedule runs lockstep,
+    so the slowest shard's step count is the query's wall-clock probe
+    depth)."""
     p = s.index.params
     k = k or p.k
     axis = s.axis
     n_local, n_total = s.n_local, s.n_total
 
     def local_search(idx_tree, Qr):
-        d, i = search_batch_fixed(idx_tree, Qr, k=k, r0=r0, steps=steps)
+        out = search_batch_fixed(
+            idx_tree, Qr, k=k, r0=r0, steps=steps, with_stats=with_stats,
+            exact=exact,
+        )
+        d, i = out[0], out[1]
         rank = jax.lax.axis_index(axis)
         gi = jnp.where(i < n_local, i + rank * n_local, n_total)
         d_all = jax.lax.all_gather(d, axis)  # (P, Qn, k)
@@ -102,10 +116,20 @@ def search_sharded(s: ShardedDBLSH, Q: jax.Array, k: int = 0, r0: float = 1.0,
         d2 = jnp.where(jnp.isfinite(d_flat), d_flat, _INF)
         neg, pos = jax.lax.top_k(-d2, k)
         ids = jnp.take_along_axis(i_flat, pos, axis=1)
-        return -neg, jnp.where(jnp.isfinite(-neg), ids, n_total)
+        merged = (-neg, jnp.where(jnp.isfinite(-neg), ids, n_total))
+        if with_stats:
+            stats = {
+                "radius_steps": jax.lax.pmax(out[2]["radius_steps"], axis),
+                "candidates": jax.lax.psum(out[2]["candidates"], axis),
+            }
+            return merged + (stats,)
+        return merged
 
     specs = _index_specs(axis, p)
+    out_specs = (P(), P())
+    if with_stats:
+        out_specs = out_specs + ({"radius_steps": P(), "candidates": P()},)
     return _shard_map(
         local_search, mesh=mesh,
-        in_specs=(specs, P()), out_specs=(P(), P()),
+        in_specs=(specs, P()), out_specs=out_specs,
     )(s.index, Q)

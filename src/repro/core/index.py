@@ -31,7 +31,19 @@ import jax.numpy as jnp
 from . import hashing
 from .params import DBLSHParams
 
-__all__ = ["DBLSHIndex", "build"]
+__all__ = ["DBLSHIndex", "build", "compute_norm_blocks"]
+
+
+def compute_norm_blocks(data: jax.Array, ids_blocks: jax.Array) -> jax.Array:
+    """Per-slot squared norms ||x||^2 aligned with ``ids_blocks``.
+
+    Padded / tombstoned slots (id >= n) get +inf so the MXU distance form
+    ||x||^2 - 2<q,x> + ||q||^2 masks them without an id compare."""
+    n = data.shape[0]
+    norms = jnp.sum(jnp.square(data), axis=-1)  # (n,)
+    return jnp.take(
+        norms, ids_blocks, axis=0, mode="fill", fill_value=jnp.inf
+    ).astype(jnp.float32)
 
 
 @partial(
@@ -44,6 +56,7 @@ __all__ = ["DBLSHIndex", "build"]
         "mbr_hi",
         "data",
         "vec_blocks",
+        "norm_blocks",
     ],
     meta_fields=["params"],
 )
@@ -59,6 +72,12 @@ class DBLSHIndex:
       data:        (n, d)         the dataset ('gather' verify layout)
       vec_blocks:  (L, nb, B, d)  optional per-table reordered vectors
                                   ('inline' streaming layout), else ()
+      norm_blocks: (L, nb, B)     per-slot squared L2 norms ||x||^2,
+                                  slot-aligned with ids_blocks (+inf on
+                                  padded / tombstoned slots) — the MXU
+                                  verify form ||x||^2 - 2<q,x> + ||q||^2
+                                  reads these instead of re-reducing d
+                                  diff lanes per candidate per radius
     """
 
     proj_vecs: jax.Array
@@ -68,6 +87,7 @@ class DBLSHIndex:
     mbr_hi: jax.Array
     data: jax.Array
     vec_blocks: jax.Array
+    norm_blocks: jax.Array
     params: DBLSHParams
 
     @property
@@ -87,6 +107,7 @@ class DBLSHIndex:
             self.mbr_lo,
             self.mbr_hi,
             self.vec_blocks,
+            self.norm_blocks,
         ):
             tot += f.size * f.dtype.itemsize
         return tot
@@ -155,5 +176,6 @@ def build(key: jax.Array, data: jax.Array, params: DBLSHParams) -> DBLSHIndex:
         mbr_hi=mbr_hi,
         data=data,
         vec_blocks=vec_blocks,
+        norm_blocks=compute_norm_blocks(data, ids_blocks),
         params=params,
     )

@@ -27,9 +27,58 @@ import jax.numpy as jnp
 from . import hashing
 from .index import DBLSHIndex
 
-__all__ = ["search", "search_batch", "rc_nn", "probe_radius"]
+__all__ = ["search", "search_batch", "rc_nn", "probe_radius", "merge_dedup_topk"]
 
 _INF = jnp.inf
+_IMAX = jnp.iinfo(jnp.int32).max
+
+
+def merge_dedup_topk(run_d, run_i, new_d, new_i, n, k: int):
+    """Batched dedup'd top-k merge via k-step vectorized selection.
+
+    The shared merge helper of the serving path (the XLA twin of the
+    in-kernel ``kernels.window_verify.merge_topk``): ``k`` rounds of
+    min-reduce + one-hot select over the concatenated candidate axis.
+    No sort — pure VPU min/compare/select, O(k * C) per query instead of
+    the O(C log C) ``lexsort`` it replaces, and C-invariant ties resolve
+    to the smallest id.
+
+    Cross-table duplicates of one point carry identical (dist, id) pairs
+    (the exact distance is a function of the id alone), so dropping every
+    entry equal to the selected pair after each round performs exact
+    dedup for free.
+
+    Args:
+      run_d/run_i: (Q, a) running top-k (ascending, +inf / ``n`` padded).
+      new_d/new_i: (Q, b) fresh candidates (masked slots +inf).
+      n: invalid-id sentinel; k: top-k.
+
+    Returns: (Q, k) distances ascending, (Q, k) ids (``n`` when unfilled).
+    """
+    cd = jnp.concatenate([run_d, new_d], axis=1)  # (Q, a+b)
+    ci = jnp.concatenate([run_i, new_i], axis=1).astype(jnp.int32)
+    Qn = cd.shape[0]
+    idxk = jax.lax.iota(jnp.int32, k)[None, :]  # (1, k)
+
+    def body(j, carry):
+        cd, nd, ni = carry
+        m = jnp.min(cd, axis=1, keepdims=True)  # (Q, 1)
+        finite = jnp.isfinite(m)
+        eq = cd == m
+        sel = jnp.min(jnp.where(eq, ci, _IMAX), axis=1, keepdims=True)
+        oh = idxk == j  # (1, k)
+        nd = jnp.where(oh, m, nd)
+        ni = jnp.where(oh & finite, sel, ni)
+        cd = jnp.where(eq & (ci == sel), _INF, cd)
+        return cd, nd, ni
+
+    init = (
+        cd,
+        jnp.full((Qn, k), _INF, cd.dtype),
+        jnp.full((Qn, k), n, jnp.int32),
+    )
+    _, nd, ni = jax.lax.fori_loop(0, k, body, init)
+    return nd, ni
 
 
 def _scan_one_table(proj_blocks, ids_blocks, mbr_lo, mbr_hi, vec_blocks, data, g, w, params):

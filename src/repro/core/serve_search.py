@@ -9,11 +9,43 @@ updates after a query's termination condition fires (identical results
 to the adaptive path whenever the adaptive path would have terminated
 within ``steps``; the fixed path can only find *more*).
 
+**One-pass incremental probing** (DESIGN.md §7).  The paper's query
+cost argument (§IV-C) rests on windows *nesting* across the schedule:
+W(G(q), w0·r) ⊆ W(G(q), w0·c·r).  The serving pipeline exploits this so
+each unit of work happens exactly once for the whole schedule instead
+of once per radius:
+
+  1. **Select once.**  ``_select_blocks`` runs a single MINDIST-ordered
+     MBR pass at the *final* radius.  Every earlier radius' block set is
+     a subset of this one, recoverable by masking on the per-block
+     window-overlap halfwidth — ``steps-1`` full MBR scans + top_k
+     compactions disappear.
+  2. **Verify once.**  The selected blocks of all L tables are gathered
+     and verified in one batched pass over a flat (Qn, L·M·B) candidate
+     axis, producing per-slot exact squared distances plus the slot's
+     window halfwidth ``hw = max_k |p_k - g_k|`` (the smallest half
+     window that admits it).  Total verify work collapses from
+     Σ_j L·M·B to L·M·B.
+  3. **Merge deltas.**  Per step only the newly-admitted slice
+     (w_{j-1}/2 < hw ≤ w_j/2) is merged into the running top-k — a
+     streaming top-k is exact because added candidates only push ranks
+     down.  The merge is the sort-free k-step vectorized selection
+     (`query.merge_dedup_topk`), one call per step for all tables.
+  4. **MXU distances.**  ``||x||² - 2<q,x> + ||q||²`` with per-point
+     squared norms precomputed at build time (``index.norm_blocks``)
+     turns verification into one dot per candidate.  ``exact=True``
+     restores materialized-diff distances (the norm trick changes fp32
+     rounding); results are id-set/recall equivalent either way.
+
 Three verify engines:
   * ``jnp``    — pure-XLA gather + verify (works everywhere; CPU default)
-  * ``kernel`` — Pallas ``candidate_verify`` on pre-gathered candidates
-  * ``inline`` — Pallas ``window_verify`` with scalar-prefetch block DMA
+  * ``kernel`` — Pallas ``candidate_dist`` on pre-gathered candidates
+  * ``inline`` — Pallas ``window_dist`` with scalar-prefetch block DMA
                  (zero-copy gather; requires params.inline_vectors)
+
+``search_batch_fixed_ref`` preserves the multi-pass (per-radius
+re-selection) algorithm verbatim: it is the equivalence oracle for the
+one-pass pipeline and the baseline of ``benchmarks/search_hotpath.py``.
 """
 
 from __future__ import annotations
@@ -24,18 +56,41 @@ import jax
 import jax.numpy as jnp
 
 from .index import DBLSHIndex
+from .query import merge_dedup_topk
 from .. import kernels
 
-__all__ = ["search_batch_fixed", "search_batch_fixed_dispatch", "PendingSearch"]
+__all__ = [
+    "search_batch_fixed",
+    "search_batch_fixed_ref",
+    "search_batch_fixed_dispatch",
+    "PendingSearch",
+    "validate_engine",
+    "ENGINES",
+]
 
 _INF = jnp.inf
 
+ENGINES = ("jnp", "kernel", "inline")
 
-def _select_blocks(index: DBLSHIndex, G: jax.Array, w) -> jax.Array:
+
+def validate_engine(engine: str) -> str:
+    """The engine-name check shared by the search path and the store
+    layer (collection defaults, service overrides)."""
+    if engine not in ENGINES:
+        raise ValueError(
+            f"unknown engine {engine!r}: use " + " | ".join(ENGINES)
+        )
+    return engine
+
+
+def _select_blocks(index: DBLSHIndex, G: jax.Array, w):
     """MINDIST-ordered fixed-capacity block selection for a query batch.
 
-    G: (Q, L, K) query projections. Returns blk: (L, Q, M) int32 (nb =
-    invalid)."""
+    G: (Q, L, K) query projections. Returns (blk, bhw): blk (L, Q, M)
+    int32 (nb = invalid); bhw (L, Q, M) per-block window halfwidths —
+    the L∞ box distance from the query projection to the block MBR, i.e.
+    the smallest half window width whose window overlaps the block
+    (+inf on invalid slots)."""
     p = index.params
     nb = index.nb
 
@@ -44,22 +99,208 @@ def _select_blocks(index: DBLSHIndex, G: jax.Array, w) -> jax.Array:
         lo = g[:, None, :] - 0.5 * w
         hi = g[:, None, :] + 0.5 * w
         overlap = jnp.all((mbr_lo[None] <= hi) & (mbr_hi[None] >= lo), axis=-1)
-        mindist = jnp.sum(
-            jnp.square(
-                jnp.maximum(mbr_lo[None] - g[:, None, :], 0.0)
-                + jnp.maximum(g[:, None, :] - mbr_hi[None], 0.0)
-            ),
-            axis=-1,
-        )  # (Q, nb)
+        # per-dim box distance (at most one term is positive for a valid
+        # MBR, so the sum equals the clamped max)
+        pd = jnp.maximum(mbr_lo[None] - g[:, None, :], 0.0) + jnp.maximum(
+            g[:, None, :] - mbr_hi[None], 0.0
+        )  # (Q, nb, K)
+        mindist = jnp.sum(jnp.square(pd), axis=-1)  # (Q, nb)
         score = jnp.where(overlap, mindist, _INF)
         _, blk = jax.lax.top_k(-score, p.max_blocks)  # (Q, M)
-        return jnp.where(jnp.take_along_axis(overlap, blk, 1), blk, nb).astype(jnp.int32)
+        sel_ok = jnp.take_along_axis(overlap, blk, 1)
+        bhw = jnp.take_along_axis(jnp.max(pd, axis=-1), blk, 1)
+        return (
+            jnp.where(sel_ok, blk, nb).astype(jnp.int32),
+            jnp.where(sel_ok, bhw, _INF),
+        )
 
     return jax.vmap(per_table)(index.mbr_lo, index.mbr_hi, jnp.swapaxes(G, 0, 1))
 
 
-def _merge_dedup_topk(run_d, run_i, new_d, new_i, n, k):
-    """(Q, a) + (Q, b) -> (Q, k) dedup'd ascending merge."""
+def _gather_pool(index: DBLSHIndex, blk_q: jax.Array, G: jax.Array,
+                 Q: jax.Array, engine: str, exact: bool, interpret):
+    """Engine dispatch for the verify-once stage.
+
+    blk_q: (Qn, S) flattened cross-table block ids (S = L·M, sentinel
+    L·nb). Returns (d2, hw): (Qn, C) exact squared distances and window
+    halfwidths over the C = S·B candidate slots, table-major. Slots are
+    *not* window-masked — the schedule applies per-step masks on hw."""
+    p = index.params
+    nb = index.nb
+    L, M, B = p.L, p.max_blocks, p.block_size
+    Qn = Q.shape[0]
+    S = L * M
+    proj_flat = index.proj_blocks.reshape(L * nb, B, p.K)
+
+    if engine == "inline":
+        return kernels.window_dist(
+            blk_q,
+            proj_flat,
+            index.vec_blocks.reshape(L * nb, B, -1),
+            index.norm_blocks.reshape(L * nb, B),
+            G,
+            Q,
+            M=M,
+            exact=exact,
+            interpret=interpret,
+        )
+
+    pb = jnp.take(proj_flat, blk_q, axis=0, mode="fill", fill_value=_INF)
+    if p.inline_vectors:
+        vb = jnp.take(
+            index.vec_blocks.reshape(L * nb, B, -1), blk_q, axis=0,
+            mode="fill", fill_value=0.0,
+        )  # (Qn, S, B, d)
+    else:
+        ib = jnp.take(
+            index.ids_blocks.reshape(L * nb, B), blk_q, axis=0,
+            mode="fill", fill_value=index.n,
+        )
+        vb = jnp.take(
+            index.data, ib.reshape(Qn, -1), axis=0, mode="fill", fill_value=0.0
+        ).reshape(Qn, S, B, -1)
+    nrm = jnp.take(
+        index.norm_blocks.reshape(L * nb, B), blk_q, axis=0,
+        mode="fill", fill_value=_INF,
+    )  # (Qn, S, B)
+
+    if engine == "kernel":
+        return kernels.candidate_dist(
+            pb.reshape(Qn, L, M * B, p.K),
+            vb.reshape(Qn, L, M * B, -1),
+            nrm.reshape(Qn, L, M * B),
+            G,
+            Q,
+            exact=exact,
+            interpret=interpret,
+        )
+
+    # 'jnp'
+    g_rep = jnp.repeat(G, M, axis=1)  # (Qn, S, K)
+    hw = jnp.max(jnp.abs(pb - g_rep[:, :, None, :]), axis=-1)  # (Qn, S, B)
+    C = S * B
+    if exact:
+        d2 = jnp.sum(jnp.square(vb - Q[:, None, None, :]), axis=-1)
+    else:
+        q2 = jnp.sum(jnp.square(Q), axis=-1)  # (Qn,)
+        # per-slot multiply + last-axis reduce (not a batched-matmul
+        # einsum): the reduction order is then independent of the batch
+        # shape, so the store layer's padded dispatch stays bit-identical
+        # to an unpadded call.  The true MXU raising lives in the Pallas
+        # engines, whose tile shapes never depend on Qn.
+        dots = jnp.sum(vb * Q[:, None, None, :], axis=-1)  # (Qn, S, B)
+        d2 = jnp.maximum(
+            nrm - 2.0 * dots + q2[:, None, None], 0.0
+        )
+    return d2.reshape(Qn, C), hw.reshape(Qn, C)
+
+
+@partial(
+    jax.jit,
+    static_argnames=("k", "steps", "engine", "interpret", "with_stats", "exact"),
+)
+def search_batch_fixed(
+    index: DBLSHIndex,
+    Q: jax.Array,
+    k: int = 0,
+    r0: float = 1.0,
+    steps: int = 8,
+    engine: str = "jnp",
+    interpret=None,
+    with_stats: bool = False,
+    exact: bool = False,
+):
+    """Fixed-schedule batched (c,k)-ANN — one-pass incremental probing.
+
+    Args:
+      index: built DBLSHIndex (engine='inline' needs inline_vectors=True).
+      Q: (Qn, d) query batch.
+      k, r0, steps: top-k, initial radius, schedule length.
+      engine: 'jnp' | 'kernel' | 'inline'.
+      with_stats: also return per-query probe statistics.
+      exact: use materialized-diff distances instead of the MXU norm
+        form (bit-compatible with :func:`search_batch_fixed_ref`).
+
+    Returns: (Qn, k) distances ascending, (Qn, k) ids; with ``with_stats``
+    a third element ``{"radius_steps": (Qn,) int32, "candidates": (Qn,)
+    int32}`` — schedule steps run before the termination rule fired, and
+    *distinct* candidate slots fetched while active: each selected block
+    (all tables) counts its B slots once, at the step its window first
+    overlaps it, and never while the query is already done.  Padded
+    selection slots (blk == nb) are not work and are not counted.
+    """
+    validate_engine(engine)
+    p = index.params
+    k = k or p.k
+    n = index.n
+    Qn = Q.shape[0]
+    nb = index.nb
+    B = p.block_size
+    L, M = p.L, p.max_blocks
+
+    G = jnp.einsum("lkd,qd->qlk", index.proj_vecs, Q)  # (Qn, L, K)
+
+    # -------- select once, at the final radius (windows nest: every
+    # earlier step's block set is this set masked on bhw)
+    r_last = jnp.asarray(r0, jnp.float32)
+    for _ in range(steps - 1):
+        r_last = r_last * p.c
+    blk, bhw = _select_blocks(index, G, p.w0 * r_last)  # (L, Qn, M) each
+
+    # -------- flatten the table axis: one cross-table candidate pool
+    offs = (jnp.arange(L, dtype=jnp.int32) * nb)[:, None, None]
+    blk_flat = jnp.where(blk < nb, blk + offs, L * nb)  # (L, Qn, M)
+    blk_q = jnp.swapaxes(blk_flat, 0, 1).reshape(Qn, L * M)
+    ci = jnp.take(
+        index.ids_blocks.reshape(L * nb, B), blk_q, axis=0,
+        mode="fill", fill_value=n,
+    ).reshape(Qn, L * M * B)
+
+    # -------- verify once: exact distances + admission halfwidths for
+    # every selected slot, whole schedule
+    d2, hw = _gather_pool(index, blk_q, G, Q, engine, exact, interpret)
+
+    bhw_q = jnp.swapaxes(bhw, 0, 1).reshape(Qn, L * M)  # (Qn, S)
+
+    best_d = jnp.full((Qn, k), _INF)
+    best_i = jnp.full((Qn, k), n, jnp.int32)
+    done = jnp.zeros((Qn,), bool)
+    radius_steps = jnp.zeros((Qn,), jnp.int32)
+    candidates = jnp.zeros((Qn,), jnp.int32)
+
+    r = jnp.asarray(r0, jnp.float32)
+    prev_half = -_INF
+    for _ in range(steps):
+        half = 0.5 * (p.w0 * r)
+        if with_stats:
+            active = ~done
+            radius_steps = radius_steps + active.astype(jnp.int32)
+            newly = (bhw_q <= half) & (bhw_q > prev_half)  # (Qn, S)
+            n_slots = jnp.sum(newly.astype(jnp.int32), axis=1) * B
+            candidates = candidates + jnp.where(active, n_slots, 0)
+
+        # newly-admitted delta slice: slots whose window first reaches
+        # them at this radius (hw = +inf slots never admit)
+        delta = (hw <= half) & (hw > prev_half)
+        nd, ni = merge_dedup_topk(
+            best_d, best_i, jnp.where(delta, d2, _INF), ci, n, k
+        )
+        # masked merge: finished queries keep their result
+        best_d = jnp.where(done[:, None], best_d, nd)
+        best_i = jnp.where(done[:, None], best_i, ni)
+        done = done | (best_d[:, k - 1] <= jnp.square(p.c * r))
+        r = r * p.c
+        prev_half = half
+
+    if with_stats:
+        stats = {"radius_steps": radius_steps, "candidates": candidates}
+        return jnp.sqrt(best_d), best_i, stats
+    return jnp.sqrt(best_d), best_i
+
+
+def _merge_dedup_topk_lexsort(run_d, run_i, new_d, new_i, n, k):
+    """(Q, a) + (Q, b) -> (Q, k) dedup'd ascending merge (the multi-pass
+    reference's lexsort merge, kept verbatim for bit-fidelity)."""
     d = jnp.concatenate([run_d, new_d], axis=1)
     i = jnp.concatenate([run_i, new_i], axis=1)
 
@@ -77,7 +318,7 @@ def _merge_dedup_topk(run_d, run_i, new_d, new_i, n, k):
 
 
 @partial(jax.jit, static_argnames=("k", "steps", "engine", "interpret", "with_stats"))
-def search_batch_fixed(
+def search_batch_fixed_ref(
     index: DBLSHIndex,
     Q: jax.Array,
     k: int = 0,
@@ -87,22 +328,16 @@ def search_batch_fixed(
     interpret=None,
     with_stats: bool = False,
 ):
-    """Fixed-schedule batched (c,k)-ANN.
+    """Multi-pass reference: re-select, re-gather, and re-verify at every
+    radius (the pre-one-pass serving algorithm, preserved verbatim).
 
-    Args:
-      index: built DBLSHIndex (engine='inline' needs inline_vectors=True).
-      Q: (Qn, d) query batch.
-      k, r0, steps: top-k, initial radius, schedule length.
-      engine: 'jnp' | 'kernel' | 'inline'.
-      with_stats: also return per-query probe statistics.
-
-    Returns: (Qn, k) distances ascending, (Qn, k) ids; with ``with_stats``
-    a third element ``{"radius_steps": (Qn,) int32, "candidates": (Qn,)
-    int32}`` — schedule steps run before the termination rule fired, and
-    candidate slots fetched (selected blocks x B, all tables) while active.
+    Used by the equivalence tests as the oracle for
+    :func:`search_batch_fixed` (``exact=True`` pins bit-equal distances)
+    and by ``benchmarks/search_hotpath.py`` as the speedup baseline.
+    ``with_stats`` keeps the old accounting: every selected block slot
+    recounts at every step it remains selected.
     """
-    if engine not in ("jnp", "kernel", "inline"):
-        raise ValueError(f"unknown engine {engine!r}: use jnp | kernel | inline")
+    validate_engine(engine)
     p = index.params
     k = k or p.k
     n = index.n
@@ -121,7 +356,7 @@ def search_batch_fixed(
     r = jnp.asarray(r0, jnp.float32)
     for _ in range(steps):
         w = p.w0 * r
-        blk = _select_blocks(index, G, w)  # (L, Qn, M)
+        blk, _ = _select_blocks(index, G, w)  # (L, Qn, M)
         if with_stats:
             active = ~done
             radius_steps = radius_steps + active.astype(jnp.int32)
@@ -174,10 +409,12 @@ def search_batch_fixed(
                     d_l = -d_l
                     i_l = jnp.where(jnp.isfinite(d_l),
                                     jnp.take_along_axis(ci, i_l, 1), n)
-            step_d, step_i = _merge_dedup_topk(step_d, step_i, d_l, i_l, n, k)
+            step_d, step_i = _merge_dedup_topk_lexsort(
+                step_d, step_i, d_l, i_l, n, k
+            )
 
         # masked merge: finished queries keep their result
-        nd, ni = _merge_dedup_topk(best_d, best_i, step_d, step_i, n, k)
+        nd, ni = _merge_dedup_topk_lexsort(best_d, best_i, step_d, step_i, n, k)
         best_d = jnp.where(done[:, None], best_d, nd)
         best_i = jnp.where(done[:, None], best_i, ni)
         done = done | (best_d[:, k - 1] <= jnp.square(p.c * r))
@@ -242,6 +479,7 @@ def search_batch_fixed_dispatch(
     engine: str = "jnp",
     interpret=None,
     with_stats: bool = False,
+    exact: bool = False,
 ) -> PendingSearch:
     """Issue a fixed-schedule search without blocking on the device.
 
@@ -254,7 +492,7 @@ def search_batch_fixed_dispatch(
     """
     out = search_batch_fixed(
         index, Q, k=k, r0=r0, steps=steps, engine=engine,
-        interpret=interpret, with_stats=with_stats,
+        interpret=interpret, with_stats=with_stats, exact=exact,
     )
     if with_stats:
         return PendingSearch(out[0], out[1], out[2])

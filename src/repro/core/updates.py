@@ -51,6 +51,8 @@ def insert(index: DBLSHIndex, new_points: jax.Array) -> DBLSHIndex:
     proj = hashing.project(new_points, index.proj_vecs)  # (L, m, K)
     orders = jax.vmap(lambda pr: _str_order(pr, B))(proj)  # (L, m)
 
+    new_norms = jnp.sum(jnp.square(new_points), axis=-1)  # (m,)
+
     def _pack(order, proj_t):
         ps = jnp.take(proj_t, order, axis=0)
         ps = jnp.concatenate(
@@ -60,12 +62,15 @@ def insert(index: DBLSHIndex, new_points: jax.Array) -> DBLSHIndex:
             [order.astype(jnp.int32) + n_old,
              jnp.full((m_pad - m,), n_total, jnp.int32)]
         ).reshape(nb_new, B)
+        nrm = jnp.concatenate(
+            [jnp.take(new_norms, order), jnp.full((m_pad - m,), _INF)]
+        ).reshape(nb_new, B).astype(jnp.float32)
         finite = jnp.isfinite(ps[..., :1])
         lo = jnp.min(ps, axis=1)
         hi = jnp.max(jnp.where(finite, ps, -_INF), axis=1)
-        return ps, ids, lo, hi
+        return ps, ids, nrm, lo, hi
 
-    pb, ib, lo, hi = jax.vmap(_pack)(orders, proj)
+    pb, ib, nrm_b, lo, hi = jax.vmap(_pack)(orders, proj)
 
     # old sentinel ids (== n_old) must move to the new sentinel n_total
     old_ids = jnp.where(index.ids_blocks >= n_old, n_total, index.ids_blocks)
@@ -78,6 +83,9 @@ def insert(index: DBLSHIndex, new_points: jax.Array) -> DBLSHIndex:
         mbr_lo=jnp.concatenate([index.mbr_lo, lo], axis=1),
         mbr_hi=jnp.concatenate([index.mbr_hi, hi], axis=1),
         data=jnp.concatenate([index.data, new_points], axis=0),
+        # old padded / tombstoned slots are already +inf (fill covers
+        # everything >= n_old), so a plain concat stays slot-aligned
+        norm_blocks=jnp.concatenate([index.norm_blocks, nrm_b], axis=1),
         params=new_params,
     )
     if p.inline_vectors:
@@ -111,6 +119,7 @@ def delete(index: DBLSHIndex, del_ids: jax.Array) -> DBLSHIndex:
         mbr_hi=hi,
         data=index.data,
         vec_blocks=index.vec_blocks,
+        norm_blocks=jnp.where(dead, _INF, index.norm_blocks),
         params=index.params,
     )
 

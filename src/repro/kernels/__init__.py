@@ -5,7 +5,20 @@ Each kernel ships a jit'd wrapper (ops.py) and a pure-jnp oracle
 mode (TPU is the compile target, CPU validates semantics).
 """
 
-from .ops import candidate_verify, pairwise_l2, window_verify
+from .ops import (
+    candidate_dist,
+    candidate_verify,
+    pairwise_l2,
+    window_dist,
+    window_verify,
+)
 from . import ref
 
-__all__ = ["candidate_verify", "pairwise_l2", "window_verify", "ref"]
+__all__ = [
+    "candidate_dist",
+    "candidate_verify",
+    "pairwise_l2",
+    "window_dist",
+    "window_verify",
+    "ref",
+]

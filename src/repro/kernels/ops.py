@@ -14,7 +14,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from .pairwise_l2 import pairwise_l2_kernel
-from .window_verify import candidate_verify_kernel, window_verify_kernel
+from .window_verify import (
+    candidate_dist_kernel,
+    candidate_verify_kernel,
+    window_dist_kernel,
+    window_verify_kernel,
+)
 
 _IMAX = jnp.iinfo(jnp.int32).max
 
@@ -132,6 +137,118 @@ def window_verify(blk_idx, proj_blocks, vec_blocks, ids_blocks, g, q, w, *,
     )(blk_idx, w_arr, g, q, proj_blocks, vec_blocks, ids_blocks)
     out_i = jnp.where(out_i == _IMAX, n, out_i)
     return out_d, out_i
+
+
+@functools.partial(jax.jit, static_argnames=("exact", "tile_c", "interpret"))
+def candidate_dist(cand_proj, cand_vecs, cand_norms, g, q, *, exact: bool = False,
+                   tile_c: int = 256, interpret=None):
+    """One-pass fused distance + window-halfwidth over pre-gathered
+    candidates, tiled per (query, table).
+
+    Args:
+      cand_proj: (Q, L, Ct, K); cand_vecs: (Q, L, Ct, d);
+      cand_norms: (Q, L, Ct) squared norms (+inf = padded/invalid slot).
+      g: (Q, L, K) per-table query projections; q: (Q, d).
+      exact: diff-form distances (escape hatch for the ``||x||^2 -
+        2<q,x> + ||q||^2`` fp32 rounding change).
+
+    Returns: d2 (Q, L*Ct) exact squared distances (+inf on invalid
+    slots in norm form), hw (Q, L*Ct) per-slot window halfwidths
+    ``max_k |p_k - g_k|`` (+inf = never admitted) — flattened
+    table-major to match the caller's candidate axis.
+    """
+    Qn, L, Ct, K = cand_proj.shape
+    d = cand_vecs.shape[-1]
+    tile_c = min(tile_c, max(8, Ct))
+    cand_proj = _pad_to(cand_proj, tile_c, 2, jnp.inf)
+    cand_vecs = _pad_to(cand_vecs, tile_c, 2, 0.0)
+    cand_norms = _pad_to(cand_norms, tile_c, 2, jnp.inf)
+    Cp = cand_proj.shape[2]
+    q2 = jnp.sum(jnp.square(q), axis=-1, keepdims=True)  # (Q, 1)
+
+    grid = (Qn, L, Cp // tile_c)
+    kern = functools.partial(candidate_dist_kernel, exact=exact)
+    d2, hw = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, K), lambda qi, l, t: (qi, l, 0)),  # g
+            pl.BlockSpec((1, d), lambda qi, l, t: (qi, 0)),  # q
+            pl.BlockSpec((1, 1), lambda qi, l, t: (qi, 0)),  # q2
+            pl.BlockSpec((1, 1, tile_c, K), lambda qi, l, t: (qi, l, t, 0)),
+            pl.BlockSpec((1, 1, tile_c, d), lambda qi, l, t: (qi, l, t, 0)),
+            pl.BlockSpec((1, 1, tile_c), lambda qi, l, t: (qi, l, t)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, tile_c), lambda qi, l, t: (qi, l, t)),
+            pl.BlockSpec((1, 1, tile_c), lambda qi, l, t: (qi, l, t)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Qn, L, Cp), jnp.float32),
+            jax.ShapeDtypeStruct((Qn, L, Cp), jnp.float32),
+        ],
+        interpret=_interp(interpret),
+    )(g, q, q2, cand_proj, cand_vecs, cand_norms)
+    return (
+        d2[:, :, :Ct].reshape(Qn, L * Ct),
+        hw[:, :, :Ct].reshape(Qn, L * Ct),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("M", "exact", "interpret"))
+def window_dist(blk_idx, proj_blocks, vec_blocks, norm_blocks, g, q, *,
+                M: int, exact: bool = False, interpret=None):
+    """Scalar-prefetch one-pass distance + halfwidth over an 'inline'
+    layout index with all L tables flattened onto one block axis.
+
+    Args:
+      blk_idx: (Q, S) int32 flattened block ids, S = L*M, table l's
+        block b stored as ``l*nb + b`` (``L*nb`` = invalid slot).
+      proj_blocks: (L*nb, B, K); vec_blocks: (L*nb, B, d);
+      norm_blocks: (L*nb, B) squared norms (+inf padded).
+      g: (Q, L, K); q: (Q, d); M: blocks per table (maps slot -> table).
+
+    Returns: d2 (Q, S*B), hw (Q, S*B) — same contract as
+    :func:`candidate_dist`, but the block gather happens inside the
+    kernel (one DMA per selected block for the whole schedule).
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    Qn, S = blk_idx.shape
+    lnb, B, K = proj_blocks.shape
+    d = vec_blocks.shape[-1]
+    q2 = jnp.sum(jnp.square(q), axis=-1, keepdims=True)  # (Q, 1)
+
+    kern = functools.partial(window_dist_kernel, lnb=lnb, exact=exact)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(Qn, S),
+        in_specs=[
+            pl.BlockSpec((1, 1, K), lambda qi, s, blk: (qi, s // M, 0)),  # g
+            pl.BlockSpec((1, d), lambda qi, s, blk: (qi, 0)),  # q
+            pl.BlockSpec((1, 1), lambda qi, s, blk: (qi, 0)),  # q2
+            pl.BlockSpec((1, B, K),
+                         lambda qi, s, blk: (jnp.minimum(blk[qi, s], lnb - 1), 0, 0)),
+            pl.BlockSpec((1, B, d),
+                         lambda qi, s, blk: (jnp.minimum(blk[qi, s], lnb - 1), 0, 0)),
+            pl.BlockSpec((1, B),
+                         lambda qi, s, blk: (jnp.minimum(blk[qi, s], lnb - 1), 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, B), lambda qi, s, blk: (qi, s, 0)),
+            pl.BlockSpec((1, 1, B), lambda qi, s, blk: (qi, s, 0)),
+        ],
+    )
+    d2, hw = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((Qn, S, B), jnp.float32),
+            jax.ShapeDtypeStruct((Qn, S, B), jnp.float32),
+        ],
+        interpret=_interp(interpret),
+    )(blk_idx, g, q, q2, proj_blocks, vec_blocks, norm_blocks)
+    return d2.reshape(Qn, S * B), hw.reshape(Qn, S * B)
 
 
 @functools.partial(jax.jit, static_argnames=("tile_q", "tile_n", "tile_d", "interpret"))

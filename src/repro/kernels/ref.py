@@ -9,7 +9,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["window_verify_ref", "candidate_verify_ref", "pairwise_l2_ref"]
+__all__ = [
+    "window_verify_ref",
+    "candidate_verify_ref",
+    "candidate_dist_ref",
+    "window_dist_ref",
+    "pairwise_l2_ref",
+]
 
 _INF = jnp.inf
 
@@ -73,6 +79,49 @@ def window_verify_ref(blk_idx, proj_blocks, vec_blocks, ids_blocks, g, q, w, n, 
         return -neg, jnp.where(jnp.isfinite(-neg), ids, n)
 
     return jax.vmap(dedup_one)(d2, ib)
+
+
+def candidate_dist_ref(cand_proj, cand_vecs, cand_norms, g, q, exact=False):
+    """Oracle for the one-pass distance + halfwidth kernel.
+
+    Args:
+      cand_proj: (Q, L, Ct, K); cand_vecs: (Q, L, Ct, d);
+      cand_norms: (Q, L, Ct) (+inf = invalid); g: (Q, L, K); q: (Q, d).
+
+    Returns: d2 (Q, L*Ct), hw (Q, L*Ct).
+    """
+    Qn, L, Ct, _ = cand_proj.shape
+    hw = jnp.max(jnp.abs(cand_proj - g[:, :, None, :]), axis=-1)
+    if exact:
+        d2 = jnp.sum(jnp.square(cand_vecs - q[:, None, None, :]), axis=-1)
+    else:
+        q2 = jnp.sum(jnp.square(q), axis=-1)
+        dots = jnp.einsum("qlcd,qd->qlc", cand_vecs, q)
+        d2 = jnp.maximum(cand_norms - 2.0 * dots + q2[:, None, None], 0.0)
+    return d2.reshape(Qn, L * Ct), hw.reshape(Qn, L * Ct)
+
+
+def window_dist_ref(blk_idx, proj_blocks, vec_blocks, norm_blocks, g, q, M,
+                    exact=False):
+    """Oracle for the scalar-prefetch one-pass kernel: XLA-level gather
+    of the flattened (L*nb) block axis, then :func:`candidate_dist_ref`
+    semantics per slot."""
+    lnb, B, K = proj_blocks.shape
+    Qn, S = blk_idx.shape
+    pb = jnp.take(proj_blocks, blk_idx, axis=0, mode="fill", fill_value=_INF)
+    vb = jnp.take(vec_blocks, blk_idx, axis=0, mode="fill", fill_value=0.0)
+    nb_ = jnp.take(norm_blocks, blk_idx, axis=0, mode="fill", fill_value=_INF)
+    g_rep = jnp.repeat(g, M, axis=1)  # (Q, S, K)
+    hw = jnp.max(jnp.abs(pb - g_rep[:, :, None, :]), axis=-1)  # (Q, S, B)
+    if exact:
+        d2 = jnp.sum(jnp.square(vb - q[:, None, None, :]), axis=-1)
+        # exact mode computes real distances for gathered-garbage slots;
+        # match the kernel contract by masking on hw only
+    else:
+        q2 = jnp.sum(jnp.square(q), axis=-1)
+        dots = jnp.einsum("qsbd,qd->qsb", vb, q)
+        d2 = jnp.maximum(nb_ - 2.0 * dots + q2[:, None, None], 0.0)
+    return d2.reshape(Qn, S * B), hw.reshape(Qn, S * B)
 
 
 def pairwise_l2_ref(Q, X):

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: fused window-query verification for DB-LSH.
+"""Pallas TPU kernels: window-query verification for DB-LSH.
 
 The query-phase hot spot of Algorithm 1 is verification: for each query,
 stream the candidate blocks selected by the MBR pass, test K-dim box
@@ -6,7 +6,7 @@ containment against the query-centric bucket W(G_i(q), w), compute exact
 squared L2 distances for in-box points, and maintain a running top-k —
 all without materializing per-candidate distances in HBM.
 
-Two variants:
+Per-radius fused variants (the multi-pass reference path):
 
 * ``candidate_verify_kernel`` — operates on pre-gathered candidates
   (``gather`` index layout). Grid: (Q, C/TILE_C); the top-k accumulator
@@ -18,6 +18,26 @@ Two variants:
   This is the zero-copy gather: the XLA-level ``jnp.take`` of blocks
   disappears entirely (``inline`` layout required). Same in-kernel fused
   verify + top-k.
+
+One-pass schedule variants (the serving path): the fixed-schedule
+search verifies each selected block **once** for the whole radius
+schedule, so these kernels drop the in-kernel window mask and top-k and
+instead emit, per candidate slot, the exact squared distance plus the
+slot's **window halfwidth** ``hw = max_k |p_k - g_k|`` — the smallest
+half window width that admits the slot.  The per-step box test then
+collapses to ``hw <= w_j / 2``, evaluated host-of-kernel against the
+whole schedule without touching the d-dim vectors again:
+
+* ``candidate_dist_kernel`` — pre-gathered candidates, grid
+  (Q, L, Ct/TILE_C) so each tile reads its own table's query projection.
+* ``window_dist_kernel`` — scalar-prefetch block DMA over the L tables
+  flattened to one (L*nb) block axis (``inline`` layout required).
+
+Both compute distances in the MXU form ``||x||^2 - 2<q,x> + ||q||^2``
+(one dot against the query instead of d diff+square lanes per slot)
+using squared norms precomputed at build time, with a static
+``exact=True`` escape hatch that restores the materialized-diff form
+(the norm trick changes fp32 rounding).
 
 The in-kernel top-k is a k-step vectorized selection (min + one-hot
 write + mask), free of data-dependent scatters so it lowers to pure VPU
@@ -141,3 +161,73 @@ def window_verify_kernel(
     nd, ni = merge_topk(d2, ids, topd_ref[0], topi_ref[0], k)
     topd_ref[0] = nd
     topi_ref[0] = ni
+
+
+def candidate_dist_kernel(
+    g_ref, q_ref, q2_ref, proj_ref, vec_ref, nrm_ref, d2_ref, hw_ref, *, exact: bool
+):
+    """One-pass distance + halfwidth over pre-gathered candidates.
+
+    Grid (Q, L, Ct_tiles). Blocks: proj (1,1,TC,K), vec (1,1,TC,d), nrm
+    (1,1,TC); g (1,1,K) per (query, table), q (1,d) / q2 (1,1) per
+    query; outputs d2 / hw (1,1,TC). No window mask, no top-k: the
+    radius schedule is applied outside against ``hw``."""
+    p = proj_ref[0, 0]  # (TC, K)
+    x = vec_ref[0, 0]  # (TC, d)
+    g = g_ref[0, 0]  # (K,)
+    q = q_ref[0]  # (d,)
+
+    hw = jnp.max(jnp.abs(p - g[None, :]), axis=-1)  # (TC,)
+    if exact:
+        diff = x - q[None, :]
+        d2 = jnp.sum(diff * diff, axis=-1)
+    else:
+        # MXU form: one dot against the query; +inf norms (padding,
+        # tombstones) poison d2 so no id compare is needed here.
+        d2 = jnp.maximum(
+            nrm_ref[0, 0] - 2.0 * jnp.dot(x, q) + q2_ref[0, 0], 0.0
+        )
+    d2_ref[0, 0] = d2
+    hw_ref[0, 0] = hw
+
+
+def window_dist_kernel(
+    blk_ref,  # scalar prefetch: (Q, S) int32 flattened block ids (S = L*M)
+    g_ref,  # (1, 1, K): the owning table's query projection
+    q_ref,  # (1, d)
+    q2_ref,  # (1, 1)
+    proj_ref,  # (1, B, K) block DMA'd via blk_ref
+    vec_ref,  # (1, B, d)
+    nrm_ref,  # (1, B)
+    d2_ref,  # (1, 1, B)
+    hw_ref,  # (1, 1, B)
+    *,
+    lnb: int,
+    exact: bool,
+):
+    """Grid (Q, S). Scalar-prefetch twin of ``candidate_dist_kernel``:
+    the index_map DMAs exactly the selected STR block of the flattened
+    (L*nb) table axis — the serving path's only touch of the d-dim
+    vectors for the entire radius schedule."""
+    qi = pl.program_id(0)
+    s = pl.program_id(1)
+
+    blk_valid = blk_ref[qi, s] < lnb
+    p = proj_ref[0]  # (B, K)
+    x = vec_ref[0]  # (B, d)
+    g = g_ref[0, 0]  # (K,)
+    q = q_ref[0]  # (d,)
+
+    hw = jnp.max(jnp.abs(p - g[None, :]), axis=-1)  # (B,)
+    # invalid slots DMA a clamped real block: force them out of every
+    # window so the schedule mask can never admit them
+    hw = jnp.where(blk_valid, hw, _INF)
+    if exact:
+        diff = x - q[None, :]
+        d2 = jnp.sum(diff * diff, axis=-1)
+    else:
+        d2 = jnp.maximum(
+            nrm_ref[0] - 2.0 * jnp.dot(x, q) + q2_ref[0, 0], 0.0
+        )
+    d2_ref[0, 0] = d2
+    hw_ref[0, 0] = hw

@@ -45,8 +45,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..checkpoint import Checkpointer
-from ..core import DBLSHParams, build, search_batch_fixed
-from ..core.index import DBLSHIndex
+from ..core import DBLSHParams, build, search_batch_fixed, validate_engine
+from ..core.index import DBLSHIndex, compute_norm_blocks
 from ..core import updates as _updates
 
 __all__ = ["CompactionPolicy", "CollectionStats", "Collection", "version_clock"]
@@ -86,6 +86,7 @@ _INDEX_ARRAY_FIELDS = (
     "mbr_hi",
     "data",
     "vec_blocks",
+    "norm_blocks",
 )
 
 
@@ -124,6 +125,7 @@ class Collection:
         built_n: int | None = None,
         stats: CollectionStats | None = None,
         version: int | None = None,
+        engine: str | None = None,
     ):
         if payload is not None:
             payload = jnp.asarray(payload)
@@ -136,6 +138,18 @@ class Collection:
         self.built_n = index.n if built_n is None else built_n
         self.stats = stats or CollectionStats()
         self.version = version_clock.next() if version is None else version
+        # per-collection verify-engine default: used whenever a search /
+        # service dispatch doesn't name one explicitly (None = defer to
+        # the caller's default)
+        if engine is not None:
+            validate_engine(engine)
+            if engine == "inline" and not index.params.inline_vectors:
+                raise ValueError(
+                    f"collection {name!r}: engine='inline' needs an index "
+                    "built with inline_vectors=True (the scalar-prefetch "
+                    "kernel streams the per-table vector copy)"
+                )
+        self.default_engine = engine
 
     # ------------------------------------------------------------ construction
     @classmethod
@@ -148,9 +162,11 @@ class Collection:
         params: DBLSHParams | None = None,
         payload=None,
         policy: CompactionPolicy | None = None,
+        engine: str | None = None,
         **derive_kw,
     ) -> "Collection":
-        """Build a fresh index over ``data`` (params derived if omitted)."""
+        """Build a fresh index over ``data`` (params derived if omitted).
+        ``engine`` sets the collection's default verify engine."""
         data = jnp.asarray(data, jnp.float32)
         kb, kc = jax.random.split(key)
         if params is None:
@@ -158,15 +174,18 @@ class Collection:
                 n=data.shape[0], d=data.shape[1], **derive_kw
             )
         index = build(kb, data, params)
-        return cls(name, index, payload=payload, policy=policy, key=kc)
+        return cls(name, index, payload=payload, policy=policy, key=kc,
+                   engine=engine)
 
     @classmethod
     def from_index(
         cls, name: str, index: DBLSHIndex, *, payload=None,
         policy: CompactionPolicy | None = None, key=None,
+        engine: str | None = None,
     ) -> "Collection":
         """Wrap an already-built index (e.g. a kNN-LM datastore)."""
-        return cls(name, index, payload=payload, policy=policy, key=key)
+        return cls(name, index, payload=payload, policy=policy, key=key,
+                   engine=engine)
 
     # -------------------------------------------------------------- properties
     @property
@@ -252,24 +271,28 @@ class Collection:
         *,
         r0: float = 1.0,
         steps: int = 8,
-        engine: str = "jnp",
+        engine: str | None = None,
         with_stats: bool = False,
         interpret: bool | None = None,
         rows: int | None = None,
+        exact: bool = False,
     ):
         """Batched (c,k)-ANN through the fixed-schedule serving path.
 
-        ``rows`` is the number of *real* query rows when ``Q`` carries
-        padding (the StoreService pads to its fixed batch-shape menu);
-        the query counter advances by ``rows``, not the padded shape.
-        The returned arrays are device futures — nothing here blocks, so
-        a caller may overlap host work with the search (DESIGN.md §6).
+        ``engine=None`` resolves to the collection's ``default_engine``
+        (falling back to 'jnp'). ``rows`` is the number of *real* query
+        rows when ``Q`` carries padding (the StoreService pads to its
+        fixed batch-shape menu); the query counter advances by ``rows``,
+        not the padded shape.  The returned arrays are device futures —
+        nothing here blocks, so a caller may overlap host work with the
+        search (DESIGN.md §6).
         """
         Q = jnp.atleast_2d(jnp.asarray(Q, jnp.float32))
         self.stats.queries += int(Q.shape[0]) if rows is None else int(rows)
         return search_batch_fixed(
-            self.index, Q, k=k, r0=r0, steps=steps, engine=engine,
-            with_stats=with_stats, interpret=interpret,
+            self.index, Q, k=k, r0=r0, steps=steps,
+            engine=engine or self.default_engine or "jnp",
+            with_stats=with_stats, interpret=interpret, exact=exact,
         )
 
     def get_payload(self, ids):
@@ -305,6 +328,7 @@ class Collection:
             "stats": self.stats.as_dict(),
             "has_payload": self.payload is not None,
             "version": self.version,
+            "engine": self.default_engine,
         }
         ck.save(step, tree, meta)
         return step
@@ -313,10 +337,16 @@ class Collection:
     def restore(cls, directory: str, step: int | None = None) -> "Collection":
         tree, meta = Checkpointer(directory).restore(step)
         params = DBLSHParams(**meta["params"])
-        index = DBLSHIndex(
-            **{f: jnp.asarray(tree[f]) for f in _INDEX_ARRAY_FIELDS},
-            params=params,
-        )
+        arrays = {
+            f: jnp.asarray(tree[f]) for f in _INDEX_ARRAY_FIELDS if f in tree
+        }
+        if "norm_blocks" not in arrays:
+            # snapshots from before the MXU-verify norm cache: rebuild it
+            # from the persisted data/ids (cheap, one reduction per point)
+            arrays["norm_blocks"] = compute_norm_blocks(
+                arrays["data"], arrays["ids_blocks"]
+            )
+        index = DBLSHIndex(**arrays, params=params)
         payload = jnp.asarray(tree["payload"]) if meta["has_payload"] else None
         col = cls(
             meta["name"],
@@ -330,5 +360,6 @@ class Collection:
             # must never alias cache entries of any live (possibly
             # diverged) collection with the same name — see module doc.
             version=version_clock.advance_past(meta.get("version", 0)),
+            engine=meta.get("engine"),
         )
         return col

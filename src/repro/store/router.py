@@ -49,6 +49,13 @@ class ShardedCollection:
         # drawn from the shared clock so service-level caches key on it
         # exactly like a local Collection's.
         self.version = version_clock.next()
+        # the sharded path always verifies through the jnp engine;
+        # ``fixed_engine`` tells the StoreService's engine resolution to
+        # ignore request/collection/service preferences entirely, so
+        # tickets and cache keys reflect the engine that actually ran
+        # (and a drained batch is never split over engines pointlessly)
+        self.fixed_engine = "jnp"
+        self.default_engine = None
 
     @classmethod
     def create(
@@ -88,32 +95,28 @@ class ShardedCollection:
         *,
         r0: float = 1.0,
         steps: int = 8,
-        engine: str = "jnp",
+        engine: str | None = None,
         with_stats: bool = False,
         interpret: bool | None = None,
         rows: int | None = None,
+        exact: bool = False,
     ):
         """Global (c,k)-ANN: per-shard fixed-schedule search + all_gather
-        top-k merge. ``engine`` / ``interpret`` are accepted for API
-        parity; the sharded path always verifies through the jnp engine.
-        ``rows`` (real rows in a service-padded batch) is accepted for
-        parity too — the sharded collection keeps no query counter."""
+        top-k merge. ``engine`` / ``interpret`` / ``exact`` are accepted
+        for API parity; the sharded path always verifies through the jnp
+        engine.  ``rows`` (real rows in a service-padded batch) is
+        accepted for parity too — the sharded collection keeps no query
+        counter.  With ``with_stats`` the per-shard probe statistics
+        survive the collective merge (``search_sharded`` aggregates
+        candidates by psum and radius_steps by pmax), so ``svc.stats()``
+        reports real per-query probe effort for sharded collections."""
         del engine, interpret, rows
         Q = jnp.atleast_2d(jnp.asarray(Q, jnp.float32))
         k = k or self.sharded.index.params.k
-        d, i = search_sharded(
-            self.sharded, Q, k=k, r0=r0, steps=steps, mesh=self.mesh
+        return search_sharded(
+            self.sharded, Q, k=k, r0=r0, steps=steps, mesh=self.mesh,
+            with_stats=with_stats, exact=exact,
         )
-        if with_stats:
-            # per-shard probe stats don't survive the collective merge yet;
-            # report the schedule length as a conservative step count.
-            qn = Q.shape[0]
-            stats = {
-                "radius_steps": jnp.full((qn,), steps, jnp.int32),
-                "candidates": jnp.zeros((qn,), jnp.int32),
-            }
-            return d, i, stats
-        return d, i
 
     def get_payload(self, ids):
         """Global-id payload lookup; sentinel ids clamp to the last row —

@@ -37,7 +37,11 @@ percentiles are deterministic under test.
 Top-k is a *service-level* constant (``default_k``): per-request ``k``
 may be any value up to it and is sliced from the service-k result
 (cached entries store the full service-k row), which keeps the dispatch
-shape set closed.  Any object with ``search(Q, k=..., r0=..., steps=...,
+shape set closed.  The verify engine resolves per request — explicit
+``submit``/``serve`` override, else the collection's ``default_engine``,
+else the service default — is frozen into the ticket at admission, keys
+the result cache, and splits a drained batch per engine at issue time
+(one compiled program per engine).  Any object with ``search(Q, k=..., r0=..., steps=...,
 engine=..., with_stats=..., rows=...)``, ``name``, and ``version`` can
 be attached — a local :class:`~repro.store.collection.Collection` or
 the sharded router wrapper in :mod:`repro.store.router`.
@@ -52,7 +56,7 @@ from collections import deque
 
 import numpy as np
 
-from ..core.serve_search import PendingSearch
+from ..core.serve_search import PendingSearch, validate_engine
 from .cache import CachedResult, QueryResultCache
 
 __all__ = ["QueryRequest", "QuotaExceeded", "StoreService", "TenantQuota"]
@@ -72,6 +76,8 @@ class QueryRequest:
     k: int
     submitted: float
     tenant: str = "default"
+    engine: str = "jnp"               # resolved at submit (request ->
+                                      # collection default -> service)
     done: bool = False
     cached: bool = False              # served from the query-result cache
     dists: np.ndarray | None = None   # (k,) ascending; +inf = unfilled slot
@@ -236,6 +242,7 @@ class _InFlight:
     payload: object        # device future (m, k, ...) or None
     version: int | None    # version the results belong to; None = uncacheable
     overlapped: bool       # issued while another batch was in flight
+    engine: str            # resolved engine the batch was dispatched with
 
 
 class StoreService:
@@ -324,15 +331,32 @@ class StoreService:
         return self.collections[name]
 
     # ---------------------------------------------------------------- submit
+    def resolve_engine(self, collection: str, engine: str | None = None) -> str:
+        """Three-level engine resolution: explicit request override, then
+        the collection's ``default_engine``, then the service default.
+        A collection that cannot honor engine selection (e.g. the sharded
+        router, which always verifies through jnp) declares
+        ``fixed_engine``; it wins over everything so tickets and cache
+        keys name the engine that actually runs."""
+        col = self.collections[collection]
+        fixed = getattr(col, "fixed_engine", None)
+        if fixed is not None:
+            return validate_engine(fixed)
+        if engine is None:
+            engine = getattr(col, "default_engine", None) or self.engine
+        return validate_engine(engine)
+
     def submit(
         self, collection: str, query, k: int | None = None,
-        tenant: str = "default",
+        tenant: str = "default", engine: str | None = None,
     ) -> QueryRequest:
         """Enqueue one query; returns its ticket (filled once dispatched).
-        Raises :class:`QuotaExceeded` when the tenant is over quota —
-        rejected requests are never enqueued."""
+        ``engine`` overrides the collection / service engine defaults for
+        this request. Raises :class:`QuotaExceeded` when the tenant is
+        over quota — rejected requests are never enqueued."""
         if collection not in self.collections:
             raise KeyError(f"unknown collection {collection!r}")
+        engine = self.resolve_engine(collection, engine)
         k = self.default_k if k is None else k
         if k > self.default_k:
             raise ValueError(
@@ -358,6 +382,7 @@ class StoreService:
             k=k,
             submitted=now,
             tenant=tenant,
+            engine=engine,
         )
         self._uid += 1
         self._queues[collection].setdefault(tenant, deque()).append(req)
@@ -403,7 +428,14 @@ class StoreService:
                 drained += len(reqs)
                 misses = self._serve_cached(name, reqs)
                 if misses:
-                    self._issue(name, misses)
+                    # one device program per engine: split mixed batches
+                    # (requests resolve engines at submit, so a batch is
+                    # mixed only under per-request overrides)
+                    by_engine: dict[str, list[QueryRequest]] = {}
+                    for r in misses:
+                        by_engine.setdefault(r.engine, []).append(r)
+                    for eng, group in by_engine.items():
+                        self._issue(name, group, eng)
         if force:
             self._complete_all()
         return drained
@@ -458,9 +490,10 @@ class StoreService:
         return out
 
     # ------------------------------------------------------------- the cache
-    def _cache_key(self, name: str, version: int, query: np.ndarray):
+    def _cache_key(self, name: str, version: int, query: np.ndarray,
+                   engine: str):
         return self.cache.key(
-            name, version, query, self.default_k, self.engine, self.r0,
+            name, version, query, self.default_k, engine, self.r0,
             self.steps,
         )
 
@@ -476,7 +509,9 @@ class StoreService:
             return reqs
         misses = []
         for r in reqs:
-            entry = self.cache.get(self._cache_key(name, version, r.query))
+            entry = self.cache.get(
+                self._cache_key(name, version, r.query, r.engine)
+            )
             if entry is None:
                 misses.append(r)
                 continue
@@ -499,10 +534,13 @@ class StoreService:
         return misses
 
     # ------------------------------------------------- issue / complete stages
-    def _issue(self, name: str, reqs: list[QueryRequest]) -> None:
+    def _issue(self, name: str, reqs: list[QueryRequest],
+               engine: str | None = None) -> None:
         """Stage 1: pad host-side and put the batch on the device without
         blocking (``col.search`` returns device futures)."""
         col = self.collections[name]
+        if engine is None:
+            engine = self.resolve_engine(name)
         m = len(reqs)
         shape = self._shape_for(m)
         d = reqs[0].query.shape[0]
@@ -511,7 +549,7 @@ class StoreService:
             Q[j] = r.query
         dists, ids, stats = col.search(
             Q, k=self.default_k, r0=self.r0, steps=self.steps,
-            engine=self.engine, with_stats=True, interpret=self.interpret,
+            engine=engine, with_stats=True, interpret=self.interpret,
             rows=m,  # only m of `shape` rows are real queries
         )
         payload = None
@@ -525,6 +563,7 @@ class StoreService:
             payload=payload,
             version=getattr(col, "version", None),  # None = uncacheable
             overlapped=len(self._inflight) > 0,
+            engine=engine,
         )
         self._inflight.append(batch)
         while len(self._inflight) > self.inflight_depth:
@@ -555,7 +594,8 @@ class StoreService:
                 # copies: r.dists/r.ids above are views of the same batch
                 # arrays, and callers own (and may mutate) their tickets
                 self.cache.put(
-                    self._cache_key(batch.name, batch.version, r.query),
+                    self._cache_key(batch.name, batch.version, r.query,
+                                    batch.engine),
                     CachedResult(
                         dists=dists[j].copy(),
                         ids=ids[j].copy(),
@@ -577,7 +617,7 @@ class StoreService:
 
     # ------------------------------------------------------------ convenience
     def serve(self, collection: str, Q, k: int | None = None,
-              tenant: str = "default"):
+              tenant: str = "default", engine: str | None = None):
         """Submit a whole query matrix as single requests, flush, and return
         stacked (dists, ids) — the micro-batching round trip.  All-or-
         nothing under quota: if any row is rejected, the rows already
@@ -586,7 +626,10 @@ class StoreService:
         reqs = []
         try:
             for q in np.atleast_2d(Q):
-                reqs.append(self.submit(collection, q, k=k, tenant=tenant))
+                reqs.append(
+                    self.submit(collection, q, k=k, tenant=tenant,
+                                engine=engine)
+                )
         except QuotaExceeded:
             queue = self._queues[collection].get(tenant)
             for r in reqs:

@@ -47,6 +47,16 @@ for q in range(queries.shape[0]):
     assert (ids < 4096).all()
     real = np.linalg.norm(dn[ids] - np.asarray(queries[q]), axis=-1)
     np.testing.assert_allclose(d_s[q][fin], real, rtol=3e-3, atol=3e-3)
+
+# per-shard probe stats survive the collective merge: candidates is the
+# psum over the 8 shards, radius_steps the pmax — both real per query
+d_s2, i_s2, st = search_sharded(sh, queries, k=10, r0=0.5, steps=8,
+                                mesh=mesh, with_stats=True)
+np.testing.assert_array_equal(np.asarray(i_s2), i_s)
+cand = np.asarray(st["candidates"]); steps_t = np.asarray(st["radius_steps"])
+assert cand.shape == steps_t.shape == (queries.shape[0],)
+assert (cand > 0).all(), "per-shard candidate counts dropped at the merge"
+assert ((steps_t >= 1) & (steps_t <= 8)).all()
 print("SHARDED_ANN_OK", rec)
 """
 

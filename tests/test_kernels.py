@@ -10,10 +10,18 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.kernels import candidate_verify, pairwise_l2, window_verify
+from repro.kernels import (
+    candidate_dist,
+    candidate_verify,
+    pairwise_l2,
+    window_dist,
+    window_verify,
+)
 from repro.kernels.ref import (
+    candidate_dist_ref,
     candidate_verify_ref,
     pairwise_l2_ref,
+    window_dist_ref,
     window_verify_ref,
 )
 
@@ -101,6 +109,69 @@ def test_window_verify_matches_ref(Q, M, nb, B, K, d, k):
     # ref gathers duplicate blocks twice; kernel dedups identical pairs, so
     # compare distances only where both finite, and id-sets per query.
     _assert_topk_equal(got, ref)
+
+
+@pytest.mark.parametrize("Q,L,Ct,K,d", [
+    (2, 3, 64, 4, 16),
+    (1, 5, 300, 12, 96),   # non-multiple Ct
+    (4, 1, 32, 2, 8),
+])
+@pytest.mark.parametrize("exact", [False, True])
+def test_candidate_dist_matches_ref(Q, L, Ct, K, d, exact):
+    ks = jax.random.split(jax.random.key(Q * Ct + d), 4)
+    cp = jax.random.normal(ks[0], (Q, L, Ct, K)) * 2.0
+    cv = jax.random.normal(ks[1], (Q, L, Ct, d))
+    cn = jnp.sum(jnp.square(cv), axis=-1)
+    # sprinkle invalid slots: +inf proj / norm (padding contract)
+    cp = cp.at[:, :, ::7, :].set(jnp.inf)
+    cn = cn.at[:, :, ::7].set(jnp.inf)
+    g = jax.random.normal(ks[2], (Q, L, K))
+    q = jax.random.normal(ks[3], (Q, d))
+    d2, hw = candidate_dist(cp, cv, cn, g, q, exact=exact, interpret=True)
+    d2r, hwr = candidate_dist_ref(cp, cv, cn, g, q, exact=exact)
+    np.testing.assert_allclose(np.asarray(hw), np.asarray(hwr), rtol=1e-6)
+    # in exact mode invalid slots carry real (ignored) distances; the
+    # contract masks them through hw, so compare where hw is finite
+    mask = np.isfinite(np.asarray(hwr))
+    np.testing.assert_allclose(
+        np.asarray(d2)[mask], np.asarray(d2r)[mask], rtol=1e-4, atol=1e-4
+    )
+    if not exact:
+        assert np.isinf(np.asarray(d2)[~np.isfinite(np.asarray(cn)).reshape(
+            np.asarray(d2).shape)]).all()
+
+
+@pytest.mark.parametrize("Q,L,M,nb,B,K,d", [
+    (2, 2, 4, 16, 32, 4, 16),
+    (1, 3, 8, 8, 64, 12, 96),   # M == nb
+])
+@pytest.mark.parametrize("exact", [False, True])
+def test_window_dist_matches_ref(Q, L, M, nb, B, K, d, exact):
+    ks = jax.random.split(jax.random.key(Q + M + nb + L), 6)
+    lnb = L * nb
+    proj_blocks = jax.random.normal(ks[0], (lnb, B, K)) * 2.0
+    vec_blocks = jax.random.normal(ks[1], (lnb, B, d))
+    norm_blocks = jnp.sum(jnp.square(vec_blocks), axis=-1)
+    # tail padding: +inf proj/norm on the last block's back half
+    proj_blocks = proj_blocks.at[-1, B // 2:, :].set(jnp.inf)
+    norm_blocks = norm_blocks.at[-1, B // 2:].set(jnp.inf)
+    # block ids include the invalid sentinel lnb
+    blk_idx = jax.random.randint(ks[3], (Q, L * M), 0, lnb + 1).astype(jnp.int32)
+    g = jax.random.normal(ks[4], (Q, L, K))
+    q = jax.random.normal(ks[5], (Q, d))
+    d2, hw = window_dist(blk_idx, proj_blocks, vec_blocks, norm_blocks, g, q,
+                         M=M, exact=exact, interpret=True)
+    d2r, hwr = window_dist_ref(blk_idx, proj_blocks, vec_blocks, norm_blocks,
+                               g, q, M, exact=exact)
+    np.testing.assert_allclose(np.asarray(hw), np.asarray(hwr), rtol=1e-6)
+    mask = np.isfinite(np.asarray(hwr))
+    np.testing.assert_allclose(
+        np.asarray(d2)[mask], np.asarray(d2r)[mask], rtol=1e-4, atol=1e-4
+    )
+    # invalid block slots must be unadmittable at any radius
+    invalid = np.asarray(blk_idx) >= lnb
+    hw_slots = np.asarray(hw).reshape(Q, L * M, B)
+    assert np.isinf(hw_slots[invalid]).all()
 
 
 @pytest.mark.parametrize("nq,nn,d", [

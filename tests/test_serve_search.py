@@ -24,18 +24,26 @@ def setup():
     return data, queries, params, index
 
 
-def test_engines_agree(setup):
-    """jnp / kernel / inline engines return identical results."""
+@pytest.mark.parametrize("exact", [True, False])
+def test_engines_agree(setup, exact):
+    """jnp / kernel / inline engines return matching results.
+
+    ``exact=True`` (diff-form distances) pins tight numeric agreement;
+    the MXU norm form re-associates the dot reduction per engine, so
+    there the contract is id-set equality + loose distance agreement
+    (DESIGN.md §7)."""
     data, queries, params, index = setup
     outs = {}
     for engine in ["jnp", "kernel", "inline"]:
         d, i = search_batch_fixed(
-            index, queries, k=8, r0=0.5, steps=6, engine=engine, interpret=True
+            index, queries, k=8, r0=0.5, steps=6, engine=engine,
+            interpret=True, exact=exact,
         )
         outs[engine] = (np.asarray(d), np.asarray(i))
+    tol = 1e-5 if exact else 1e-2
     for engine in ["kernel", "inline"]:
         np.testing.assert_allclose(
-            outs[engine][0], outs["jnp"][0], rtol=1e-5, atol=1e-5, err_msg=engine
+            outs[engine][0], outs["jnp"][0], rtol=tol, atol=tol, err_msg=engine
         )
         # id sets must match wherever distances are finite (ties may permute)
         for qq in range(outs["jnp"][0].shape[0]):

@@ -249,18 +249,27 @@ def test_sharded_collection_matches_local(setup):
         "sh", kb, data, mesh, params=params, payload=np.arange(1200)
     )
     assert sc.n == 1200
-    d_s, i_s = sc.search(queries, k=10, r0=0.5, steps=8)
+    # exact mode pins tight numeric parity (the norm-form dot reduction
+    # is re-associated per compiled program — DESIGN.md §7); the default
+    # norm path pins id parity below through the service round trip.
+    d_s, i_s = sc.search(queries, k=10, r0=0.5, steps=8, exact=True)
 
     local = build(kb, jnp.asarray(data), params)
-    d_l, i_l = search_batch_fixed(local, jnp.asarray(queries), k=10, r0=0.5, steps=8)
+    d_l, i_l = search_batch_fixed(
+        local, jnp.asarray(queries), k=10, r0=0.5, steps=8, exact=True
+    )
     np.testing.assert_array_equal(np.asarray(i_s), np.asarray(i_l))
     np.testing.assert_allclose(np.asarray(d_s), np.asarray(d_l), rtol=1e-6)
+    # norm-form ids still agree with the local norm-form search
+    _, i_sn = sc.search(queries, k=10, r0=0.5, steps=8)
+    _, i_ln = search_batch_fixed(local, jnp.asarray(queries), k=10, r0=0.5, steps=8)
+    np.testing.assert_array_equal(np.asarray(i_sn), np.asarray(i_ln))
 
     # the service serves a sharded collection through the same queue
     svc = StoreService(batch_shapes=(8,), default_k=10, r0=0.5, steps=8)
     svc.attach(sc)
     dd, ii, reqs = svc.serve("sh", queries[:8], k=10)
-    np.testing.assert_array_equal(ii, np.asarray(i_l[:8]))
+    np.testing.assert_array_equal(ii, np.asarray(i_ln[:8]))
     assert reqs[0].payload is not None
 
 
@@ -275,3 +284,118 @@ def test_open_collection_routing(setup):
         c=1.5, w0=3.6, t=32, k=10,
     )
     assert isinstance(col2, Collection)
+
+
+# ---------------------------------------------------------------------------
+# Per-collection engine defaults + per-shard probe stats (ROADMAP items)
+# ---------------------------------------------------------------------------
+
+
+def test_collection_engine_default_resolution(setup, tmp_path):
+    """Engine resolves request-override > collection default > service
+    default; the default survives snapshot/restore; bad names reject."""
+    data, queries, kb = setup
+    col = Collection.create(
+        "eng", kb, data, c=1.5, w0=3.6, t=32, k=10, engine="inline",
+        inline_vectors=True,
+    )
+    assert col.default_engine == "inline"
+    svc = StoreService(batch_shapes=(4,), default_k=10, r0=0.5, steps=8,
+                       engine="jnp", interpret=True)
+    svc.attach(col)
+
+    # no override -> the collection's default engine
+    r1 = svc.submit("eng", queries[0])
+    assert r1.engine == "inline"
+    # explicit override wins
+    r2 = svc.submit("eng", queries[1], engine="jnp")
+    assert r2.engine == "jnp"
+    svc.flush()
+    assert r1.done and r2.done
+
+    # a collection without a default falls back to the service engine
+    col2 = Collection.create("plain", kb, data, c=1.5, w0=3.6, t=32, k=10)
+    assert col2.default_engine is None
+    svc.attach(col2)
+    assert svc.submit("plain", queries[2]).engine == "jnp"
+    svc.flush()
+
+    # mixed engines in one drained batch split into per-engine dispatches
+    # but still serve every ticket
+    reqs = [svc.submit("eng", q) for q in queries[3:5]]
+    reqs.append(svc.submit("eng", queries[5], engine="jnp"))
+    svc.flush()
+    assert all(r.done for r in reqs)
+
+    # validation reuses the core engine-name check
+    with pytest.raises(ValueError):
+        Collection.create("bad", kb, data, c=1.5, w0=3.6, t=32, k=10,
+                          engine="vulkan")
+    with pytest.raises(ValueError):
+        svc.submit("eng", queries[0], engine="vulkan")
+    # an inline default needs the inline layout — fail at create, not at
+    # the first jitted dispatch
+    with pytest.raises(ValueError):
+        Collection.create("bad2", kb, data, c=1.5, w0=3.6, t=32, k=10,
+                          engine="inline")
+
+    # the default persists through snapshot/restore
+    step = col.snapshot(str(tmp_path / "eng"))
+    col3 = Collection.restore(str(tmp_path / "eng"), step)
+    assert col3.default_engine == "inline"
+
+
+def test_engine_default_results_match_explicit(setup):
+    """A collection-default engine must produce the same results as the
+    same engine passed explicitly (resolution changes routing only)."""
+    data, queries, kb = setup
+    col = Collection.create(
+        "engeq", kb, data, c=1.5, w0=3.6, t=32, k=10, engine="kernel",
+        inline_vectors=True,
+    )
+    d_def, i_def = col.search(queries[:4], k=10, r0=0.5, steps=8,
+                              interpret=True)
+    d_exp, i_exp = col.search(queries[:4], k=10, r0=0.5, steps=8,
+                              engine="kernel", interpret=True)
+    np.testing.assert_array_equal(np.asarray(d_def), np.asarray(d_exp))
+    np.testing.assert_array_equal(np.asarray(i_def), np.asarray(i_exp))
+
+
+def test_sharded_probe_stats_surface(setup):
+    """Per-shard probe stats flow through the collective merge into
+    svc.stats() instead of being dropped at the boundary: on a 1-shard
+    mesh the aggregates equal the local collection's own stats."""
+    data, queries, kb = setup
+    mesh = jax.make_mesh((1,), ("data",))
+    from repro.core import DBLSHParams, build
+
+    params = DBLSHParams.derive(n=1200, d=16, c=1.5, w0=3.6, t=32, k=10)
+    sc = ShardedCollection.create("shstats", kb, data, mesh, params=params)
+    d_s, i_s, st = sc.search(queries[:8], k=10, r0=0.5, steps=8,
+                             with_stats=True)
+    local = build(kb, jnp.asarray(data), params)
+    *_, st_l = search_batch_fixed(local, jnp.asarray(queries[:8]), k=10,
+                                  r0=0.5, steps=8, with_stats=True)
+    np.testing.assert_array_equal(
+        np.asarray(st["candidates"]), np.asarray(st_l["candidates"])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(st["radius_steps"]), np.asarray(st_l["radius_steps"])
+    )
+
+    # ...and the service-level snapshot reports them
+    svc = StoreService(batch_shapes=(8,), default_k=10, r0=0.5, steps=8)
+    svc.attach(sc)
+    svc.serve("shstats", queries[:8], k=10)
+    snap = svc.stats("shstats")
+    assert snap["mean_candidates"] > 0
+    assert 1 <= snap["mean_radius_steps"] <= 8
+
+    # the sharded path ignores engine selection, so resolution pins its
+    # fixed engine: overrides share one cache key and honest tickets
+    r1 = svc.submit("shstats", queries[0], engine="kernel")
+    svc.flush()
+    assert r1.engine == "jnp"
+    r2 = svc.submit("shstats", queries[0], engine="inline")
+    svc.flush()
+    assert r2.cached
