@@ -46,6 +46,16 @@ def recall_and_ratio(dists, ids, gt_d, gt_i, k):
     return float(np.mean(recs)), float(np.mean(ratios))
 
 
+def recall_at(ids, gt_i, k):
+    """Mean recall@k of returned ids vs brute-force ground-truth ids."""
+    ids = np.asarray(ids)[:, :k]
+    gt_i = np.asarray(gt_i)[:, :k]
+    return float(np.mean([
+        len(set(a.tolist()) & set(b.tolist())) / k
+        for a, b in zip(ids, gt_i)
+    ]))
+
+
 def timed(fn, *args, repeats=3, **kw):
     """jit warmup + best-of wall time in ms."""
     out = fn(*args, **kw)

@@ -18,6 +18,8 @@ def main() -> None:
                     help="skip the store-throughput sweep (figures only)")
     ap.add_argument("--skip-hotpath", action="store_true",
                     help="skip the one-pass search hot-path comparison")
+    ap.add_argument("--skip-frontier", action="store_true",
+                    help="skip the adaptive-vs-fixed recall frontier")
     args = ap.parse_args()
 
     from . import fig4_rho, fig5_effect_n, fig8_effect_k, fig9_recall_time, table4_query_perf
@@ -67,6 +69,24 @@ def main() -> None:
             print(f"hotpath/{eng},{1e6 / r['qps_new']:.1f},"
                   f"speedup={r['speedup']};qps_ref={r['qps_ref']};"
                   f"recall={r['recall_new']:.3f}")
+
+    if not args.skip_frontier:
+        from . import recall_frontier
+
+        rep = recall_frontier.run(
+            n=max(8192, int(100_000 * args.scale)),
+            d=64 if args.scale >= 1.0 else 24,
+            smoke=args.scale < 1.0,
+        )
+        for row in rep["fixed"]:
+            print(f"frontier/fixed/steps{row['steps']},"
+                  f"{1e6 / row['qps']:.1f},"
+                  f"recall={row['recall']:.3f};slots={row['mean_slots']}")
+        for tag in ("adaptive", "planned_adaptive"):
+            r = rep[tag]
+            print(f"frontier/{tag},{1e6 / r['qps']:.1f},"
+                  f"recall={r['recall']:.3f};slots={r['mean_slots']};"
+                  f"term_step={r['mean_term_step']}")
 
     if not args.skip_roofline:
         from . import roofline

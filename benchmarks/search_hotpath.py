@@ -40,26 +40,10 @@ from repro.core import (
 from repro.core.serve_search import _select_blocks
 from repro.data import make_clustered, normalize_scale
 
-
-def _timed(fn, repeats: int):
-    out = fn()
-    jax.block_until_ready(out)
-    best = np.inf
-    for _ in range(max(1, repeats)):
-        t0 = time.perf_counter()
-        out = fn()
-        jax.block_until_ready(out)
-        best = min(best, time.perf_counter() - t0)
-    return out, best
-
-
-def _recall(ids, gt_i, k):
-    ids = np.asarray(ids)
-    gt_i = np.asarray(gt_i)
-    return float(np.mean([
-        len(set(a[:k].tolist()) & set(b[:k].tolist())) / k
-        for a, b in zip(ids, gt_i)
-    ]))
+try:  # module run (benchmarks.run) vs script run (python benchmarks/...)
+    from .common import recall_at, timed
+except ImportError:
+    from common import recall_at, timed
 
 
 def per_step_slots(index, Q, r0: float, steps: int):
@@ -150,28 +134,28 @@ def run(
         Q = jnp.asarray(queries[:nq])
         rep = repeats if engine == "jnp" else 1
 
-        _, t_ref = _timed(
+        _, ms_ref = timed(
             lambda: search_batch_fixed_ref(
                 index, Q, k=k, r0=r0, steps=steps, engine=engine
             ),
-            rep,
+            repeats=max(1, rep),
         )
-        (d_new, i_new), t_new = _timed(
+        (d_new, i_new), ms_new = timed(
             lambda: search_batch_fixed(
                 index, Q, k=k, r0=r0, steps=steps, engine=engine
             ),
-            rep,
+            repeats=max(1, rep),
         )
         d_ref, i_ref = search_batch_fixed_ref(
             index, Q, k=k, r0=r0, steps=steps, engine=engine
         )
-        rec_ref = _recall(i_ref, gt_i[:nq], k)
-        rec_new = _recall(i_new, gt_i[:nq], k)
+        rec_ref = recall_at(i_ref, gt_i[:nq], k)
+        rec_new = recall_at(i_new, gt_i[:nq], k)
         report["engines"][engine] = {
             "n_queries": nq,
-            "qps_ref": round(nq / t_ref, 2),
-            "qps_new": round(nq / t_new, 2),
-            "speedup": round(t_ref / t_new, 3),
+            "qps_ref": round(nq * 1e3 / ms_ref, 2),
+            "qps_new": round(nq * 1e3 / ms_new, 2),
+            "speedup": round(ms_ref / ms_new, 3),
             "recall_ref": round(rec_ref, 4),
             "recall_new": round(rec_new, 4),
         }

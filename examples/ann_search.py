@@ -70,6 +70,17 @@ def main(scale: float = 0.25, dataset: str = "sift-s"):
     print(f"[stats] {json.dumps(svc.stats('demo'), indent=2)}")
     print(f"[cache] {svc.cache_stats()} rejected={rejected}")
 
+    # --- recall-target planning: calibrate once, then ask for outcomes ---
+    # (repro.tune: the planner picks (r0, steps) off the table and C1/C2
+    # adaptive termination stops easy queries before the planned budget)
+    col.calibrate(queries[: min(32, len(queries))], k=k)
+    t = svc.submit("demo", queries[0], k=k, tenant="web", recall_target=0.9)
+    svc.flush()
+    hist = svc.stats("demo")["termination_steps_hist"]
+    print(f"[tune] recall_target=0.9 -> planned steps={t.plan.steps} "
+          f"(r0={t.plan.r0:.3f}), took {t.radius_steps} steps; "
+          f"termination histogram {hist}")
+
     # --- online growth: adds cross the policy threshold -> auto-compact ---
     # (every mutation bumps col.version, so cached results can't go stale)
     v0 = col.version

@@ -17,6 +17,7 @@ from .baselines import C2Index, FBLSH, MQIndex, brute_force
 from .serve_search import (
     ENGINES,
     PendingSearch,
+    Termination,
     search_batch_fixed,
     search_batch_fixed_dispatch,
     search_batch_fixed_ref,
@@ -39,6 +40,7 @@ __all__ = [
     "search_batch_fixed",
     "search_batch_fixed_dispatch",
     "search_batch_fixed_ref",
+    "Termination",
     "PendingSearch",
     "ENGINES",
     "validate_engine",

@@ -82,10 +82,11 @@ def build_sharded(key, data, params_local: DBLSHParams, mesh, axis: str = "data"
     return ShardedDBLSH(index=idx, axis=axis, n_total=n, n_local=n_local)
 
 
-@partial(jax.jit, static_argnames=("k", "steps", "mesh", "with_stats", "exact"))
+@partial(jax.jit, static_argnames=("k", "steps", "mesh", "with_stats",
+                                   "exact", "termination"))
 def search_sharded(s: ShardedDBLSH, Q: jax.Array, k: int = 0, r0: float = 1.0,
                    steps: int = 8, mesh=None, with_stats: bool = False,
-                   exact: bool = False):
+                   exact: bool = False, termination=None):
     """Replicated queries -> (Q, k) global distances/ids.
 
     With ``with_stats`` the per-shard probe statistics survive the
@@ -94,7 +95,15 @@ def search_sharded(s: ShardedDBLSH, Q: jax.Array, k: int = 0, r0: float = 1.0,
     shards (total distinct slots fetched fleet-wide on the query's
     behalf) and ``radius_steps`` the pmax (the schedule runs lockstep,
     so the slowest shard's step count is the query's wall-clock probe
-    depth)."""
+    depth).
+
+    ``termination`` (a :class:`~repro.core.serve_search.Termination`)
+    applies *per shard*: each device evaluates the C1/C2 done masks over
+    its local candidates and exits its own while_loop independently (no
+    collectives inside the loop).  This is sound and conservative — a
+    shard's local k-th distance upper-bounds the global k-th, so local
+    C2 never fires before the global condition would, and local C1 sees
+    only the shard's own verified slots."""
     p = s.index.params
     k = k or p.k
     axis = s.axis
@@ -103,7 +112,7 @@ def search_sharded(s: ShardedDBLSH, Q: jax.Array, k: int = 0, r0: float = 1.0,
     def local_search(idx_tree, Qr):
         out = search_batch_fixed(
             idx_tree, Qr, k=k, r0=r0, steps=steps, with_stats=with_stats,
-            exact=exact,
+            exact=exact, termination=termination,
         )
         d, i = out[0], out[1]
         rank = jax.lax.axis_index(axis)

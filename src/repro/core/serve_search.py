@@ -50,6 +50,7 @@ one-pass pipeline and the baseline of ``benchmarks/search_hotpath.py``.
 
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 
 import jax
@@ -60,6 +61,7 @@ from .query import merge_dedup_topk
 from .. import kernels
 
 __all__ = [
+    "Termination",
     "search_batch_fixed",
     "search_batch_fixed_ref",
     "search_batch_fixed_dispatch",
@@ -81,6 +83,44 @@ def validate_engine(engine: str) -> str:
             f"unknown engine {engine!r}: use " + " | ".join(ENGINES)
         )
     return engine
+
+
+@dataclasses.dataclass(frozen=True)
+class Termination:
+    """Paper terminate conditions (§IV-B/§IV-C) as a static schedule policy.
+
+    ``termination=None`` (the default everywhere) keeps the plain fixed
+    schedule: all ``steps`` radii run unrolled, with the C2 rule freezing
+    finished queries' *results* exactly as before.  Passing a
+    ``Termination`` turns the schedule into a ``lax.while_loop`` whose
+    per-query ``done`` masks gate every delta merge, so terminated
+    queries stop gathering/verifying work:
+
+    * **C1** (``use_c1``): a query is done once its windows have admitted
+      at least ``c1_budget`` verified candidate slots — the paper's
+      candidate-count termination (``βn + k``, concretely ``2tL + k``;
+      ``c1_budget=0`` derives it from the index params).  The count is
+      over verified candidate *slots* (cross-table duplicates included):
+      that is the unit of verification work the device actually performs,
+      and it is computable from the per-slot admission halfwidths the
+      verify engines already emit — no extra gather.
+    * **C2** (``use_c2``): a query is done once its k-th best verified
+      distance is ≤ c·r — a point within ``c·r`` at radius ``r``
+      certifies a c²-approximate answer (the returned top-1 is within
+      ``c²·r`` of the true NN).
+    * **early exit** (``early_exit``): the while_loop stops as soon as
+      every query in the batch is done.  Terminated queries' state is
+      frozen by the masks, so the exit is bit-invisible in the results —
+      it only skips device work.
+
+    Frozen/hashable: a Termination is a static jit argument, one compiled
+    program per distinct policy.
+    """
+
+    use_c1: bool = True
+    c1_budget: int = 0  # 0 -> derive the paper budget 2tL + k from params
+    use_c2: bool = True
+    early_exit: bool = True
 
 
 def _select_blocks(index: DBLSHIndex, G: jax.Array, w):
@@ -195,9 +235,33 @@ def _gather_pool(index: DBLSHIndex, blk_q: jax.Array, G: jax.Array,
     return d2.reshape(Qn, C), hw.reshape(Qn, C)
 
 
+def _masked_delta_merge(best_d, best_i, delta, d2, ci, done, n, k):
+    """One schedule-step merge: fold the newly-admitted delta slice into
+    the running top-k with finished queries frozen — skipping the whole
+    merge (``lax.cond``) when the delta is empty batch-wide.  Merging an
+    all-masked delta is the identity, so the skip is bit-safe; it saves
+    the O(k·C) selection on every step whose windows admit nothing
+    anywhere in the batch (common late in an adaptive schedule and on
+    sparse regions of a fixed one)."""
+
+    def run(bd, bi):
+        nd, ni = merge_dedup_topk(bd, bi, jnp.where(delta, d2, _INF), ci, n, k)
+        return (
+            jnp.where(done[:, None], bd, nd),
+            jnp.where(done[:, None], bi, ni),
+        )
+
+    return jax.lax.cond(
+        jnp.any(delta), run, lambda bd, bi: (bd, bi), best_d, best_i
+    )
+
+
 @partial(
     jax.jit,
-    static_argnames=("k", "steps", "engine", "interpret", "with_stats", "exact"),
+    static_argnames=(
+        "k", "steps", "engine", "interpret", "with_stats", "exact",
+        "termination",
+    ),
 )
 def search_batch_fixed(
     index: DBLSHIndex,
@@ -209,6 +273,7 @@ def search_batch_fixed(
     interpret=None,
     with_stats: bool = False,
     exact: bool = False,
+    termination: Termination | None = None,
 ):
     """Fixed-schedule batched (c,k)-ANN — one-pass incremental probing.
 
@@ -220,6 +285,10 @@ def search_batch_fixed(
       with_stats: also return per-query probe statistics.
       exact: use materialized-diff distances instead of the MXU norm
         form (bit-compatible with :func:`search_batch_fixed_ref`).
+      termination: ``None`` runs the plain fixed schedule; a
+        :class:`Termination` enables per-query adaptive termination
+        (paper C1/C2 done masks + batch-wide while_loop early exit —
+        the ``repro.tune`` subsystem's serving hook).
 
     Returns: (Qn, k) distances ascending, (Qn, k) ids; with ``with_stats``
     a third element ``{"radius_steps": (Qn,) int32, "candidates": (Qn,)
@@ -268,9 +337,15 @@ def search_batch_fixed(
     radius_steps = jnp.zeros((Qn,), jnp.int32)
     candidates = jnp.zeros((Qn,), jnp.int32)
 
-    r = jnp.asarray(r0, jnp.float32)
-    prev_half = -_INF
-    for _ in range(steps):
+    c1_thr = None
+    if termination is not None and termination.use_c1:
+        c1_thr = (
+            termination.c1_budget if termination.c1_budget > 0 else p.budget
+        )
+    use_c2 = True if termination is None else termination.use_c2
+
+    def schedule_step(r, prev_half, best_d, best_i, done, radius_steps,
+                      candidates):
         half = 0.5 * (p.w0 * r)
         if with_stats:
             active = ~done
@@ -280,17 +355,63 @@ def search_batch_fixed(
             candidates = candidates + jnp.where(active, n_slots, 0)
 
         # newly-admitted delta slice: slots whose window first reaches
-        # them at this radius (hw = +inf slots never admit)
+        # them at this radius (hw = +inf slots never admit); finished
+        # queries keep their result through the masked merge
         delta = (hw <= half) & (hw > prev_half)
-        nd, ni = merge_dedup_topk(
-            best_d, best_i, jnp.where(delta, d2, _INF), ci, n, k
+        best_d, best_i = _masked_delta_merge(
+            best_d, best_i, delta, d2, ci, done, n, k
         )
-        # masked merge: finished queries keep their result
-        best_d = jnp.where(done[:, None], best_d, nd)
-        best_i = jnp.where(done[:, None], best_i, ni)
-        done = done | (best_d[:, k - 1] <= jnp.square(p.c * r))
-        r = r * p.c
-        prev_half = half
+        if use_c2:
+            done = done | (best_d[:, k - 1] <= jnp.square(p.c * r))
+        if c1_thr is not None:
+            # C1 from the halfwidths the verify engines already emitted:
+            # slots the current window admits whose distance is finite
+            # (verified work) — no extra gather/DMA to evaluate
+            n_adm = jnp.sum(
+                ((hw <= half) & jnp.isfinite(d2)).astype(jnp.int32), axis=1
+            )
+            done = done | (n_adm >= c1_thr)
+        return half, best_d, best_i, done, radius_steps, candidates
+
+    if termination is None:
+        r = jnp.asarray(r0, jnp.float32)
+        prev_half = -_INF
+        for _ in range(steps):
+            prev_half, best_d, best_i, done, radius_steps, candidates = (
+                schedule_step(r, prev_half, best_d, best_i, done,
+                              radius_steps, candidates)
+            )
+            r = r * p.c
+    else:
+        # adaptive schedule: same per-step body in a while_loop whose
+        # carry threads (r, prev_half) through the identical multiply
+        # chain (bit-equal radii), exiting as soon as every query's done
+        # mask fired — frozen state makes the exit result-invisible
+        def cond_fn(carry):
+            j, _, _, _, _, done, _, _ = carry
+            more = j < steps
+            if termination.early_exit:
+                more = more & ~jnp.all(done)
+            return more
+
+        def body_fn(carry):
+            j, r, prev_half, best_d, best_i, done, radius_steps, cands = carry
+            prev_half, best_d, best_i, done, radius_steps, cands = (
+                schedule_step(r, prev_half, best_d, best_i, done,
+                              radius_steps, cands)
+            )
+            return (j + 1, r * p.c, prev_half, best_d, best_i, done,
+                    radius_steps, cands)
+
+        carry = (
+            jnp.asarray(0, jnp.int32),
+            jnp.asarray(r0, jnp.float32),
+            jnp.asarray(-_INF, jnp.float32),
+            best_d, best_i, done, radius_steps, candidates,
+        )
+        (_, _, _, best_d, best_i, done, radius_steps, candidates) = (
+            jax.lax.while_loop(cond_fn, body_fn, carry)
+        )
 
     if with_stats:
         stats = {"radius_steps": radius_steps, "candidates": candidates}
@@ -480,6 +601,7 @@ def search_batch_fixed_dispatch(
     interpret=None,
     with_stats: bool = False,
     exact: bool = False,
+    termination: Termination | None = None,
 ) -> PendingSearch:
     """Issue a fixed-schedule search without blocking on the device.
 
@@ -493,6 +615,7 @@ def search_batch_fixed_dispatch(
     out = search_batch_fixed(
         index, Q, k=k, r0=r0, steps=steps, engine=engine,
         interpret=interpret, with_stats=with_stats, exact=exact,
+        termination=termination,
     )
     if with_stats:
         return PendingSearch(out[0], out[1], out[2])

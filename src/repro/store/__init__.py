@@ -39,6 +39,12 @@ Relation to neighbors:
 * ``serve.retrieval`` (kNN-LM) is now a thin client: its ``Datastore``
   holds a Collection whose payload is the next-token values, so the LM
   retrieval head inherits updates, compaction, and persistence for free.
+* ``repro.tune`` supplies query *planning*: a Collection carries a
+  ``search_policy`` and a persisted calibration table
+  (``Collection.calibrate``), and the service resolves
+  submit-time policies / ``recall_target=`` through the planner into a
+  concrete (r0, steps, adaptive-termination) plan per request —
+  request > collection > service, like engine defaults (DESIGN.md §8).
 
 Typical use::
 

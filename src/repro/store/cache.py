@@ -17,11 +17,23 @@ cache hit is bit-identical to a fresh search at the collection's
 current version.
 
 Keys quantize the query to float32 bytes — the same dtype the dispatch
-path casts to — so a hit requires a bit-exact query.  An optional
-``quantize`` (decimal places) widens hits to near-identical queries at
-the cost of exactness; it is **off by default** because it breaks the
-bit-equality contract and is only safe for readers that tolerate
-approximate neighbors anyway.
+path casts to — so a hit requires a bit-exact query.  Two opt-in
+wideners trade exactness for hit rate on near-duplicate traffic
+(re-encoded embeddings, dithered clients, retry jitter); both are **off
+by default** because they break the bit-equality contract and are only
+safe for readers that tolerate approximate reuse:
+
+* ``quantize_eps`` buckets every query coordinate to a grid of pitch
+  ``eps`` (``round(q / eps)`` as int64) before hashing, so any two
+  queries within the same grid cell share a key — the served result is
+  whichever cell member was dispatched first, i.e. *approximate* reuse
+  with per-coordinate error ≤ eps/2 in the key (not in the result:
+  results are always exact for the query that computed them);
+* ``quantize`` (decimal places) is the older, scale-dependent variant.
+
+Version-invalidation semantics are unchanged by either: the version sits
+outside the query bytes in the key, so a collection mutation makes
+bucketed entries exactly as unreachable as exact ones.
 """
 
 from __future__ import annotations
@@ -49,10 +61,16 @@ class QueryResultCache:
     """Bounded LRU over (collection, version, query-bytes, k, engine, r0,
     steps) -> :class:`CachedResult`."""
 
-    def __init__(self, capacity: int = 4096, quantize: int | None = None):
+    def __init__(self, capacity: int = 4096, quantize: int | None = None,
+                 quantize_eps: float | None = None):
         assert capacity > 0
+        assert quantize_eps is None or quantize_eps > 0
+        assert quantize is None or quantize_eps is None, (
+            "pass at most one key widener (quantize xor quantize_eps)"
+        )
         self.capacity = capacity
         self.quantize = quantize
+        self.quantize_eps = quantize_eps
         self._entries: OrderedDict[tuple, CachedResult] = OrderedDict()
         self.hits = 0
         self.misses = 0
@@ -60,15 +78,24 @@ class QueryResultCache:
     # ------------------------------------------------------------------ keys
     def _qbytes(self, query: np.ndarray) -> bytes:
         q = np.ascontiguousarray(query, np.float32)
+        if self.quantize_eps is not None:
+            # grid bucketing: near-duplicate queries (same eps-cell in
+            # every coordinate) collapse to one key
+            return np.round(q / self.quantize_eps).astype(np.int64).tobytes()
         if self.quantize is not None:
             q = np.round(q, self.quantize)
         return q.tobytes()
 
     def key(
         self, collection: str, version: int, query, k: int, engine: str,
-        r0: float, steps: int,
+        r0: float, steps: int, termination=None,
     ) -> tuple:
-        return (collection, version, self._qbytes(query), k, engine, r0, steps)
+        """``termination`` (a hashable ``core.serve_search.Termination``
+        or None) joins the key because a planned adaptive dispatch can
+        return different results than the fixed schedule at the same
+        (r0, steps)."""
+        return (collection, version, self._qbytes(query), k, engine, r0,
+                steps, termination)
 
     # ---------------------------------------------------------------- access
     def get(self, key: tuple) -> CachedResult | None:

@@ -48,6 +48,14 @@ from ..checkpoint import Checkpointer
 from ..core import DBLSHParams, build, search_batch_fixed, validate_engine
 from ..core.index import DBLSHIndex, compute_norm_blocks
 from ..core import updates as _updates
+from ..tune import planner as _planner
+from ..tune.planner import ScheduleTable
+from ..tune.policy import (
+    ResolvedPlan,
+    policy_from_dict,
+    policy_to_dict,
+    resolve_policy,
+)
 
 __all__ = ["CompactionPolicy", "CollectionStats", "Collection", "version_clock"]
 
@@ -126,6 +134,8 @@ class Collection:
         stats: CollectionStats | None = None,
         version: int | None = None,
         engine: str | None = None,
+        search_policy=None,
+        calibration: ScheduleTable | None = None,
     ):
         if payload is not None:
             payload = jnp.asarray(payload)
@@ -150,6 +160,13 @@ class Collection:
                     "kernel streams the per-table vector copy)"
                 )
         self.default_engine = engine
+        # per-collection query-planning default (repro.tune policy): used
+        # by StoreService's plan resolution whenever a submit doesn't
+        # name a policy (request > collection > service); the calibration
+        # table backs RecallTarget/LatencyBudget planning and persists
+        # through snapshot/restore.
+        self.search_policy = search_policy
+        self.calibration = calibration
 
     # ------------------------------------------------------------ construction
     @classmethod
@@ -163,10 +180,15 @@ class Collection:
         payload=None,
         policy: CompactionPolicy | None = None,
         engine: str | None = None,
+        search_policy=None,
         **derive_kw,
     ) -> "Collection":
         """Build a fresh index over ``data`` (params derived if omitted).
-        ``engine`` sets the collection's default verify engine."""
+        ``engine`` sets the collection's default verify engine;
+        ``search_policy`` its default query-planning policy (a
+        ``repro.tune`` ``RecallTarget`` / ``LatencyBudget`` /
+        ``FixedSchedule`` — run :meth:`calibrate` to back the
+        outcome-level policies with a measured table)."""
         data = jnp.asarray(data, jnp.float32)
         kb, kc = jax.random.split(key)
         if params is None:
@@ -175,7 +197,7 @@ class Collection:
             )
         index = build(kb, data, params)
         return cls(name, index, payload=payload, policy=policy, key=kc,
-                   engine=engine)
+                   engine=engine, search_policy=search_policy)
 
     @classmethod
     def from_index(
@@ -263,6 +285,42 @@ class Collection:
             return self.compact()
         return None
 
+    # ----------------------------------------------------------- planning
+    def calibrate(
+        self,
+        queries,
+        *,
+        k: int = 0,
+        r0: float | None = None,
+        steps_max: int = 8,
+        engine: str | None = None,
+        interpret: bool | None = None,
+        measure_ms: bool = False,
+    ) -> ScheduleTable:
+        """Fit (and store) the collection's schedule table from a
+        held-out query sample — the planner backing for outcome-level
+        policies.  The table persists through :meth:`snapshot` /
+        :meth:`restore`.  Re-run after heavy updates: compaction changes
+        K/L and block geometry, which shifts the recall/cost curves."""
+        table = _planner.calibrate(
+            self.index, queries, k=k, r0=r0, steps_max=steps_max,
+            engine=engine or self.default_engine or "jnp",
+            interpret=interpret, measure_ms=measure_ms,
+        )
+        self.calibration = table
+        return table
+
+    def plan(self, policy=None, *, default_r0: float = 1.0,
+             default_steps: int = 8) -> ResolvedPlan:
+        """Resolve a query-planning policy (explicit > collection
+        default) against the stored calibration into the concrete
+        (r0, steps, termination) the dispatch runs."""
+        return _planner.plan(
+            self.calibration,
+            resolve_policy(policy, self.search_policy),
+            default_r0=default_r0, default_steps=default_steps,
+        )
+
     # ------------------------------------------------------------------ reads
     def search(
         self,
@@ -276,6 +334,7 @@ class Collection:
         interpret: bool | None = None,
         rows: int | None = None,
         exact: bool = False,
+        termination=None,
     ):
         """Batched (c,k)-ANN through the fixed-schedule serving path.
 
@@ -293,6 +352,7 @@ class Collection:
             self.index, Q, k=k, r0=r0, steps=steps,
             engine=engine or self.default_engine or "jnp",
             with_stats=with_stats, interpret=interpret, exact=exact,
+            termination=termination,
         )
 
     def get_payload(self, ids):
@@ -329,6 +389,10 @@ class Collection:
             "has_payload": self.payload is not None,
             "version": self.version,
             "engine": self.default_engine,
+            "search_policy": policy_to_dict(self.search_policy),
+            "calibration": (
+                None if self.calibration is None else self.calibration.to_dict()
+            ),
         }
         ck.save(step, tree, meta)
         return step
@@ -361,5 +425,10 @@ class Collection:
             # diverged) collection with the same name — see module doc.
             version=version_clock.advance_past(meta.get("version", 0)),
             engine=meta.get("engine"),
+            search_policy=policy_from_dict(meta.get("search_policy")),
+            calibration=(
+                ScheduleTable.from_dict(meta["calibration"])
+                if meta.get("calibration") else None
+            ),
         )
         return col

@@ -56,6 +56,12 @@ class ShardedCollection:
         # (and a drained batch is never split over engines pointlessly)
         self.fixed_engine = "jnp"
         self.default_engine = None
+        # query-planning surface parity with Collection: a sharded
+        # collection may carry a policy (the service resolves it the same
+        # way) but is read-only, so calibration must be supplied by the
+        # caller (there are no updates to invalidate it).
+        self.search_policy = None
+        self.calibration = None
 
     @classmethod
     def create(
@@ -100,6 +106,7 @@ class ShardedCollection:
         interpret: bool | None = None,
         rows: int | None = None,
         exact: bool = False,
+        termination=None,
     ):
         """Global (c,k)-ANN: per-shard fixed-schedule search + all_gather
         top-k merge. ``engine`` / ``interpret`` / ``exact`` are accepted
@@ -109,13 +116,15 @@ class ShardedCollection:
         counter.  With ``with_stats`` the per-shard probe statistics
         survive the collective merge (``search_sharded`` aggregates
         candidates by psum and radius_steps by pmax), so ``svc.stats()``
-        reports real per-query probe effort for sharded collections."""
+        reports real per-query probe effort for sharded collections.
+        ``termination`` applies per shard (each device runs its own
+        C1/C2 masks and while_loop exit — see ``search_sharded``)."""
         del engine, interpret, rows
         Q = jnp.atleast_2d(jnp.asarray(Q, jnp.float32))
         k = k or self.sharded.index.params.k
         return search_sharded(
             self.sharded, Q, k=k, r0=r0, steps=steps, mesh=self.mesh,
-            with_stats=with_stats, exact=exact,
+            with_stats=with_stats, exact=exact, termination=termination,
         )
 
     def get_payload(self, ids):

@@ -41,7 +41,13 @@ shape set closed.  The verify engine resolves per request — explicit
 ``submit``/``serve`` override, else the collection's ``default_engine``,
 else the service default — is frozen into the ticket at admission, keys
 the result cache, and splits a drained batch per engine at issue time
-(one compiled program per engine).  Any object with ``search(Q, k=..., r0=..., steps=...,
+(one compiled program per engine).  The *schedule* resolves the same
+way through ``repro.tune``: an explicit ``policy=`` / ``recall_target=``
+on submit, else the collection's ``search_policy``, else the service
+``default_policy``, planned against the collection's calibration table
+into a ``ResolvedPlan`` (r0, steps, adaptive termination) that is
+likewise frozen into the ticket, keys the cache, and splits batches
+(one compiled program per (engine, plan)).  Any object with ``search(Q, k=..., r0=..., steps=...,
 engine=..., with_stats=..., rows=...)``, ``name``, and ``version`` can
 be attached — a local :class:`~repro.store.collection.Collection` or
 the sharded router wrapper in :mod:`repro.store.router`.
@@ -57,6 +63,8 @@ from collections import deque
 import numpy as np
 
 from ..core.serve_search import PendingSearch, validate_engine
+from ..tune import planner as _planner
+from ..tune.policy import RecallTarget, ResolvedPlan, resolve_policy
 from .cache import CachedResult, QueryResultCache
 
 __all__ = ["QueryRequest", "QuotaExceeded", "StoreService", "TenantQuota"]
@@ -78,6 +86,10 @@ class QueryRequest:
     tenant: str = "default"
     engine: str = "jnp"               # resolved at submit (request ->
                                       # collection default -> service)
+    plan: ResolvedPlan | None = None  # resolved schedule (r0, steps,
+                                      # termination) — request policy >
+                                      # collection search_policy >
+                                      # service default_policy
     done: bool = False
     cached: bool = False              # served from the query-result cache
     dists: np.ndarray | None = None   # (k,) ascending; +inf = unfilled slot
@@ -171,6 +183,12 @@ class _CollectionStats:
         self.latencies_ms: deque[float] = deque(maxlen=8192)
         self.radius_steps = 0
         self.candidates = 0
+        # per-query termination-step histogram (step -> count): how much
+        # of the schedule each query actually ran, which is the work the
+        # planner/adaptive-termination saves.  Sharded collections feed
+        # the same counter — their radius_steps arrive pmax'd across
+        # shards from the collective merge.
+        self.step_hist: dict[int, int] = {}
         self.t_first: float | None = None
         self.t_last: float | None = None
 
@@ -178,6 +196,8 @@ class _CollectionStats:
         self.latencies_ms.append(r.latency_ms)
         self.radius_steps += r.radius_steps
         self.candidates += r.candidates
+        s = int(r.radius_steps)
+        self.step_hist[s] = self.step_hist.get(s, 0) + 1
 
     def record_batch(self, reqs, shape, now, *, overlapped: bool):
         self.served += len(reqs)
@@ -216,6 +236,7 @@ class _CollectionStats:
             "latency_ms_p99": float(np.percentile(lat, 99)) if lat.size else float("nan"),
             "mean_radius_steps": self.radius_steps / max(self.served, 1),
             "mean_candidates": self.candidates / max(self.served, 1),
+            "termination_steps_hist": dict(sorted(self.step_hist.items())),
             "padding_efficiency": (
                 self.served / (self.served + self.padded_slots)
                 if self.served else float("nan")
@@ -243,6 +264,7 @@ class _InFlight:
     version: int | None    # version the results belong to; None = uncacheable
     overlapped: bool       # issued while another batch was in flight
     engine: str            # resolved engine the batch was dispatched with
+    plan: ResolvedPlan     # resolved schedule the batch was dispatched with
 
 
 class StoreService:
@@ -262,6 +284,8 @@ class StoreService:
         inflight_depth: int = 2,
         cache: QueryResultCache | None = None,
         cache_size: int = 1024,
+        cache_quantize_eps: float | None = None,
+        default_policy=None,
         clock=time.monotonic,
     ):
         assert batch_shapes == tuple(sorted(batch_shapes)) and batch_shapes
@@ -274,10 +298,16 @@ class StoreService:
         self.engine = engine
         self.interpret = interpret
         self.inflight_depth = inflight_depth
+        # service-level query-planning default (repro.tune policy) — the
+        # lowest-precedence rung of request > collection > service
+        self.default_policy = default_policy
         if cache is not None:
             self.cache = cache
         else:
-            self.cache = QueryResultCache(cache_size) if cache_size > 0 else None
+            self.cache = (
+                QueryResultCache(cache_size, quantize_eps=cache_quantize_eps)
+                if cache_size > 0 else None
+            )
         self._clock = clock
         self.collections: dict[str, object] = {}
         self.quotas: dict[str, TenantQuota] = {}
@@ -346,17 +376,42 @@ class StoreService:
             engine = getattr(col, "default_engine", None) or self.engine
         return validate_engine(engine)
 
+    def resolve_plan(self, collection: str, policy=None) -> ResolvedPlan:
+        """Three-level policy resolution (explicit request policy, then
+        the collection's ``search_policy``, then the service
+        ``default_policy``), planned against the collection's calibration
+        table.  No policy anywhere resolves to the service's own
+        (r0, steps) with no adaptive termination — the pre-tune dispatch,
+        bit-for-bit."""
+        col = self.collections[collection]
+        policy = resolve_policy(
+            policy, getattr(col, "search_policy", None), self.default_policy
+        )
+        return _planner.plan(
+            getattr(col, "calibration", None), policy,
+            default_r0=self.r0, default_steps=self.steps,
+        )
+
     def submit(
         self, collection: str, query, k: int | None = None,
         tenant: str = "default", engine: str | None = None,
+        policy=None, recall_target: float | None = None,
     ) -> QueryRequest:
         """Enqueue one query; returns its ticket (filled once dispatched).
         ``engine`` overrides the collection / service engine defaults for
-        this request. Raises :class:`QuotaExceeded` when the tenant is
-        over quota — rejected requests are never enqueued."""
+        this request; ``policy`` (a ``repro.tune`` policy) overrides the
+        collection / service planning defaults, and ``recall_target=x``
+        is sugar for ``policy=RecallTarget(x)``.  Raises
+        :class:`QuotaExceeded` when the tenant is over quota — rejected
+        requests are never enqueued."""
         if collection not in self.collections:
             raise KeyError(f"unknown collection {collection!r}")
+        if recall_target is not None:
+            if policy is not None:
+                raise ValueError("pass either policy= or recall_target=, not both")
+            policy = RecallTarget(recall_target)
         engine = self.resolve_engine(collection, engine)
+        plan = self.resolve_plan(collection, policy)
         k = self.default_k if k is None else k
         if k > self.default_k:
             raise ValueError(
@@ -383,6 +438,7 @@ class StoreService:
             submitted=now,
             tenant=tenant,
             engine=engine,
+            plan=plan,
         )
         self._uid += 1
         self._queues[collection].setdefault(tenant, deque()).append(req)
@@ -428,14 +484,15 @@ class StoreService:
                 drained += len(reqs)
                 misses = self._serve_cached(name, reqs)
                 if misses:
-                    # one device program per engine: split mixed batches
-                    # (requests resolve engines at submit, so a batch is
-                    # mixed only under per-request overrides)
-                    by_engine: dict[str, list[QueryRequest]] = {}
+                    # one device program per (engine, plan): split mixed
+                    # batches (requests resolve engines and plans at
+                    # submit, so a batch is mixed only under per-request
+                    # overrides / policies)
+                    by_prog: dict[tuple, list[QueryRequest]] = {}
                     for r in misses:
-                        by_engine.setdefault(r.engine, []).append(r)
-                    for eng, group in by_engine.items():
-                        self._issue(name, group, eng)
+                        by_prog.setdefault((r.engine, r.plan), []).append(r)
+                    for (eng, plan), group in by_prog.items():
+                        self._issue(name, group, eng, plan)
         if force:
             self._complete_all()
         return drained
@@ -491,10 +548,10 @@ class StoreService:
 
     # ------------------------------------------------------------- the cache
     def _cache_key(self, name: str, version: int, query: np.ndarray,
-                   engine: str):
+                   engine: str, plan: ResolvedPlan):
         return self.cache.key(
-            name, version, query, self.default_k, engine, self.r0,
-            self.steps,
+            name, version, query, self.default_k, engine, plan.r0,
+            plan.steps, plan.termination,
         )
 
     def _serve_cached(self, name: str, reqs: list[QueryRequest]):
@@ -510,7 +567,7 @@ class StoreService:
         misses = []
         for r in reqs:
             entry = self.cache.get(
-                self._cache_key(name, version, r.query, r.engine)
+                self._cache_key(name, version, r.query, r.engine, r.plan)
             )
             if entry is None:
                 misses.append(r)
@@ -535,22 +592,35 @@ class StoreService:
 
     # ------------------------------------------------- issue / complete stages
     def _issue(self, name: str, reqs: list[QueryRequest],
-               engine: str | None = None) -> None:
+               engine: str | None = None,
+               plan: ResolvedPlan | None = None) -> None:
         """Stage 1: pad host-side and put the batch on the device without
         blocking (``col.search`` returns device futures)."""
         col = self.collections[name]
         if engine is None:
             engine = self.resolve_engine(name)
+        if plan is None:
+            plan = self.resolve_plan(name)
         m = len(reqs)
         shape = self._shape_for(m)
         d = reqs[0].query.shape[0]
         Q = np.zeros((shape, d), np.float32)
         for j, r in enumerate(reqs):
             Q[j] = r.query
+        # termination= only travels when the plan carries one: a plain
+        # (no-policy / FixedSchedule) dispatch keeps the documented
+        # attachable search signature, so pre-tune attachables keep
+        # working; an adaptive policy requires the attachable to accept
+        # termination= (Collection and ShardedCollection both do)
+        term_kw = (
+            {} if plan.termination is None
+            else {"termination": plan.termination}
+        )
         dists, ids, stats = col.search(
-            Q, k=self.default_k, r0=self.r0, steps=self.steps,
+            Q, k=self.default_k, r0=plan.r0, steps=plan.steps,
             engine=engine, with_stats=True, interpret=self.interpret,
             rows=m,  # only m of `shape` rows are real queries
+            **term_kw,
         )
         payload = None
         if getattr(col, "payload", None) is not None:
@@ -564,6 +634,7 @@ class StoreService:
             version=getattr(col, "version", None),  # None = uncacheable
             overlapped=len(self._inflight) > 0,
             engine=engine,
+            plan=plan,
         )
         self._inflight.append(batch)
         while len(self._inflight) > self.inflight_depth:
@@ -595,7 +666,7 @@ class StoreService:
                 # arrays, and callers own (and may mutate) their tickets
                 self.cache.put(
                     self._cache_key(batch.name, batch.version, r.query,
-                                    batch.engine),
+                                    batch.engine, batch.plan),
                     CachedResult(
                         dists=dists[j].copy(),
                         ids=ids[j].copy(),
@@ -617,7 +688,8 @@ class StoreService:
 
     # ------------------------------------------------------------ convenience
     def serve(self, collection: str, Q, k: int | None = None,
-              tenant: str = "default", engine: str | None = None):
+              tenant: str = "default", engine: str | None = None,
+              policy=None, recall_target: float | None = None):
         """Submit a whole query matrix as single requests, flush, and return
         stacked (dists, ids) — the micro-batching round trip.  All-or-
         nothing under quota: if any row is rejected, the rows already
@@ -628,7 +700,8 @@ class StoreService:
             for q in np.atleast_2d(Q):
                 reqs.append(
                     self.submit(collection, q, k=k, tenant=tenant,
-                                engine=engine)
+                                engine=engine, policy=policy,
+                                recall_target=recall_target)
                 )
         except QuotaExceeded:
             queue = self._queues[collection].get(tenant)
