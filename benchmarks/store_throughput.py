@@ -8,6 +8,16 @@ multi-tenant point with a quota-limited tenant.  Emits a JSON report
 with per-point ``overlap_ratio`` / ``cache_hit_rate`` and per-tenant
 QPS.
 
+``--sharded-updates`` benchmarks the *mutable sharded lifecycle*
+instead: a ShardedCollection absorbs interleaved add / remove / compact
+ops while serving queries through the StoreService, reporting mutation
+throughput (points/s added and removed, compaction wall time) alongside
+query QPS before and after the churn.  With ``--smoke`` the run doubles
+as a correctness gate: it asserts post-churn recall against a brute
+force of the surviving point set and that deleted points never
+resurface (non-zero exit on violation) — the CI hook for the sharded
+lifecycle.
+
 Caveat for CPU-only hosts: the "device" shares cores with the host, so
 overlapped dispatch has nothing to hide behind and lands within noise
 of sync (~0.95-1.05x) — the overlap win needs a real accelerator,
@@ -16,10 +26,11 @@ is host-independent and shows its full gain everywhere.
 
     PYTHONPATH=src python benchmarks/store_throughput.py \
         [--scale 0.2] [--batch-sizes 8 32] [--engines jnp] \
-        [--out store_throughput.json]
+        [--sharded-updates] [--smoke] [--out store_throughput.json]
 
 CPU-friendly at the default scale; on an accelerator raise --scale and
-add the Pallas engines (kernel / inline) to the sweep.
+add the Pallas engines (kernel / inline) to the sweep (the sharded mode
+fans out over every device the host exposes).
 """
 
 from __future__ import annotations
@@ -39,7 +50,13 @@ except ImportError:
     from common import load_dataset, recall_and_ratio
 
 from repro.core import brute_force
-from repro.store import Collection, QuotaExceeded, StoreService
+from repro.store import (
+    Collection,
+    CompactionPolicy,
+    QuotaExceeded,
+    ShardedCollection,
+    StoreService,
+)
 
 
 def _make_service(col, *, batch_size: int, engine: str, k: int, r0: float,
@@ -170,6 +187,150 @@ def _bench_tenants(col, queries, *, batch_size: int, engine: str, k: int,
     }
 
 
+def bench_sharded_updates(
+    scale: float = 0.2,
+    dataset: str = "sift-s",
+    batch_size: int = 16,
+    k: int = 10,
+    n_queries: int = 128,
+    rounds: int = 4,
+    add_batch: int = 64,
+    remove_batch: int = 32,
+    smoke: bool = False,
+    out: str = "store_throughput_sharded.json",
+):
+    """Mutable-sharded-lifecycle benchmark (+ smoke correctness gate).
+
+    Builds a ShardedCollection over every device the host exposes, then
+    interleaves serving with churn: per round, one ``add`` batch (routed
+    to the least-loaded shard), one ``remove`` batch (victims drawn from
+    live search results, so the ids are always current), and one
+    ``compact``.  Mutation timings include the ``live_count`` sync that
+    makes the mutation observable — the honest "visible to the next
+    query" cost.  Query QPS is measured through the StoreService before
+    and after the churn (cache off: mutations would invalidate it anyway,
+    and serving repeats would measure the wrong thing).
+    """
+    if smoke:
+        scale, n_queries, rounds = min(scale, 0.05), 32, 2
+    data, queries = load_dataset(dataset, scale=scale)
+    pn = len(jax.devices())
+    mesh = jax.make_mesh((pn,), ("data",))
+    n_pool = data.shape[0]
+    n_base = (int(n_pool * 0.75) // pn) * pn
+    base, pool = data[:n_base], data[n_base:]
+    col = ShardedCollection.create(
+        "fleet", jax.random.key(1), base, mesh, c=1.5, t=64, k=k,
+        payload=np.arange(n_base),  # stable identity across id re-bases
+        policy=CompactionPolicy(auto=False),
+    )
+    svc = _make_service(
+        col, batch_size=batch_size, engine="jnp", k=k, r0=0.5, steps=8,
+        inflight_depth=2, cache_size=0,
+    )
+
+    reps = -(-n_queries // queries.shape[0])
+    stream = np.tile(queries, (reps, 1))[:n_queries]
+    _stream(svc, "fleet", stream, batch_size)  # warmup compile
+    qps_before = n_queries / _stream(svc, "fleet", stream, batch_size)
+
+    alive = np.ones(n_pool, bool)
+    alive[n_base:] = False
+    next_tag = n_base
+    add_s, remove_s, compact_s = [], [], []
+    added = removed = 0
+    removed_tags_all: set[int] = set()
+    for _ in range(rounds):
+        mb = min(add_batch, len(pool) - (next_tag - n_base))
+        if mb > 0:
+            t0 = time.perf_counter()
+            col.add(pool[next_tag - n_base:next_tag - n_base + mb],
+                    payload=np.arange(next_tag, next_tag + mb))
+            col.live_count()  # sync: mutation observable
+            add_s.append(time.perf_counter() - t0)
+            alive[next_tag:next_tag + mb] = True
+            next_tag += mb
+            added += mb
+
+        d_l, i_l = map(np.asarray, col.search(queries, k=k, r0=0.5, steps=8))
+        victims = np.unique(i_l[np.isfinite(d_l)])[:remove_batch]
+        victim_tags = np.asarray(col.get_payload(victims[None]))[0].astype(int)
+        t0 = time.perf_counter()
+        col.remove(victims.astype(np.int32))
+        col.live_count()
+        remove_s.append(time.perf_counter() - t0)
+        alive[victim_tags] = False
+        removed += len(victims)
+        removed_tags_all.update(victim_tags.tolist())
+
+        t0 = time.perf_counter()
+        col.compact()
+        col.live_count()
+        compact_s.append(time.perf_counter() - t0)
+
+        # gate: no point deleted in ANY round resurfaces after the
+        # rebuild (a stale id surviving a later re-base would show up
+        # here, not just in this round's victims)
+        d_c, i_c = map(np.asarray, col.search(queries, k=k, r0=0.5, steps=8))
+        got = np.asarray(col.get_payload(i_c))[np.isfinite(d_c)]
+        leaked = set(
+            np.asarray(got).reshape(-1).astype(int).tolist()
+        ) & removed_tags_all
+        assert not leaked, f"deleted points resurfaced: {sorted(leaked)[:8]}"
+
+    # the churn changed n (=> new dispatch shapes): warm the recompile
+    # out of the timed post-churn stream so before/after compare steady
+    # states, not one-off XLA compiles
+    _stream(svc, "fleet", stream, batch_size)
+    qps_after = n_queries / _stream(svc, "fleet", stream, batch_size)
+
+    # gate: post-churn recall vs brute force of the surviving point set,
+    # matched through the payload tags (ids re-base across sharded adds)
+    alive_tags = np.flatnonzero(alive)
+    _, gt_i = brute_force(data[alive_tags], queries, k=k)
+    d_f, i_f = map(np.asarray, col.search(queries, k=k, r0=0.5, steps=8))
+    tags_f = np.asarray(col.get_payload(i_f)).astype(int)  # one batched take
+    recs = []
+    for qi in range(queries.shape[0]):
+        got = tags_f[qi][np.isfinite(d_f[qi])]
+        want = alive_tags[np.asarray(gt_i)[qi]]
+        recs.append(len(set(got.tolist()) & set(want.tolist())) / k)
+    rec = float(np.mean(recs))
+    assert rec > 0.5, f"post-churn sharded recall@{k} collapsed: {rec:.3f}"
+    assert col.live_count() == int(alive.sum())
+
+    report = {
+        "mode": "sharded_updates",
+        "dataset": dataset,
+        "scale": scale,
+        "shards": pn,
+        "n_base": int(n_base),
+        "k": k,
+        "rounds": rounds,
+        "device": str(jax.devices()[0]),
+        "query_qps_before": qps_before,
+        "query_qps_after": qps_after,
+        "add_points_per_s": added / sum(add_s) if add_s else float("nan"),
+        "remove_points_per_s": (
+            removed / sum(remove_s) if remove_s else float("nan")
+        ),
+        "compact_wall_s_mean": float(np.mean(compact_s)),
+        "post_churn_recall_at_k": rec,
+        "live_points": int(alive.sum()),
+        "shard_counts": col.shard_counts().tolist(),
+    }
+    print(
+        f"[sharded-updates x{pn}] add={report['add_points_per_s']:.0f} pts/s "
+        f"remove={report['remove_points_per_s']:.0f} pts/s "
+        f"compact={report['compact_wall_s_mean']*1e3:.0f} ms  "
+        f"qps {qps_before:.1f} -> {qps_after:.1f}  recall@{k}={rec:.3f}"
+    )
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"[report] -> {out}")
+    return report
+
+
 def main(
     scale: float = 0.2,
     dataset: str = "sift-s",
@@ -253,13 +414,30 @@ if __name__ == "__main__":
     ap.add_argument("--batch-sizes", type=int, nargs="+", default=[16, 32])
     ap.add_argument("--engines", nargs="+", default=["jnp"])
     ap.add_argument("--n-queries", type=int, default=128)
+    ap.add_argument("--sharded-updates", action="store_true",
+                    help="benchmark the mutable sharded lifecycle "
+                         "(add/remove/compact throughput + query QPS) "
+                         "instead of the scheduler modes")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sharded-updates run with correctness "
+                         "gates (CI)")
     ap.add_argument("--out", default="store_throughput.json")
     args = ap.parse_args()
-    main(
-        scale=args.scale,
-        dataset=args.dataset,
-        batch_sizes=tuple(args.batch_sizes),
-        engines=tuple(args.engines),
-        n_queries=args.n_queries,
-        out=args.out,
-    )
+    if args.sharded_updates:
+        bench_sharded_updates(
+            scale=args.scale,
+            dataset=args.dataset,
+            batch_size=args.batch_sizes[0],
+            n_queries=args.n_queries,
+            smoke=args.smoke,
+            out=args.out,
+        )
+    else:
+        main(
+            scale=args.scale,
+            dataset=args.dataset,
+            batch_sizes=tuple(args.batch_sizes),
+            engines=tuple(args.engines),
+            n_queries=args.n_queries,
+            out=args.out,
+        )

@@ -2,7 +2,10 @@
 single queries from two tenants through the StoreService scheduler
 (overlapped dispatch + query-result cache + per-tenant quotas), mutate
 the collection online (add/remove -> auto-compaction, which invalidates
-the cache by version), and report recall + scheduler stats.
+the cache by version), and report recall + scheduler stats.  The final
+section runs the *same* mutable lifecycle on a ShardedCollection (one
+shard per visible device) — add/remove/compact at fleet scale through
+the identical service path.
 
     PYTHONPATH=src:. python examples/ann_search.py [--scale 0.25]
 
@@ -19,7 +22,13 @@ import numpy as np
 
 from benchmarks.common import load_dataset, recall_and_ratio
 from repro.core import brute_force
-from repro.store import Collection, CompactionPolicy, QuotaExceeded, StoreService
+from repro.store import (
+    Collection,
+    CompactionPolicy,
+    QuotaExceeded,
+    ShardedCollection,
+    StoreService,
+)
 
 
 def main(scale: float = 0.25, dataset: str = "sift-s"):
@@ -92,6 +101,34 @@ def main(scale: float = 0.25, dataset: str = "sift-s"):
     gt_d, gt_i = brute_force(data, queries, k=k)
     rec2, _ = recall_and_ratio(dists, ids, gt_d, gt_i, k)
     print(f"[serve] post-growth recall@{k}={rec2:.3f}")
+
+    # --- the same lifecycle at fleet scale: ShardedCollection ------------
+    # one shard per visible device (1 on a CPU host — the protocol is
+    # identical at any P); the service serves it through the same queue,
+    # cache, and policy path as the local collection above.
+    pn = len(jax.devices())
+    mesh = jax.make_mesh((pn,), ("data",))
+    n_shard = (base.shape[0] // pn) * pn
+    sc = ShardedCollection.create(
+        "demo-sharded", jax.random.key(2), base[:n_shard], mesh,
+        c=1.5, t=64, k=k, payload=np.arange(n_shard),
+        policy=CompactionPolicy(auto=False),
+    )
+    svc.attach(sc)
+    _, _, reqs_s = svc.serve("demo-sharded", queries, k=k, tenant="web")
+    sv0 = sc.version
+    sc.add(extra[:64], payload=np.arange(n_shard, n_shard + 64))
+    # NOTE: a sharded add re-bases existing global ids (DESIGN.md §9) —
+    # draw removal ids from a *fresh* search, or track identity via the
+    # payload
+    d_f, i_f = sc.search(queries[:4], k=k, r0=0.5, steps=8)
+    sc.remove(np.unique(np.asarray(i_f)[np.isfinite(np.asarray(d_f))])[:16])
+    sc.compact()
+    print(f"[sharded x{pn}] live={sc.live_count()} "
+          f"shard_counts={sc.shard_counts().tolist()} "
+          f"compactions={sc.stats.compactions} version {sv0} -> {sc.version}")
+    _, _, reqs_s2 = svc.serve("demo-sharded", queries, k=k, tenant="web")
+    assert not any(r.cached for r in reqs_s2)  # mutations invalidated
 
 
 if __name__ == "__main__":

@@ -116,6 +116,20 @@ class Checkpointer:
             step = int(f.read().strip())
         return step if step in self.all_steps() else (self.all_steps() or [None])[-1]
 
+    def read_meta(self, step: int | None = None):
+        """(meta, step) from the manifest alone — no array loads.
+
+        Lets callers dispatch on snapshot metadata cheaply (e.g. the
+        store layer routing a snapshot to its placement class before
+        touching the index arrays)."""
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:08d}", "manifest.json")
+        with open(path) as f:
+            manifest = json.load(f)
+        return manifest["meta"], step
+
     def restore(self, step: int | None = None, shardings=None):
         """Returns (tree, meta). ``shardings``: optional pytree (or single
         sharding) of jax.sharding.Sharding for elastic placement."""

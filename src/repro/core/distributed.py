@@ -11,6 +11,12 @@ offset, hence disjoint across shards — no dedup needed at the merge).
 Collective cost per query batch: one all_gather of (P, Q, k) pairs over
 'data' — independent of n. This is the datastore behind
 serve/retrieval.py at fleet scale.
+
+The index is mutable in place at fleet scale too: ``insert_sharded`` /
+``delete_sharded`` / ``compact_sharded`` are shard_map wrappers over
+``core.updates`` (least-loaded insert routing, arithmetic global-id
+translation, per-shard rebuild with a gathered global id remap — see the
+maintenance section below and DESIGN.md §9).
 """
 
 from __future__ import annotations
@@ -20,15 +26,25 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from ..compat import shard_map as _shard_map
 
+from . import updates as _updates
 from .index import DBLSHIndex, build
 from .params import DBLSHParams
 from .serve_search import search_batch_fixed
 
-__all__ = ["ShardedDBLSH", "build_sharded", "search_sharded"]
+__all__ = [
+    "ShardedDBLSH",
+    "build_sharded",
+    "search_sharded",
+    "shard_live_counts",
+    "insert_sharded",
+    "delete_sharded",
+    "compact_sharded",
+]
 
 _INF = jnp.inf
 
@@ -142,3 +158,173 @@ def search_sharded(s: ShardedDBLSH, Q: jax.Array, k: int = 0, r0: float = 1.0,
         local_search, mesh=mesh,
         in_specs=(specs, P()), out_specs=out_specs,
     )(s.index, Q)
+
+
+# --------------------------------------------------------------------------
+# Sharded index maintenance: shard_map wrappers over ``core.updates``.
+#
+# SPMD keeps every shard's array shapes identical, so a mutation that
+# logically touches one shard still runs on all of them: *insert*
+# replicates the new batch to every shard and immediately tombstones the
+# copies on all but the routed target; *delete* translates global ids to
+# (shard, local) pairs arithmetically inside the map; *compact* rebuilds
+# every shard from its own survivors, padded to the fleet-wide max live
+# count (padding rows are tombstoned in the same trace).  Global ids are
+# placement-relative — ``gid = rank * n_local + local`` — which keeps the
+# disjoint-id merge invariant of :func:`search_sharded` intact but means
+# any mutation that changes ``n_local`` re-bases existing ids; the store
+# layer (``store.lifecycle``) owns communicating those remaps.
+# --------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("mesh",))
+def shard_live_counts(s: ShardedDBLSH, mesh=None) -> jax.Array:
+    """Per-shard live (non-tombstoned) point counts, shape (P,) int32 —
+    the routing signal for least-loaded insert placement."""
+    p = s.index.params
+    axis = s.axis
+
+    def local_count(idx):
+        return jnp.sum(idx.ids_blocks[0] < p.n, dtype=jnp.int32)[None]
+
+    return _shard_map(
+        local_count, mesh=mesh,
+        in_specs=(_index_specs(axis, p),), out_specs=P(axis),
+    )(s.index)
+
+
+@partial(jax.jit, static_argnames=("mesh",))
+def insert_sharded(
+    s: ShardedDBLSH, new_points: jax.Array, target, mesh=None
+) -> ShardedDBLSH:
+    """Append ``new_points`` (m, d) to shard ``target``.
+
+    Every shard appends the replicated batch (uniform SPMD shapes) and
+    all but the target tombstone their copy in the same trace, so only
+    the target's rows are live.  The inserted points' global ids are
+    ``target * n_local_new + n_local_old + j``; because ``n_local`` grew,
+    every pre-existing global id re-bases arithmetically:
+    ``g -> (g // n_local_old) * n_local_new + g % n_local_old``.
+    ``target`` is traced (not static), so routing to a different shard
+    reuses the compiled program.
+    """
+    p = s.index.params
+    m = int(new_points.shape[0])
+    axis = s.axis
+    n_old = s.n_local
+    n_new = n_old + m
+    pn = mesh.shape[axis]
+    new_params = dataclasses.replace(p, n=n_new)
+
+    def local_insert(idx, pts, tgt):
+        idx2 = _updates.insert(idx, pts)
+        rank = jax.lax.axis_index(axis)
+        appended = jnp.arange(m, dtype=jnp.int32) + n_old
+        # the target keeps its copy live: point its delete at the
+        # sentinel id (a no-op); every other shard tombstones the batch
+        del_ids = jnp.where(rank == tgt, jnp.int32(n_new), appended)
+        return _updates.delete(idx2, del_ids)
+
+    idx = _shard_map(
+        local_insert, mesh=mesh,
+        in_specs=(_index_specs(axis, p), P(), P()),
+        out_specs=_index_specs(axis, new_params),
+    )(s.index, jnp.asarray(new_points, jnp.float32),
+      jnp.asarray(target, jnp.int32))
+    return ShardedDBLSH(index=idx, axis=axis, n_total=pn * n_new, n_local=n_new)
+
+
+@partial(jax.jit, static_argnames=("mesh",))
+def delete_sharded(s: ShardedDBLSH, gids: jax.Array, mesh=None) -> ShardedDBLSH:
+    """Tombstone global ids: each shard translates ``gids`` to its local
+    id space (``local = g % n_local`` iff ``g // n_local == rank``, the
+    sentinel otherwise) and runs :func:`core.updates.delete` locally."""
+    p = s.index.params
+    axis = s.axis
+    n_local = s.n_local
+
+    def local_delete(idx, g):
+        rank = jax.lax.axis_index(axis)
+        local = jnp.where(g // n_local == rank, g % n_local, n_local)
+        return _updates.delete(idx, local.astype(jnp.int32))
+
+    specs = _index_specs(axis, p)
+    idx = _shard_map(
+        local_delete, mesh=mesh, in_specs=(specs, P()), out_specs=specs,
+    )(s.index, jnp.atleast_1d(jnp.asarray(gids, jnp.int32)))
+    return ShardedDBLSH(
+        index=idx, axis=axis, n_total=s.n_total, n_local=n_local
+    )
+
+
+@partial(jax.jit, static_argnames=("mesh", "n_keep", "new_params"))
+def _compact_sharded_jit(s: ShardedDBLSH, key, mesh=None, n_keep=0,
+                         new_params=None):
+    p = s.index.params
+    axis = s.axis
+    n_old = s.n_local
+
+    def local_compact(idx):
+        live_sorted = _updates.live_ids_padded(idx)  # (n_old + 1,) asc
+        sel = live_sorted[:n_keep]
+        n_live = jnp.sum(live_sorted < n_old)
+        data_new = jnp.take(
+            idx.data, sel, axis=0, mode="fill", fill_value=0.0
+        )
+        new_idx = build(key, data_new, new_params)
+        slot = jnp.arange(n_keep, dtype=jnp.int32)
+        # shards under the fleet max carry padding rows: tombstone them
+        # (on a full shard this degenerates to the sentinel, a no-op)
+        pad_ids = jnp.where(slot >= n_live, slot, jnp.int32(n_keep))
+        new_idx = _updates.delete(new_idx, pad_ids)
+        rank = jax.lax.axis_index(axis)
+        id_map = jnp.full((n_old,), -1, jnp.int32)
+        id_map = id_map.at[sel].set(
+            jnp.where(sel < n_old, slot + rank * n_keep, -1).astype(jnp.int32),
+            mode="drop",  # padded sel entries (== n_old) fall out of range
+        )
+        return new_idx, id_map
+
+    return _shard_map(
+        local_compact, mesh=mesh,
+        in_specs=(_index_specs(axis, p),),
+        out_specs=(_index_specs(axis, new_params.resolve()), P(axis)),
+    )(s.index)
+
+
+def compact_sharded(
+    s: ShardedDBLSH, key, mesh
+) -> tuple[ShardedDBLSH, jax.Array]:
+    """Per-shard rebuild from survivors (fresh K/L for the new n).
+
+    Every shard gathers its live points in ascending local-id order and
+    rebuilds with the *same* fresh key (identical hash functions across
+    shards, the :func:`build_sharded` invariant).  Uniform SPMD shapes
+    force ``n_local_new = max_shard(live)`` — shards below the max pad
+    with tombstoned zero rows that the next insert/compact reclaims.
+    Points never migrate between shards; least-loaded insert routing is
+    what keeps the fleet balanced over time.
+
+    Returns ``(new_sharded, id_map)`` with ``id_map`` (n_total_old,)
+    mapping each old global id to its new global id, or -1 if deleted.
+    New ids ascend with old ids (shard-major, then local order), so a
+    payload permuted through the map stays aligned.
+    """
+    p = s.index.params
+    pn = mesh.shape[s.axis]
+    counts = np.asarray(shard_live_counts(s, mesh=mesh))
+    n_keep = int(counts.max())
+    if n_keep == 0:
+        raise ValueError("compact_sharded: no live points on any shard")
+    new_params = DBLSHParams.derive(
+        n=n_keep, d=p.d, c=p.c, w0=p.w0, t=p.t, k=p.k,
+        block_size=p.block_size, inline_vectors=p.inline_vectors,
+    )
+    idx, id_map = _compact_sharded_jit(
+        s, key, mesh=mesh, n_keep=n_keep, new_params=new_params,
+    )
+    return (
+        ShardedDBLSH(index=idx, axis=s.axis, n_total=pn * n_keep,
+                     n_local=n_keep),
+        id_map,
+    )

@@ -32,7 +32,7 @@ from . import hashing
 from .index import DBLSHIndex, _str_order, build
 from .params import DBLSHParams
 
-__all__ = ["insert", "delete", "compact", "live_count"]
+__all__ = ["insert", "delete", "compact", "live_count", "live_ids_padded"]
 
 _INF = jnp.inf
 
@@ -129,6 +129,19 @@ def live_count(index: DBLSHIndex) -> int:
     return int(jnp.sum(index.ids_blocks[0] < index.n))
 
 
+def live_ids_padded(index: DBLSHIndex) -> jax.Array:
+    """Sorted live point ids, padded with the sentinel ``n`` to the
+    static length ``n + 1`` — the jit-stable form of the live scan
+    (compaction's gather order), usable inside ``shard_map``."""
+    n = index.n
+    return jnp.sort(
+        jnp.unique(
+            jnp.where(index.ids_blocks[0] < n, index.ids_blocks[0], n),
+            size=n + 1, fill_value=n,
+        )
+    )
+
+
 def compact(index: DBLSHIndex, key) -> tuple[DBLSHIndex, jax.Array]:
     """Rebuild from surviving points (re-derives K/L for the live n).
 
@@ -136,12 +149,7 @@ def compact(index: DBLSHIndex, key) -> tuple[DBLSHIndex, jax.Array]:
     id's new id, or -1 if deleted."""
     p = index.params
     n_old = index.n
-    live_ids = jnp.sort(
-        jnp.unique(
-            jnp.where(index.ids_blocks[0] < n_old, index.ids_blocks[0], n_old),
-            size=n_old + 1, fill_value=n_old,
-        )
-    )
+    live_ids = live_ids_padded(index)
     live_ids = live_ids[live_ids < n_old]
     n_live = int(live_ids.shape[0])
     data = jnp.take(index.data, live_ids, axis=0)

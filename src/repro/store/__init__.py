@@ -2,12 +2,18 @@
 
 Module map (and how it relates to the rest of the repo):
 
-* ``collection``  — :class:`Collection`: a named DB-LSH index + aligned
-  payload with a managed lifecycle.  Wraps ``core.index.build`` /
-  ``core.updates`` (insert/delete/compact) behind ``add`` / ``remove``,
-  adds an auto-compaction policy (rebuild when n outgrows the built K/L
-  sizing or tombstones hollow the index), and persists through
-  ``checkpoint.Checkpointer`` (``snapshot`` / ``restore``).
+* ``lifecycle``   — :class:`CollectionLifecycle`: the placement-
+  independent mutable-collection protocol (version bumping, the
+  auto-compaction policy templates, payload ride-along, calibration
+  invalidation + auto re-fit, snapshot/restore plumbing).  Both
+  placements below implement it; :func:`restore_collection` dispatches
+  a snapshot directory to the right one from its manifest.
+
+* ``collection``  — :class:`Collection`: the local placement — a named
+  DB-LSH index + aligned payload.  Wraps ``core.index.build`` /
+  ``core.updates`` (insert/delete/compact) behind the lifecycle hooks
+  and persists through ``checkpoint.Checkpointer``
+  (``snapshot`` / ``restore``).
 
 * ``service``     — :class:`StoreService`: the request scheduler.
   Per-tenant admission queues (token-bucket quotas, weighted
@@ -26,10 +32,13 @@ Module map (and how it relates to the rest of the repo):
   DESIGN.md §6 for the contract.
 
 * ``router``      — :class:`ShardedCollection` + :func:`open_collection`:
-  the same Collection query surface over ``core.distributed.ShardedDBLSH``
+  the sharded placement over ``core.distributed.ShardedDBLSH``
   (per-device local indexes, replicated queries, global-id top-k merge)
-  for datasets too large for one device; the router picks local vs
-  sharded placement.
+  for datasets too large for one device — the *same* mutable lifecycle
+  as a local collection (least-loaded insert routing, per-shard delete
+  translation, per-shard compaction with a gathered global id remap,
+  sharded snapshot/restore); the router picks local vs sharded
+  placement and the lifecycle options apply to either.
 
 Relation to neighbors:
 
@@ -59,13 +68,21 @@ Typical use::
 """
 
 from .cache import CachedResult, QueryResultCache
-from .collection import Collection, CollectionStats, CompactionPolicy, version_clock
+from .collection import Collection
+from .lifecycle import (
+    CollectionLifecycle,
+    CollectionStats,
+    CompactionPolicy,
+    restore_collection,
+    version_clock,
+)
 from .router import ShardedCollection, open_collection
 from .service import QueryRequest, QuotaExceeded, StoreService, TenantQuota
 
 __all__ = [
     "CachedResult",
     "Collection",
+    "CollectionLifecycle",
     "CollectionStats",
     "CompactionPolicy",
     "QueryRequest",
@@ -75,5 +92,6 @@ __all__ = [
     "StoreService",
     "TenantQuota",
     "open_collection",
+    "restore_collection",
     "version_clock",
 ]

@@ -1,35 +1,27 @@
-"""Named vector collections: index lifecycle over the DB-LSH primitives.
+"""Named vector collections: the local placement of the store lifecycle.
 
 A :class:`Collection` owns one :class:`~repro.core.index.DBLSHIndex` plus
 an optional *payload* array aligned row-for-row with the indexed vectors
 (the kNN-LM "value" generalized: token ids, document ids, metadata rows —
 anything that should ride along with a returned neighbor id).
 
-It turns the stateless library calls in ``core.updates`` into a managed
-lifecycle:
+The managed lifecycle itself — version bumping, the auto-compaction
+policy, payload ride-along, calibration invalidation, snapshot/restore
+plumbing — lives in :class:`~repro.store.lifecycle.CollectionLifecycle`,
+shared with the sharded placement (``store.router.ShardedCollection``).
+This class supplies the single-device mechanics over ``core.updates``:
 
-* ``add`` / ``remove`` delegate to ``core.updates.insert`` / ``delete``
-  and keep the payload aligned;
-* an **auto-compaction policy** watches index health.  K and L are sized
-  for the build-time ``n`` (K ~ log n, see DESIGN.md §3), and deletes
-  only tombstone slots, so the index degrades on two axes: growth
-  (n past ``growth_ratio`` x the last built n) and hollowness (live
-  fraction under ``min_live_ratio``).  Crossing either threshold
-  triggers ``compact`` — a rebuild with freshly derived K/L — and the
-  payload is permuted through the returned id map;
-* ``snapshot`` / ``restore`` persist the whole state (index arrays,
-  payload, PRNG key, policy, counters, version) through
+* ``add`` / ``remove`` delegate to ``core.updates.insert`` / ``delete``;
+* ``compact`` rebuilds through ``core.updates.compact`` with freshly
+  derived K/L (K ~ log n was sized for the build-time ``n``, see
+  DESIGN.md §3-§4);
+* ``snapshot`` / ``restore`` persist the index arrays through
   ``checkpoint.Checkpointer``'s atomic step directories.
 
-Every mutation (``add`` / ``remove`` / ``compact``) advances a
-**version** drawn from a process-wide monotonic clock.  The version is
-the cache-invalidation token for the store layer (DESIGN.md §6): a
-query result cached under ``(name, version, ...)`` can only ever be
-served while the collection is bit-identical to the state that produced
-it.  ``restore`` deliberately assigns a *fresh* version past both the
-persisted one and everything the process has handed out — two
-collections diverging from one snapshot (or a restore racing live
-updates) must never alias each other's cache entries.
+Every mutation advances a **version** drawn from a process-wide
+monotonic clock — the cache-invalidation token for the store layer
+(DESIGN.md §6); ``restore`` deliberately assigns a *fresh* version so
+diverged histories can never alias each other's cache entries.
 
 Repeated small ``add`` calls append padded STR blocks per call; the waste
 is bounded by ``block_size - 1`` slots per add per table and is reclaimed
@@ -49,124 +41,36 @@ from ..core import DBLSHParams, build, search_batch_fixed, validate_engine
 from ..core.index import DBLSHIndex, compute_norm_blocks
 from ..core import updates as _updates
 from ..tune import planner as _planner
-from ..tune.planner import ScheduleTable
-from ..tune.policy import (
-    ResolvedPlan,
-    policy_from_dict,
-    policy_to_dict,
-    resolve_policy,
+from .lifecycle import (
+    _INDEX_ARRAY_FIELDS,
+    CollectionLifecycle,
+    CollectionStats,
+    CompactionPolicy,
+    version_clock,
 )
 
 __all__ = ["CompactionPolicy", "CollectionStats", "Collection", "version_clock"]
 
 
-class _VersionClock:
-    """Process-wide monotonic source of collection versions.
-
-    A plain per-collection counter would alias: two collections restored
-    from the same snapshot both sit at version v yet may diverge, and a
-    cache keyed on (name, v) would serve one the other's results.  A
-    single process-wide clock makes every (mutation, restore) event
-    globally unique, so version equality implies state equality.
-    """
-
-    def __init__(self):
-        self._v = 0
-
-    def next(self) -> int:
-        self._v += 1
-        return self._v
-
-    def advance_past(self, v: int) -> int:
-        """A fresh version strictly greater than both ``v`` and anything
-        already handed out (used by restore)."""
-        self._v = max(self._v, int(v))
-        return self.next()
-
-
-version_clock = _VersionClock()
-
-_INDEX_ARRAY_FIELDS = (
-    "proj_vecs",
-    "proj_blocks",
-    "ids_blocks",
-    "mbr_lo",
-    "mbr_hi",
-    "data",
-    "vec_blocks",
-    "norm_blocks",
-)
-
-
-@dataclasses.dataclass(frozen=True)
-class CompactionPolicy:
-    """When to rebuild. ``auto=False`` disables the triggers (manual
-    ``compact()`` still works)."""
-
-    growth_ratio: float = 2.0    # compact when n >= ratio * last-built n
-    min_live_ratio: float = 0.5  # compact when live/n drops below this
-    auto: bool = True
-
-
-@dataclasses.dataclass
-class CollectionStats:
-    inserted: int = 0
-    deleted: int = 0
-    compactions: int = 0
-    queries: int = 0
-
-    def as_dict(self) -> dict:
-        return dataclasses.asdict(self)
-
-
-class Collection:
+class Collection(CollectionLifecycle):
     """A named DB-LSH index + payload with a managed lifecycle."""
 
-    def __init__(
-        self,
-        name: str,
-        index: DBLSHIndex,
-        *,
-        payload: jax.Array | np.ndarray | None = None,
-        policy: CompactionPolicy | None = None,
-        key: jax.Array | None = None,
-        built_n: int | None = None,
-        stats: CollectionStats | None = None,
-        version: int | None = None,
-        engine: str | None = None,
-        search_policy=None,
-        calibration: ScheduleTable | None = None,
-    ):
-        if payload is not None:
-            payload = jnp.asarray(payload)
-            assert payload.shape[0] == index.n, (payload.shape, index.n)
-        self.name = name
+    placement = "local"
+
+    def __init__(self, name: str, index: DBLSHIndex, **kw):
         self.index = index
-        self.payload = payload
-        self.policy = policy or CompactionPolicy()
-        self._key = jax.random.key(0) if key is None else key
-        self.built_n = index.n if built_n is None else built_n
-        self.stats = stats or CollectionStats()
-        self.version = version_clock.next() if version is None else version
-        # per-collection verify-engine default: used whenever a search /
-        # service dispatch doesn't name one explicitly (None = defer to
-        # the caller's default)
+        super().__init__(name, **kw)
+
+    def _validate_default_engine(self, engine: str | None) -> str | None:
         if engine is not None:
             validate_engine(engine)
-            if engine == "inline" and not index.params.inline_vectors:
+            if engine == "inline" and not self.index.params.inline_vectors:
                 raise ValueError(
-                    f"collection {name!r}: engine='inline' needs an index "
+                    f"collection {self.name!r}: engine='inline' needs an index "
                     "built with inline_vectors=True (the scalar-prefetch "
                     "kernel streams the per-table vector copy)"
                 )
-        self.default_engine = engine
-        # per-collection query-planning default (repro.tune policy): used
-        # by StoreService's plan resolution whenever a submit doesn't
-        # name a policy (request > collection > service); the calibration
-        # table backs RecallTarget/LatencyBudget planning and persists
-        # through snapshot/restore.
-        self.search_policy = search_policy
-        self.calibration = calibration
+        return engine
 
     # ------------------------------------------------------------ construction
     @classmethod
@@ -222,103 +126,33 @@ class Collection:
     def live_count(self) -> int:
         return _updates.live_count(self.index)
 
-    # ----------------------------------------------------------------- writes
-    def add(self, points, payload=None) -> np.ndarray:
-        """Insert ``points`` (m, d); returns their ids (post-compaction ids
-        if the policy fired)."""
-        points = jnp.atleast_2d(jnp.asarray(points, jnp.float32))
+    # -------------------------------------------------------- placement hooks
+    def _insert(self, points, payload) -> np.ndarray:
         m = points.shape[0]
-        if (payload is None) != (self.payload is None):
-            raise ValueError(
-                f"collection {self.name!r}: payload must be provided iff the "
-                "collection carries one"
-            )
         ids = np.arange(self.n, self.n + m, dtype=np.int64)
         self.index = _updates.insert(self.index, points)
         if payload is not None:
-            self.payload = jnp.concatenate(
-                [self.payload, jnp.asarray(payload)], axis=0
-            )
-        self.stats.inserted += m
-        self.version = version_clock.next()
-        id_map = self._maybe_compact()
-        if id_map is not None:
-            ids = id_map[ids]
+            self.payload = jnp.concatenate([self.payload, payload], axis=0)
         return ids
 
-    def remove(self, ids) -> np.ndarray | None:
-        """Tombstone ``ids``; space is reclaimed at the next compaction.
-
-        Returns the compaction id map (old id -> new id, -1 if deleted)
-        when the policy fired — every outstanding id must be remapped
-        through it — or None when no compaction happened."""
-        ids = jnp.atleast_1d(jnp.asarray(ids, jnp.int32))
+    def _delete(self, ids) -> None:
         self.index = _updates.delete(self.index, ids)
-        self.stats.deleted += int(ids.shape[0])
-        self.version = version_clock.next()
-        return self._maybe_compact()
 
-    # ------------------------------------------------------------- compaction
-    def should_compact(self) -> bool:
-        n = self.index.n
-        if n >= self.policy.growth_ratio * self.built_n and n > self.built_n:
-            return True
-        return self.live_count() < self.policy.min_live_ratio * n
-
-    def compact(self) -> np.ndarray:
-        """Rebuild now. Returns id_map (n_old,): old id -> new id or -1."""
-        self._key, kc = jax.random.split(self._key)
-        self.index, id_map = _updates.compact(self.index, kc)
-        id_map = np.asarray(id_map)
-        if self.payload is not None:
-            live_old = np.flatnonzero(id_map >= 0)
-            # compact assigns new ids in ascending old-id order, so this
-            # gather lands each payload row at its new id.
-            self.payload = jnp.asarray(self.payload)[live_old]
-        self.built_n = self.index.n
-        self.stats.compactions += 1
-        self.version = version_clock.next()
+    def _compact_impl(self, key) -> np.ndarray:
+        self.index, id_map = _updates.compact(self.index, key)
         return id_map
 
-    def _maybe_compact(self) -> np.ndarray | None:
-        if self.policy.auto and self.should_compact():
-            return self.compact()
-        return None
-
-    # ----------------------------------------------------------- planning
-    def calibrate(
-        self,
-        queries,
-        *,
-        k: int = 0,
-        r0: float | None = None,
-        steps_max: int = 8,
-        engine: str | None = None,
-        interpret: bool | None = None,
-        measure_ms: bool = False,
-    ) -> ScheduleTable:
-        """Fit (and store) the collection's schedule table from a
-        held-out query sample — the planner backing for outcome-level
-        policies.  The table persists through :meth:`snapshot` /
-        :meth:`restore`.  Re-run after heavy updates: compaction changes
-        K/L and block geometry, which shifts the recall/cost curves."""
-        table = _planner.calibrate(
+    def _calibrate_impl(self, queries, *, k, r0, steps_max, engine,
+                        interpret, measure_ms):
+        # ground the oracle on live rows only: tombstoned rows cannot be
+        # returned, so leaving them in would under-measure recall
+        ids0 = np.asarray(self.index.ids_blocks[0])
+        live = np.unique(ids0[ids0 < self.index.n])
+        return _planner.calibrate(
             self.index, queries, k=k, r0=r0, steps_max=steps_max,
             engine=engine or self.default_engine or "jnp",
             interpret=interpret, measure_ms=measure_ms,
-        )
-        self.calibration = table
-        return table
-
-    def plan(self, policy=None, *, default_r0: float = 1.0,
-             default_steps: int = 8) -> ResolvedPlan:
-        """Resolve a query-planning policy (explicit > collection
-        default) against the stored calibration into the concrete
-        (r0, steps, termination) the dispatch runs."""
-        return _planner.plan(
-            self.calibration,
-            resolve_policy(policy, self.search_policy),
-            default_r0=default_r0, default_steps=default_steps,
+            oracle_rows=None if live.size == self.index.n else live,
         )
 
     # ------------------------------------------------------------------ reads
@@ -347,7 +181,7 @@ class Collection:
         search (DESIGN.md §6).
         """
         Q = jnp.atleast_2d(jnp.asarray(Q, jnp.float32))
-        self.stats.queries += int(Q.shape[0]) if rows is None else int(rows)
+        self._count_queries(Q, rows)
         return search_batch_fixed(
             self.index, Q, k=k, r0=r0, steps=steps,
             engine=engine or self.default_engine or "jnp",
@@ -355,51 +189,24 @@ class Collection:
             termination=termination,
         )
 
-    def get_payload(self, ids):
-        """Payload rows for returned neighbor ids. Invalid slots (id == n,
-        the not-found sentinel) clamp to the *last* payload row — always
-        mask on the distances (+inf marks unfilled slots), not on ids."""
-        if self.payload is None:
-            raise ValueError(f"collection {self.name!r} has no payload")
-        ids = jnp.asarray(ids)
-        return jnp.take(
-            self.payload, jnp.minimum(ids, self.payload.shape[0] - 1), axis=0
-        )
-
     # ------------------------------------------------------------ persistence
-    def snapshot(self, directory: str, step: int | None = None) -> int:
-        """Atomic checkpoint via Checkpointer; returns the step written.
-        Defaults to one past the latest step already in ``directory`` so
-        successive snapshots never overwrite each other (Checkpointer
-        keeps the most recent few and GCs the rest)."""
-        ck = Checkpointer(directory)
-        if step is None:
-            latest = ck.latest_step()
-            step = 0 if latest is None else latest + 1
-        tree = {f: np.asarray(getattr(self.index, f)) for f in _INDEX_ARRAY_FIELDS}
-        tree["prng_key"] = np.asarray(jax.random.key_data(self._key))
-        if self.payload is not None:
-            tree["payload"] = np.asarray(self.payload)
-        meta = {
-            "name": self.name,
-            "params": dataclasses.asdict(self.index.params),
-            "policy": dataclasses.asdict(self.policy),
-            "built_n": self.built_n,
-            "stats": self.stats.as_dict(),
-            "has_payload": self.payload is not None,
-            "version": self.version,
-            "engine": self.default_engine,
-            "search_policy": policy_to_dict(self.search_policy),
-            "calibration": (
-                None if self.calibration is None else self.calibration.to_dict()
-            ),
+    def _snapshot_arrays(self) -> dict:
+        return {
+            f: np.asarray(getattr(self.index, f)) for f in _INDEX_ARRAY_FIELDS
         }
-        ck.save(step, tree, meta)
-        return step
+
+    def _snapshot_meta(self) -> dict:
+        return {"params": dataclasses.asdict(self.index.params)}
 
     @classmethod
     def restore(cls, directory: str, step: int | None = None) -> "Collection":
         tree, meta = Checkpointer(directory).restore(step)
+        if meta.get("placement", "local") != "local":
+            raise ValueError(
+                f"snapshot at {directory!r} is {meta['placement']!r}: "
+                "restore it with ShardedCollection.restore(mesh=...) or "
+                "repro.store.restore_collection(..., mesh=...)"
+            )
         params = DBLSHParams(**meta["params"])
         arrays = {
             f: jnp.asarray(tree[f]) for f in _INDEX_ARRAY_FIELDS if f in tree
@@ -411,24 +218,5 @@ class Collection:
                 arrays["data"], arrays["ids_blocks"]
             )
         index = DBLSHIndex(**arrays, params=params)
-        payload = jnp.asarray(tree["payload"]) if meta["has_payload"] else None
-        col = cls(
-            meta["name"],
-            index,
-            payload=payload,
-            policy=CompactionPolicy(**meta["policy"]),
-            key=jax.random.wrap_key_data(jnp.asarray(tree["prng_key"])),
-            built_n=meta["built_n"],
-            stats=CollectionStats(**meta["stats"]),
-            # fresh version past the persisted one: a restored collection
-            # must never alias cache entries of any live (possibly
-            # diverged) collection with the same name — see module doc.
-            version=version_clock.advance_past(meta.get("version", 0)),
-            engine=meta.get("engine"),
-            search_policy=policy_from_dict(meta.get("search_policy")),
-            calibration=(
-                ScheduleTable.from_dict(meta["calibration"])
-                if meta.get("calibration") else None
-            ),
-        )
-        return col
+        return cls(meta["name"], index,
+                   **cls._common_restore_kwargs(tree, meta))

@@ -1,67 +1,96 @@
-"""Shard-aware routing: the Collection API over ``core.distributed``.
+"""Shard-aware routing: the full Collection lifecycle over
+``core.distributed``.
 
 A dataset too large for one device shards over the mesh 'data' axis:
 every device builds a local DB-LSH index with the *same* LSH functions
 (``core.distributed.build_sharded``), queries replicate, and per-shard
 top-k merge with one all_gather into globally-id'd results.
-:class:`ShardedCollection` hides all of that behind the same ``search``
-/ ``get_payload`` / ``name`` surface as a local
-:class:`~repro.store.collection.Collection`, so a
-:class:`~repro.store.service.StoreService` can serve both through one
-admission queue.
+:class:`ShardedCollection` implements the same mutable lifecycle
+protocol as a local :class:`~repro.store.collection.Collection`
+(``store.lifecycle.CollectionLifecycle``): ``add`` routes inserts to the
+least-loaded shard, ``remove`` translates global ids per shard,
+``compact`` rebuilds every shard from its survivors with a gathered
+global id remap, and ``snapshot`` / ``restore(mesh=...)`` persist the
+whole state — so a :class:`~repro.store.service.StoreService` serves
+both placements through one admission queue, one cache-invalidation
+contract, and one policy/engine resolution path, with no read-only
+special cases.
 
 :func:`open_collection` is the router decision point: it places data on
-a single device when it fits (``max_points_per_shard``), otherwise
-fans out over the mesh.
+a single device when it fits (``max_points_per_shard``), otherwise fans
+out over the mesh — the lifecycle options (``policy``, ``engine``,
+``search_policy``) apply to whichever placement wins.
+
+**Id contract** (DESIGN.md §9): global ids are placement-relative,
+``gid = rank * n_local + local``.  That keeps the merge's disjoint-id
+invariant, but an ``add`` grows ``n_local`` and therefore *re-bases*
+every existing global id (``g -> (g // n_old) * n_new + g % n_old``);
+``compact`` renumbers like the local placement and returns the id map.
+Callers that hold ids across sharded mutations should re-derive them
+from search results or carry identity in the payload.
 """
 
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
 
+from ..checkpoint import Checkpointer
 from ..core import DBLSHParams
-from ..core.distributed import ShardedDBLSH, build_sharded, search_sharded
-from .collection import Collection, CompactionPolicy, version_clock
+from ..core.distributed import (
+    ShardedDBLSH,
+    _index_specs,
+    build_sharded,
+    compact_sharded,
+    delete_sharded,
+    insert_sharded,
+    search_sharded,
+    shard_live_counts,
+)
+from ..core.index import DBLSHIndex
+from ..tune import planner as _planner
+from .collection import Collection, CompactionPolicy
+from .lifecycle import _INDEX_ARRAY_FIELDS, CollectionLifecycle
 
 __all__ = ["ShardedCollection", "open_collection"]
 
 
-class ShardedCollection:
-    """A collection fanned out over the mesh ``axis``; read path only.
+class ShardedCollection(CollectionLifecycle):
+    """A collection fanned out over the mesh ``axis`` — same mutable
+    lifecycle as :class:`~repro.store.collection.Collection`.
 
-    Updates go through per-shard rebuilds (``create`` again) — online
-    insert/delete into a sharded index is a later-PR concern; the
-    service only needs the query surface here.  The payload stays global
-    (replicated): it is indexed by *global* ids after the top-k merge,
-    which is exactly what ``search_sharded`` returns.
+    The payload stays global (replicated): it is indexed by *global*
+    ids after the top-k merge, which is exactly what ``search_sharded``
+    returns.  Mutations draw versions from the same process-wide clock
+    as local collections, so the service result cache invalidates
+    sharded updates identically (DESIGN.md §6).
     """
 
-    def __init__(self, name: str, sharded: ShardedDBLSH, mesh, *, payload=None):
-        self.name = name
+    placement = "sharded"
+
+    def __init__(self, name: str, sharded: ShardedDBLSH, mesh, **kw):
         self.sharded = sharded
         self.mesh = mesh
-        self.payload = None if payload is None else jnp.asarray(payload)
-        if self.payload is not None:
-            assert self.payload.shape[0] == sharded.n_total
-        # read-only collection: the version is fixed at creation but still
-        # drawn from the shared clock so service-level caches key on it
-        # exactly like a local Collection's.
-        self.version = version_clock.next()
         # the sharded path always verifies through the jnp engine;
         # ``fixed_engine`` tells the StoreService's engine resolution to
         # ignore request/collection/service preferences entirely, so
         # tickets and cache keys reflect the engine that actually ran
         # (and a drained batch is never split over engines pointlessly)
         self.fixed_engine = "jnp"
-        self.default_engine = None
-        # query-planning surface parity with Collection: a sharded
-        # collection may carry a policy (the service resolves it the same
-        # way) but is read-only, so calibration must be supplied by the
-        # caller (there are no updates to invalidate it).
-        self.search_policy = None
-        self.calibration = None
+        super().__init__(name, **kw)
+
+    def _validate_default_engine(self, engine: str | None) -> str | None:
+        if engine not in (None, "jnp"):
+            raise ValueError(
+                f"collection {self.name!r}: sharded collections verify per "
+                f"shard through the jnp engine; engine={engine!r} cannot be "
+                "honored (fixed_engine pins service resolution)"
+            )
+        return engine
 
     @classmethod
     def create(
@@ -74,6 +103,9 @@ class ShardedCollection:
         axis: str = "data",
         params: DBLSHParams | None = None,
         payload=None,
+        policy: CompactionPolicy | None = None,
+        engine: str | None = None,
+        search_policy=None,
         **derive_kw,
     ) -> "ShardedCollection":
         data = jnp.asarray(data, jnp.float32)
@@ -83,7 +115,12 @@ class ShardedCollection:
             # size K/L for the per-shard n: each device answers locally.
             params = DBLSHParams.derive(n=n // pn, d=d, **derive_kw)
         sharded = build_sharded(key, data, params, mesh, axis=axis)
-        return cls(name, sharded, mesh, payload=payload)
+        # build consumes the caller's key whole (identical hash functions
+        # on every shard); fold for the compaction key stream instead of
+        # splitting so the built index matches a local build(key, ...)
+        kc = jax.random.fold_in(key, 0x5EED)
+        return cls(name, sharded, mesh, payload=payload, policy=policy,
+                   key=kc, engine=engine, search_policy=search_policy)
 
     # ---------------------------------------------------------------- surface
     @property
@@ -94,6 +131,85 @@ class ShardedCollection:
     def d(self) -> int:
         return self.sharded.index.data.shape[1]
 
+    def live_count(self) -> int:
+        return int(np.asarray(shard_live_counts(self.sharded, self.mesh)).sum())
+
+    def shard_counts(self) -> np.ndarray:
+        """Per-shard live point counts (P,) — the insert-routing signal."""
+        return np.asarray(shard_live_counts(self.sharded, mesh=self.mesh))
+
+    def _occupancy(self) -> tuple[int, int]:
+        counts = self.shard_counts()  # one device read serves both
+        return int(counts.sum()), int(counts.max()) * int(counts.shape[0])
+
+    # -------------------------------------------------------- placement hooks
+    def _insert(self, points, payload) -> np.ndarray:
+        counts = self.shard_counts()
+        target = int(np.argmin(counts))  # least-loaded shard takes the batch
+        pn = int(counts.shape[0])
+        m = int(points.shape[0])
+        n_old = self.sharded.n_local
+        self.sharded = insert_sharded(
+            self.sharded, points, target, mesh=self.mesh
+        )
+        n_new = self.sharded.n_local
+        if self.payload is not None:
+            # re-base the global payload layout: rows live at
+            # rank * n_local + local, so growth re-slots every shard's
+            # block.  The new rows are replicated to every shard's tail
+            # (only the target's are live; dead copies are never
+            # returned — their ids are tombstoned).
+            tail = self.payload.shape[1:]
+            old = jnp.reshape(self.payload, (pn, n_old) + tail)
+            rep = jnp.broadcast_to(payload[None], (pn, m) + tail)
+            self.payload = jnp.concatenate([old, rep], axis=1).reshape(
+                (pn * n_new,) + tail
+            )
+        return target * n_new + n_old + np.arange(m, dtype=np.int64)
+
+    def _delete(self, ids) -> None:
+        self.sharded = delete_sharded(self.sharded, ids, mesh=self.mesh)
+
+    def _compact_impl(self, key) -> np.ndarray:
+        self.sharded, id_map = compact_sharded(self.sharded, key, self.mesh)
+        return id_map
+
+    def _calibrate_impl(self, queries, *, k, r0, steps_max, engine,
+                        interpret, measure_ms):
+        del engine, interpret  # per-shard verify is pinned to jnp
+        kk = k or self.sharded.index.params.k
+
+        def search_fn(Q, r0, steps, with_stats=False):
+            return search_sharded(
+                self.sharded, Q, k=kk, r0=r0, steps=steps, mesh=self.mesh,
+                with_stats=with_stats,
+            )
+
+        return _planner.calibrate(
+            self.sharded.index, queries, k=kk, r0=r0, steps_max=steps_max,
+            measure_ms=measure_ms, search_fn=search_fn,
+            oracle_rows=self._live_global_rows(),
+        )
+
+    def _live_global_rows(self) -> np.ndarray | None:
+        """Global data-row indices (== global ids) of live points, or
+        None when every row is live.  The oracle must exclude dead rows:
+        a sharded insert leaves P-1 tombstoned replicas of every point
+        at identical coordinates, and per-shard compaction padding adds
+        zero rows — none of them returnable."""
+        s = self.sharded
+        pn = int(self.mesh.shape[s.axis])
+        ids0 = np.asarray(s.index.ids_blocks[0])  # (nb_global, B) local ids
+        blocks = ids0.reshape(pn, -1)
+        rows = []
+        for r in range(pn):
+            loc = np.unique(blocks[r])
+            loc = loc[loc < s.n_local]
+            rows.append(loc + r * s.n_local)
+        live = np.concatenate(rows)
+        return None if live.size == s.n_total else live
+
+    # ------------------------------------------------------------------ reads
     def search(
         self,
         Q,
@@ -109,33 +225,83 @@ class ShardedCollection:
         termination=None,
     ):
         """Global (c,k)-ANN: per-shard fixed-schedule search + all_gather
-        top-k merge. ``engine`` / ``interpret`` / ``exact`` are accepted
-        for API parity; the sharded path always verifies through the jnp
-        engine.  ``rows`` (real rows in a service-padded batch) is
-        accepted for parity too — the sharded collection keeps no query
-        counter.  With ``with_stats`` the per-shard probe statistics
-        survive the collective merge (``search_sharded`` aggregates
-        candidates by psum and radius_steps by pmax), so ``svc.stats()``
-        reports real per-query probe effort for sharded collections.
-        ``termination`` applies per shard (each device runs its own
-        C1/C2 masks and while_loop exit — see ``search_sharded``)."""
-        del engine, interpret, rows
+        top-k merge. ``engine`` / ``interpret`` are accepted for API
+        parity; the sharded path always verifies through the jnp engine.
+        ``rows`` (real rows in a service-padded batch) advances the query
+        counter like the local placement.  With ``with_stats`` the
+        per-shard probe statistics survive the collective merge
+        (``search_sharded`` aggregates candidates by psum and
+        radius_steps by pmax), so ``svc.stats()`` reports real per-query
+        probe effort for sharded collections.  ``termination`` applies
+        per shard (each device runs its own C1/C2 masks and while_loop
+        exit — see ``search_sharded``)."""
+        del engine, interpret
         Q = jnp.atleast_2d(jnp.asarray(Q, jnp.float32))
+        self._count_queries(Q, rows)
         k = k or self.sharded.index.params.k
         return search_sharded(
             self.sharded, Q, k=k, r0=r0, steps=steps, mesh=self.mesh,
             with_stats=with_stats, exact=exact, termination=termination,
         )
 
-    def get_payload(self, ids):
-        """Global-id payload lookup; sentinel ids clamp to the last row —
-        mask on distances, as with Collection.get_payload."""
-        if self.payload is None:
-            raise ValueError(f"collection {self.name!r} has no payload")
-        ids = jnp.asarray(ids)
-        return jnp.take(
-            self.payload, jnp.minimum(ids, self.payload.shape[0] - 1), axis=0
+    # ------------------------------------------------------------ persistence
+    def _snapshot_arrays(self) -> dict:
+        # np.asarray gathers each sharded array to one host copy — the
+        # manifest stores the *global* layout plus the shard geometry
+        # needed to re-place it (restore requires an equal shard count:
+        # the per-shard STR packing and the rank-offset id math are both
+        # baked at this P).
+        return {
+            f: np.asarray(getattr(self.sharded.index, f))
+            for f in _INDEX_ARRAY_FIELDS
+        }
+
+    def _snapshot_meta(self) -> dict:
+        return {
+            "params": dataclasses.asdict(self.sharded.index.params),
+            "axis": self.sharded.axis,
+            "shards": int(self.mesh.shape[self.sharded.axis]),
+            "n_local": self.sharded.n_local,
+            "n_total": self.sharded.n_total,
+        }
+
+    @classmethod
+    def restore(
+        cls, directory: str, *, mesh, step: int | None = None,
+    ) -> "ShardedCollection":
+        """Re-place a sharded snapshot onto ``mesh`` (same shard count as
+        at snapshot time — elastic re-sharding means a rebuild, because
+        the per-shard STR layout and rank-offset ids are P-specific)."""
+        tree, meta = Checkpointer(directory).restore(step)
+        if meta.get("placement", "local") != "sharded":
+            raise ValueError(
+                f"snapshot at {directory!r} is local: restore it with "
+                "Collection.restore() or repro.store.restore_collection()"
+            )
+        axis = meta["axis"]
+        pn = int(meta["shards"])
+        if mesh.shape[axis] != pn:
+            raise ValueError(
+                f"snapshot was taken on {pn} shards over {axis!r} but the "
+                f"mesh has {mesh.shape[axis]}: the per-shard layout cannot "
+                "be re-sharded — rebuild with ShardedCollection.create"
+            )
+        params = DBLSHParams(**meta["params"])
+        specs = _index_specs(axis, params)
+        arrays = {
+            f: jax.device_put(
+                np.asarray(tree[f]), NamedSharding(mesh, getattr(specs, f))
+            )
+            for f in _INDEX_ARRAY_FIELDS
+            if f in tree
+        }
+        index = DBLSHIndex(**arrays, params=params)
+        sharded = ShardedDBLSH(
+            index=index, axis=axis, n_total=int(meta["n_total"]),
+            n_local=int(meta["n_local"]),
         )
+        return cls(meta["name"], sharded, mesh,
+                   **cls._common_restore_kwargs(tree, meta))
 
 
 def open_collection(
@@ -148,21 +314,28 @@ def open_collection(
     max_points_per_shard: int = 1_000_000,
     payload=None,
     policy: CompactionPolicy | None = None,
+    engine: str | None = None,
+    search_policy=None,
     **derive_kw,
 ):
     """Route a dataset to local or sharded placement.
 
     Local :class:`Collection` when ``data`` fits one device (or no mesh
-    given); :class:`ShardedCollection` fan-out otherwise.  ``policy``
-    only applies to the local path: the sharded collection is read-only
-    (no updates, hence nothing to compact), so a supplied policy is
-    ignored there.
+    given); :class:`ShardedCollection` fan-out otherwise.  The lifecycle
+    options apply to either placement: ``policy`` drives auto-compaction
+    of sharded collections exactly as it does local ones, and
+    ``search_policy`` rides into the service's plan resolution.
+    ``engine`` must be None or 'jnp' on the sharded path (per-shard
+    verification is pinned to jnp) — it is validated, never silently
+    dropped.
     """
     n = np.asarray(data).shape[0]
     if mesh is not None and mesh.shape[axis] > 1 and n > max_points_per_shard:
         return ShardedCollection.create(
-            name, key, data, mesh, axis=axis, payload=payload, **derive_kw
+            name, key, data, mesh, axis=axis, payload=payload, policy=policy,
+            engine=engine, search_policy=search_policy, **derive_kw
         )
     return Collection.create(
-        name, key, data, payload=payload, policy=policy, **derive_kw
+        name, key, data, payload=payload, policy=policy, engine=engine,
+        search_policy=search_policy, **derive_kw
     )

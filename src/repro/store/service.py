@@ -49,8 +49,14 @@ into a ``ResolvedPlan`` (r0, steps, adaptive termination) that is
 likewise frozen into the ticket, keys the cache, and splits batches
 (one compiled program per (engine, plan)).  Any object with ``search(Q, k=..., r0=..., steps=...,
 engine=..., with_stats=..., rows=...)``, ``name``, and ``version`` can
-be attached — a local :class:`~repro.store.collection.Collection` or
-the sharded router wrapper in :mod:`repro.store.router`.
+be attached.  Local :class:`~repro.store.collection.Collection` and
+sharded :class:`~repro.store.router.ShardedCollection` implement the
+same mutable lifecycle protocol (``store.lifecycle``), so the service
+holds **no placement-specific branches**: mutations on either placement
+bump the same process-wide version clock (cache invalidation is
+identical), policies and calibration resolve identically, and the only
+placement signal is the generic ``fixed_engine`` attribute a collection
+may use to pin engine resolution.
 """
 
 from __future__ import annotations

@@ -121,6 +121,8 @@ def calibrate(
     interpret: bool | None = None,
     measure_ms: bool = False,
     repeats: int = 2,
+    search_fn=None,
+    oracle_rows=None,
 ) -> ScheduleTable:
     """Probe ``queries`` (m, d) against ``index`` and fit the table.
 
@@ -129,20 +131,43 @@ def calibrate(
     estimate recall to a few points, which is all planning needs).
     ``measure_ms=True`` additionally times each length (min over
     ``repeats`` post-warmup runs) so :class:`LatencyBudget` can plan.
+
+    ``search_fn(Q, r0, steps, with_stats=False)`` overrides the dispatch
+    (default: ``search_batch_fixed`` on ``index``) so non-local
+    placements calibrate through their own search path — e.g. a sharded
+    collection probes ``search_sharded`` while ``index`` still supplies
+    the params and the (global) data for the brute-force oracle.
+
+    ``oracle_rows`` restricts the brute-force ground truth to the rows
+    the search can actually return (their original row ids are reported,
+    so recall overlap stays in the search's id space).  Without it a
+    mutated index under-measures: tombstoned rows — including the
+    per-shard dead replicas a sharded insert leaves behind at identical
+    coordinates — would occupy ground-truth top-k slots no search result
+    can ever match.
     """
     p = index.params
     k = k or p.k
     Q = jnp.asarray(queries, jnp.float32)
-    gt_d, gt_i = brute_force(index.data, Q, k=k)
+    if search_fn is None:
+        def search_fn(Qs, r0, steps, with_stats=False):
+            return search_batch_fixed(
+                index, Qs, k=k, r0=r0, steps=steps, engine=engine,
+                interpret=interpret, with_stats=with_stats,
+            )
+
+    if oracle_rows is None:
+        gt_d, gt_i = brute_force(index.data, Q, k=k)
+    else:
+        rows = jnp.asarray(np.asarray(oracle_rows), jnp.int32)
+        gt_d, gt_i = brute_force(jnp.take(index.data, rows, axis=0), Q, k=k)
+        gt_i = jnp.take(rows, gt_i)
     if r0 is None:
         r0 = derive_r0(np.asarray(gt_d)[:, 0], p.c)
 
     recalls, slots, ms = [], [], []
     for j in range(1, steps_max + 1):
-        _, ids, stats = search_batch_fixed(
-            index, Q, k=k, r0=r0, steps=j, engine=engine,
-            interpret=interpret, with_stats=True,
-        )
+        _, ids, stats = search_fn(Q, r0, j, with_stats=True)
         jax.block_until_ready(ids)
         recalls.append(_recall_at(ids, gt_i, k))
         slots.append(float(np.asarray(stats["candidates"]).mean()))
@@ -150,10 +175,7 @@ def calibrate(
             best = np.inf
             for _ in range(max(1, repeats)):
                 t0 = time.perf_counter()
-                out = search_batch_fixed(
-                    index, Q, k=k, r0=r0, steps=j, engine=engine,
-                    interpret=interpret,
-                )
+                out = search_fn(Q, r0, j)
                 jax.block_until_ready(out)
                 best = min(best, time.perf_counter() - t0)
             ms.append(best * 1e3 / Q.shape[0])

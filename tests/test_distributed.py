@@ -60,6 +60,138 @@ assert ((steps_t >= 1) & (steps_t <= 8)).all()
 print("SHARDED_ANN_OK", rec)
 """
 
+SCRIPT_SHARDED_LIFECYCLE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import DBLSHParams, brute_force
+from repro.data import make_clustered, normalize_scale
+from repro.store import (ShardedCollection, CompactionPolicy, StoreService,
+                         open_collection, restore_collection)
+
+mesh = jax.make_mesh((8,), ("data",))
+key = jax.random.key(3)
+kd, kb = jax.random.split(key)
+allpts = make_clustered(kd, 4288, 24, n_clusters=16, spread=0.02)
+data, extra, queries = allpts[:4096], allpts[4096:4256], allpts[4256:]
+data, queries, scale = normalize_scale(data, queries)
+extra = np.asarray(extra * scale)
+data, queries = np.asarray(data), np.asarray(queries)
+
+params = DBLSHParams.derive(n=512, d=24, c=1.5, t=48, k=10, K=8, L=3)
+col = ShardedCollection.create("fleet", kb, data, mesh, params=params,
+                               payload=np.arange(4096),
+                               policy=CompactionPolicy(auto=False))
+assert col.n == 4096 and col.live_count() == 4096
+np.testing.assert_array_equal(col.shard_counts(), np.full(8, 512))
+
+# open_collection routes sharded and no longer drops lifecycle options
+oc = open_collection("routed", kb, data, mesh=mesh, max_points_per_shard=1024,
+                     params=params,
+                     policy=CompactionPolicy(growth_ratio=7.7, auto=False))
+assert isinstance(oc, ShardedCollection) and oc.policy.growth_ratio == 7.7
+del oc
+
+# add: routed to the least-loaded shard, payload rides the id re-base
+ids1 = col.add(extra[:40], payload=np.arange(4096, 4136))
+c1 = col.shard_counts()
+assert c1.sum() == 4136 and c1.max() - c1.min() == 40, c1
+q = extra[7:8]
+d, i = col.search(q, k=1, r0=0.25, steps=8, exact=True)
+assert float(d[0, 0]) < 1e-3, float(d[0, 0])
+assert int(np.asarray(col.get_payload(i))[0, 0]) == 4096 + 7
+assert int(i[0, 0]) == int(ids1[7])  # returned ids are current global ids
+ids2 = col.add(extra[40:80], payload=np.arange(4136, 4176))
+c2 = col.shard_counts()  # second batch lands on a different shard
+assert c2.sum() == 4176 and c2.max() - c2.min() == 40, c2
+
+# remove by current global ids: tombstoned ids never return
+d_s, i_s = map(np.asarray, col.search(queries, k=10, r0=0.5, steps=8))
+victims = np.unique(i_s[np.isfinite(d_s)])[:64].astype(np.int32)
+victim_tags = np.asarray(col.get_payload(victims[None]))[0]
+col.remove(victims)
+assert col.live_count() == 4176 - len(victims)
+d_s2, i_s2 = map(np.asarray, col.search(queries, k=10, r0=0.5, steps=8))
+leaked = set(victims.tolist()) & set(
+    i_s2[np.isfinite(d_s2)].reshape(-1).tolist())
+assert not leaked, leaked
+
+# compact: per-shard rebuild + gathered global id remap; id-set parity
+# vs brute force on the post-mutation point set, matched via payload
+# tags (the stable identity across sharded id re-bases)
+id_map = col.compact()
+assert col.stats.compactions == 1
+assert int((id_map >= 0).sum()) == col.live_count() == 4176 - len(victims)
+all_pts = np.concatenate([data, extra[:80]])
+alive = np.ones(4176, bool)
+alive[victim_tags.astype(int)] = False
+alive_tags = np.flatnonzero(alive)
+gd, gi = map(np.asarray, brute_force(jnp.asarray(all_pts[alive_tags]),
+                                     jnp.asarray(queries), k=10))
+d_s3, i_s3 = map(np.asarray, col.search(queries, k=10, r0=0.5, steps=8))
+tags3 = np.asarray(col.get_payload(i_s3)).astype(int)  # one batched take
+recs = []
+for qi in range(queries.shape[0]):
+    f = np.isfinite(d_s3[qi])
+    got_tags = tags3[qi][f]
+    want_tags = alive_tags[gi[qi]]
+    recs.append(len(set(got_tags.tolist()) & set(want_tags.tolist())) / 10)
+    true_d = np.linalg.norm(all_pts[got_tags] - queries[qi], axis=-1)
+    np.testing.assert_allclose(d_s3[qi][f], true_d, rtol=3e-3, atol=3e-3)
+rec = float(np.mean(recs))
+assert rec > 0.6, rec
+
+# snapshot / restore on the same mesh: bit-equal, fresh version
+import tempfile
+tmp = tempfile.mkdtemp()
+col.calibrate(queries[:16], k=10)
+step = col.snapshot(tmp)
+col2 = restore_collection(tmp, step, mesh=mesh)
+assert col2.version > col.version and col2.calibration is not None
+assert col2.policy == col.policy
+d_a, i_a = map(np.asarray, col.search(queries, k=10, r0=0.5, steps=8))
+d_b, i_b = map(np.asarray, col2.search(queries, k=10, r0=0.5, steps=8))
+np.testing.assert_array_equal(i_a, i_b)
+np.testing.assert_array_equal(np.asarray(col.payload), np.asarray(col2.payload))
+
+# a snapshot cannot silently re-shard: the per-shard layout is P-baked
+try:
+    restore_collection(tmp, step, mesh=jax.make_mesh((4, 2), ("data", "model")))
+    raise SystemExit("re-sharding restore should have failed")
+except ValueError:
+    pass
+
+# imbalance-induced hollowness must not start an auto-compaction storm:
+# per-shard padding under the fleet max is structural (points never
+# migrate), so once compacted the policy goes quiet even when the live
+# ratio sits under min_live_ratio — and a second rebuild cannot shrink n
+small = ShardedCollection.create(
+    "storm", kb, data[:1024], mesh,
+    params=DBLSHParams.derive(n=128, d=24, c=1.5, t=16, k=5),
+    policy=CompactionPolicy(min_live_ratio=0.95, auto=False))
+small.add(extra[:120])  # one shard takes the whole batch -> imbalance
+small.compact()
+n_after = small.n
+assert small.live_count() < 0.95 * small.n  # hollow by imbalance alone
+assert not small.should_compact()
+small.compact()
+assert small.n == n_after
+
+# the service serves + invalidates sharded mutations via the shared clock
+svc = StoreService(batch_shapes=(8,), default_k=10, r0=0.5, steps=8,
+                   cache_size=64)
+svc.attach(col)
+r1 = [svc.submit("fleet", qq) for qq in queries[:8]]; svc.flush()
+r2 = [svc.submit("fleet", qq) for qq in queries[:8]]; svc.flush()
+assert all(r.cached for r in r2)
+col.add(extra[80:88], payload=np.arange(4176, 4184))
+r3 = [svc.submit("fleet", qq) for qq in queries[:8]]; svc.flush()
+assert not any(r.cached for r in r3)
+assert all(r.engine == "jnp" for r in r3)  # fixed_engine pins resolution
+print("SHARDED_LIFECYCLE_OK", rec)
+"""
+
+
 SCRIPT_TRAIN_PARITY = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -152,6 +284,15 @@ def _run(script, tag):
 @pytest.mark.slow
 def test_sharded_ann_8dev():
     _run(SCRIPT_SHARDED_ANN, "SHARDED_ANN_OK")
+
+
+@pytest.mark.slow
+def test_sharded_lifecycle_8dev():
+    """The mutable sharded lifecycle at real shard count: least-loaded
+    insert routing, global-id delete translation, per-shard compaction
+    with the gathered remap, payload integrity across id re-bases,
+    snapshot/restore, and service cache invalidation."""
+    _run(SCRIPT_SHARDED_LIFECYCLE, "SHARDED_LIFECYCLE_OK")
 
 
 @pytest.mark.slow
