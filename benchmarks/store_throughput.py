@@ -8,6 +8,14 @@ multi-tenant point with a quota-limited tenant.  Emits a JSON report
 with per-point ``overlap_ratio`` / ``cache_hit_rate`` and per-tenant
 QPS.
 
+``--obs`` benchmarks the observability contract instead: the same
+overlapped stream with ``repro.obs`` fully enabled (tracing, sample
+rate 1.0) vs disabled, interleaved best-of-rounds.  It asserts bit-equal
+results, writes the metrics registry (JSON + Prometheus text) and the
+trace (JSONL + Perfetto timeline) as artifacts, verifies the timeline
+shows the in-flight ring overlap, and — with ``--gate`` — hard-fails if
+the enabled overhead exceeds ``--max-overhead`` (default 5%).
+
 ``--sharded-updates`` benchmarks the *mutable sharded lifecycle*
 instead: a ShardedCollection absorbs interleaved add / remove / compact
 ops while serving queries through the StoreService, reporting mutation
@@ -50,6 +58,8 @@ except ImportError:
     from common import load_dataset, recall_and_ratio
 
 from repro.core import brute_force
+from repro.obs import Observability, Tracer
+from repro.obs.metrics import MetricsRegistry
 from repro.store import (
     Collection,
     CompactionPolicy,
@@ -185,6 +195,159 @@ def _bench_tenants(col, queries, *, batch_size: int, engine: str, k: int,
         "rejected": rejected,
         "per_tenant": svc.tenant_stats(),
     }
+
+
+def _overlap_visible(tracer: Tracer) -> bool:
+    """True when the trace shows ring overlap *structurally*: some
+    batch's issue span sits inside an earlier batch's pending window, on
+    a different ring lane — the picture a Perfetto load should show."""
+    issues = [s for s in tracer.events if s.name == "batch.issue"]
+    pendings = [s for s in tracer.events if s.name == "batch.pending"]
+    for p in pendings:
+        for i in issues:
+            if (
+                i.args.get("seq", -1) > p.args.get("seq", -1)
+                and i.tid != p.tid
+                and p.ts <= i.ts
+                and i.ts + i.dur <= p.ts + p.dur
+            ):
+                return True
+    return False
+
+
+def bench_obs(
+    scale: float = 0.2,
+    dataset: str = "sift-s",
+    batch_size: int = 16,
+    engine: str = "jnp",
+    k: int = 10,
+    n_queries: int = 128,
+    rounds: int = 5,
+    max_overhead: float = 0.05,
+    gate: bool = False,
+    out: str = "store_obs.json",
+):
+    """Observability overhead + artifact benchmark (the repro.obs gate).
+
+    Runs the same all-unique overlapped stream twice per round — obs off
+    (metrics only, tracing disabled) and obs fully on (tracing enabled,
+    sample_rate 1.0) — interleaved, keeping each arm's best round
+    (shared hosts drift; interleaving keeps the drift off one arm).
+    Asserts the two arms return **bit-equal** results, writes the
+    enabled arm's metrics registry (JSON + Prometheus text) and trace
+    (JSONL + Perfetto ``trace_event`` timeline) next to ``out``, and
+    verifies the timeline actually shows ring overlap (batch N+1's issue
+    span inside batch N's pending window, one lane up).  With ``gate``
+    the ≤ ``max_overhead`` enabled-overhead contract is a hard assert —
+    the CI hook.
+    """
+    data, queries = load_dataset(dataset, scale=scale)
+    col = Collection.create(
+        "bench", jax.random.key(1), data, c=1.5, t=64, k=k,
+        payload=np.arange(data.shape[0]),
+    )
+    reps = -(-n_queries // queries.shape[0])
+    tiled = np.tile(queries, (reps, 1))[:n_queries]
+    jitter = 1e-4 * np.arange(n_queries, dtype=np.float32)[:, None]
+    stream = (tiled + jitter).astype(np.float32)
+
+    def run(traced: bool):
+        # private tracer per run: the global one must stay untouched so
+        # the obs-off arm is genuinely off
+        obs = Observability(
+            registry=MetricsRegistry(),
+            tracer=Tracer(enabled=False),
+            trace=traced,
+        )
+        svc = StoreService(
+            batch_shapes=(batch_size,), max_wait_ms=1e9, default_k=k,
+            r0=0.5, steps=8, engine=engine, inflight_depth=2,
+            cache_size=0, obs=obs,
+        )
+        svc.attach(col)
+        tickets = []
+        t0 = time.perf_counter()
+        for q in stream:
+            tickets.append(svc.submit("bench", q))
+            if svc.pending() >= batch_size:
+                svc.step()
+        svc.flush()
+        wall = time.perf_counter() - t0
+        d = np.stack([t.dists for t in tickets])
+        i = np.stack([t.ids for t in tickets])
+        return svc, obs, wall, d, i
+
+    run(False), run(True)  # warmup: compiles the (batch_size, d) program
+    best = {}
+    for _ in range(rounds):
+        for arm in (False, True):
+            svc, obs, wall, d, i = run(arm)
+            key = "on" if arm else "off"
+            if key not in best or wall < best[key][2]:
+                best[key] = (svc, obs, wall, d, i)
+
+    _, _, wall_off, d_off, i_off = best["off"]
+    svc_on, obs_on, wall_on, d_on, i_on = best["on"]
+
+    # contract 1: observability never changes results
+    assert np.array_equal(d_off, d_on) and np.array_equal(i_off, i_on), (
+        "obs-enabled results diverged from obs-off"
+    )
+    overhead = wall_on / wall_off - 1.0
+
+    # contract 2: the exported timeline shows the ring overlap
+    overlap_ok = _overlap_visible(obs_on.tracer)
+    stats = svc_on.stats("bench")
+    if stats["overlap_ratio"] > 0:
+        assert overlap_ok, (
+            "overlapped batches ran but the trace shows no nested "
+            "issue-inside-pending window"
+        )
+
+    stem = out[:-5] if out.endswith(".json") else out
+    obs_on.registry.export_json(f"{stem}_metrics.json")
+    obs_on.registry.export_prometheus(f"{stem}_metrics.prom")
+    n_spans = obs_on.tracer.export_jsonl(f"{stem}_spans.jsonl")
+    n_events = obs_on.tracer.export_perfetto(f"{stem}_trace.json")
+
+    report = {
+        "mode": "obs",
+        "dataset": dataset,
+        "scale": scale,
+        "engine": engine,
+        "batch_size": batch_size,
+        "queries": n_queries,
+        "rounds": rounds,
+        "device": str(jax.devices()[0]),
+        "qps_off": n_queries / wall_off,
+        "qps_on": n_queries / wall_on,
+        "overhead_frac": overhead,
+        "max_overhead": max_overhead,
+        "bit_equal": True,
+        "overlap_ratio": stats["overlap_ratio"],
+        "overlap_visible_in_trace": overlap_ok,
+        "spans": n_spans,
+        "trace_events": n_events,
+        "latency_ms_p50": stats["latency_ms_p50"],
+        "latency_ms_p99": stats["latency_ms_p99"],
+        "artifacts": [f"{stem}_metrics.json", f"{stem}_metrics.prom",
+                      f"{stem}_spans.jsonl", f"{stem}_trace.json"],
+    }
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(
+        f"[obs {engine} bs={batch_size}] off={report['qps_off']:.1f} QPS "
+        f"on={report['qps_on']:.1f} QPS overhead={overhead*100:+.1f}% "
+        f"(budget {max_overhead*100:.0f}%)  bit_equal=True "
+        f"overlap_visible={overlap_ok}  spans={n_spans}"
+    )
+    print(f"[report] -> {out}")
+    if gate:
+        assert overhead <= max_overhead, (
+            f"obs-enabled overhead {overhead*100:.1f}% exceeds the "
+            f"{max_overhead*100:.0f}% budget"
+        )
+    return report
 
 
 def bench_sharded_updates(
@@ -418,12 +581,31 @@ if __name__ == "__main__":
                     help="benchmark the mutable sharded lifecycle "
                          "(add/remove/compact throughput + query QPS) "
                          "instead of the scheduler modes")
+    ap.add_argument("--obs", action="store_true",
+                    help="observability benchmark: obs-on vs obs-off QPS "
+                         "with bit-equality + trace/metrics artifacts")
+    ap.add_argument("--gate", action="store_true",
+                    help="with --obs: hard-fail if enabled overhead "
+                         "exceeds --max-overhead (CI)")
+    ap.add_argument("--max-overhead", type=float, default=0.05)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sharded-updates run with correctness "
                          "gates (CI)")
     ap.add_argument("--out", default="store_throughput.json")
     args = ap.parse_args()
-    if args.sharded_updates:
+    if args.obs:
+        bench_obs(
+            scale=args.scale,
+            dataset=args.dataset,
+            batch_size=args.batch_sizes[0],
+            engine=args.engines[0],
+            n_queries=args.n_queries,
+            max_overhead=args.max_overhead,
+            gate=args.gate,
+            out=args.out if args.out != "store_throughput.json"
+            else "store_obs.json",
+        )
+    elif args.sharded_updates:
         bench_sharded_updates(
             scale=args.scale,
             dataset=args.dataset,

@@ -307,27 +307,33 @@ def search_batch_fixed(
     B = p.block_size
     L, M = p.L, p.max_blocks
 
-    G = jnp.einsum("lkd,qd->qlk", index.proj_vecs, Q)  # (Qn, L, K)
+    # named_scope labels are HLO metadata only (numerics-invariant): they
+    # let a jax.profiler device trace line up with the host-side
+    # store.dispatch spans by stage name (repro.obs, DESIGN.md §10)
+    with jax.named_scope("dblsh.project"):
+        G = jnp.einsum("lkd,qd->qlk", index.proj_vecs, Q)  # (Qn, L, K)
 
     # -------- select once, at the final radius (windows nest: every
     # earlier step's block set is this set masked on bhw)
     r_last = jnp.asarray(r0, jnp.float32)
     for _ in range(steps - 1):
         r_last = r_last * p.c
-    blk, bhw = _select_blocks(index, G, p.w0 * r_last)  # (L, Qn, M) each
+    with jax.named_scope("dblsh.select"):
+        blk, bhw = _select_blocks(index, G, p.w0 * r_last)  # (L, Qn, M) each
 
-    # -------- flatten the table axis: one cross-table candidate pool
-    offs = (jnp.arange(L, dtype=jnp.int32) * nb)[:, None, None]
-    blk_flat = jnp.where(blk < nb, blk + offs, L * nb)  # (L, Qn, M)
-    blk_q = jnp.swapaxes(blk_flat, 0, 1).reshape(Qn, L * M)
-    ci = jnp.take(
-        index.ids_blocks.reshape(L * nb, B), blk_q, axis=0,
-        mode="fill", fill_value=n,
-    ).reshape(Qn, L * M * B)
+        # flatten the table axis: one cross-table candidate pool
+        offs = (jnp.arange(L, dtype=jnp.int32) * nb)[:, None, None]
+        blk_flat = jnp.where(blk < nb, blk + offs, L * nb)  # (L, Qn, M)
+        blk_q = jnp.swapaxes(blk_flat, 0, 1).reshape(Qn, L * M)
+        ci = jnp.take(
+            index.ids_blocks.reshape(L * nb, B), blk_q, axis=0,
+            mode="fill", fill_value=n,
+        ).reshape(Qn, L * M * B)
 
     # -------- verify once: exact distances + admission halfwidths for
     # every selected slot, whole schedule
-    d2, hw = _gather_pool(index, blk_q, G, Q, engine, exact, interpret)
+    with jax.named_scope("dblsh.verify"):
+        d2, hw = _gather_pool(index, blk_q, G, Q, engine, exact, interpret)
 
     bhw_q = jnp.swapaxes(bhw, 0, 1).reshape(Qn, L * M)  # (Qn, S)
 
@@ -357,10 +363,11 @@ def search_batch_fixed(
         # newly-admitted delta slice: slots whose window first reaches
         # them at this radius (hw = +inf slots never admit); finished
         # queries keep their result through the masked merge
-        delta = (hw <= half) & (hw > prev_half)
-        best_d, best_i = _masked_delta_merge(
-            best_d, best_i, delta, d2, ci, done, n, k
-        )
+        with jax.named_scope("dblsh.merge"):
+            delta = (hw <= half) & (hw > prev_half)
+            best_d, best_i = _masked_delta_merge(
+                best_d, best_i, delta, d2, ci, done, n, k
+            )
         if use_c2:
             done = done | (best_d[:, k - 1] <= jnp.square(p.c * r))
         if c1_thr is not None:

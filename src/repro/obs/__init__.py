@@ -1,0 +1,110 @@
+"""repro.obs — observability for the serving stack.
+
+Three pieces, one bundle (DESIGN.md §10):
+
+* ``trace``   — :class:`~repro.obs.trace.Tracer`: a bounded, typed span
+  recorder.  Every submitted request leaves a trace across submit →
+  quota admission → queue wait → batch assembly → device dispatch →
+  in-flight ring pending window → host sync → cache put, and every
+  collection lifecycle mutation (add/remove/compact/calibrate/snapshot,
+  local and sharded) records a span on the same timeline.  Exports
+  JSONL and Chrome/Perfetto ``trace_event`` JSON; ``jax.named_scope``
+  labels on the jitted search stages plus a
+  ``jax.profiler.TraceAnnotation`` around dispatch let a device profile
+  correlate with the host spans by name.
+
+* ``metrics`` — :class:`~repro.obs.metrics.MetricsRegistry`: counters,
+  gauges, and fixed-bucket histograms (latency, queue depth, batch
+  fill, ring occupancy, verified slots, termination steps, cache
+  hits/misses, quota rejections, per-tenant traffic) with Prometheus
+  text + JSON exporters.  ``StoreService.stats()`` /
+  ``tenant_stats()`` keep their exact keys but are *views over the
+  registry* — no more private stat structs.
+
+* ``slo``     — :class:`~repro.obs.slo.SLOWatch`: rolling p50/p99
+  latency objectives and a ground-truth-free recall drift proxy (the
+  observed termination-step distribution vs the calibrated
+  ``ScheduleTable`` prediction), emitting structured
+  :class:`~repro.obs.slo.BreachEvent` records.
+
+Overhead contract: tracing is **off by default** and every hot-path
+site guards on one attribute read; metrics are always on (plain dict
+arithmetic per request).  Enabled end-to-end, the stack stays within 5%
+of obs-off QPS with bit-equal results — gated by
+``benchmarks/store_throughput.py --obs``.
+
+Typical use::
+
+    from repro.store import Collection, StoreService
+    from repro.obs import Observability, SLOWatch
+
+    obs = Observability(trace=True)           # or trace=False: metrics only
+    svc = StoreService(batch_shapes=(1, 8), default_k=10, obs=obs)
+    svc.attach(col)
+    ... serve ...
+    print(svc.stats("docs"))                  # same keys, registry-backed
+    print(obs.registry.to_prometheus())       # /metrics scrape text
+    obs.tracer.export_perfetto("trace.json")  # load in ui.perfetto.dev
+
+    watch = SLOWatch(obs.registry, "docs", table=col.calibration,
+                     latency_p99_ms=5.0, drift_threshold=0.25)
+    for breach in watch.check():
+        print(breach.message)                 # the ROADMAP-5 drift signal
+"""
+
+from .metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    default_registry,
+    get_registry,
+)
+from .slo import BreachEvent, SLOWatch, expected_step_pmf
+from .trace import Span, Tracer, get_tracer
+
+__all__ = [
+    "BreachEvent",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "Observability",
+    "SLOWatch",
+    "Span",
+    "Tracer",
+    "default_registry",
+    "expected_step_pmf",
+    "get_registry",
+    "get_tracer",
+]
+
+
+class Observability:
+    """The bundle a service consumes: one registry + one tracer (+ an
+    optional SLO watch attached after construction).
+
+    Defaults keep surprises out: a *fresh* registry (no cross-service
+    bleed; pass ``repro.obs.default_registry`` to share a process-wide
+    scrape surface) and the *process-global* tracer (lifecycle spans
+    from collections land on the same timeline as the service's batch
+    spans).  ``trace=True`` enables that tracer; ``sample_rate`` thins
+    per-request spans (batch spans always record while enabled).
+    """
+
+    def __init__(self, *, registry: MetricsRegistry | None = None,
+                 tracer: Tracer | None = None, trace: bool = False,
+                 sample_rate: float | None = None):
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else get_tracer()
+        if trace:
+            self.tracer.enable(sample_rate)
+        self.slo: SLOWatch | None = None
+
+    def watch(self, collection: str, **kw) -> SLOWatch:
+        """Arm (and return) an :class:`SLOWatch` over ``collection`` on
+        this bundle's registry/tracer; stored on ``self.slo`` so a
+        service can drive ``maybe_check`` from its scheduler loop."""
+        kw.setdefault("tracer", self.tracer)
+        self.slo = SLOWatch(self.registry, collection, **kw)
+        return self.slo

@@ -36,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import DBLSHParams
+from ..obs.trace import get_tracer
 from ..store import CachedResult, Collection, QueryResultCache
 
 __all__ = ["Datastore", "build_datastore", "knn_probs", "RetrievalLM"]
@@ -101,13 +102,23 @@ class Datastore:
         ]
         entries = [self.cache.get(kk) for kk in keys]
         if all(e is not None for e in entries):
+            tracer = get_tracer()
+            if tracer.enabled:  # hot decode path: guard before the span
+                tracer.instant(
+                    "datastore.cache_hit", cat="cache", collection=col.name,
+                    rows=len(entries),
+                )
             return (
                 jnp.stack([jnp.asarray(e.dists) for e in entries]),
                 jnp.stack([jnp.asarray(e.ids) for e in entries]),
             )
-        dists, ids, stats = col.search(
-            queries, k=self.k, r0=r0, steps=steps, with_stats=True
-        )
+        with get_tracer().span(
+            "datastore.search", cat="serve", collection=col.name,
+            rows=int(rows.shape[0]),
+        ):
+            dists, ids, stats = col.search(
+                queries, k=self.k, r0=r0, steps=steps, with_stats=True
+            )
         d_np, i_np = np.asarray(dists), np.asarray(ids)
         steps_np = np.asarray(stats["radius_steps"])
         cands_np = np.asarray(stats["candidates"])

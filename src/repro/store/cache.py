@@ -74,6 +74,25 @@ class QueryResultCache:
         self._entries: OrderedDict[tuple, CachedResult] = OrderedDict()
         self.hits = 0
         self.misses = 0
+        self._m_hits = None    # registry counters, armed by bind_metrics
+        self._m_misses = None
+        self._m_size = None
+
+    def bind_metrics(self, registry) -> "QueryResultCache":
+        """Mirror hit/miss/size into a :class:`~repro.obs.metrics.
+        MetricsRegistry` (idempotent; the service binds its registry at
+        construction).  The plain ``hits``/``misses`` attributes remain
+        the source of truth for :meth:`stats`."""
+        self._m_hits = registry.counter(
+            "repro_store_result_cache_hits_total", "Result-cache key hits"
+        )
+        self._m_misses = registry.counter(
+            "repro_store_result_cache_misses_total", "Result-cache key misses"
+        )
+        self._m_size = registry.gauge(
+            "repro_store_result_cache_size", "Live result-cache entries"
+        )
+        return self
 
     # ------------------------------------------------------------------ keys
     def _qbytes(self, query: np.ndarray) -> bytes:
@@ -102,9 +121,13 @@ class QueryResultCache:
         entry = self._entries.get(key)
         if entry is None:
             self.misses += 1
+            if self._m_misses is not None:
+                self._m_misses.inc()
             return None
         self._entries.move_to_end(key)
         self.hits += 1
+        if self._m_hits is not None:
+            self._m_hits.inc()
         return entry
 
     def put(self, key: tuple, entry: CachedResult) -> None:
@@ -112,6 +135,8 @@ class QueryResultCache:
         self._entries.move_to_end(key)
         while len(self._entries) > self.capacity:
             self._entries.popitem(last=False)
+        if self._m_size is not None:
+            self._m_size.set(len(self._entries))
 
     def invalidate(self, collection: str | None = None) -> int:
         """Drop entries for one collection (or everything).  Only needed
@@ -120,11 +145,14 @@ class QueryResultCache:
         if collection is None:
             n = len(self._entries)
             self._entries.clear()
-            return n
-        drop = [k for k in self._entries if k[0] == collection]
-        for k in drop:
-            del self._entries[k]
-        return len(drop)
+        else:
+            drop = [k for k in self._entries if k[0] == collection]
+            for k in drop:
+                del self._entries[k]
+            n = len(drop)
+        if self._m_size is not None:
+            self._m_size.set(len(self._entries))
+        return n
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -136,5 +164,5 @@ class QueryResultCache:
             "capacity": self.capacity,
             "hits": self.hits,
             "misses": self.misses,
-            "hit_rate": self.hits / total if total else float("nan"),
+            "hit_rate": self.hits / total if total else 0.0,
         }

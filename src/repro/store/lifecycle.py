@@ -47,6 +47,7 @@ import numpy as np
 
 from ..checkpoint import Checkpointer
 from ..core import validate_engine
+from ..obs.trace import get_tracer
 from ..tune import planner as _planner
 from ..tune.planner import ScheduleTable
 from ..tune.policy import (
@@ -227,12 +228,21 @@ class CollectionLifecycle:
                     f"({payload.shape[0]}) != inserted points "
                     f"({points.shape[0]})"
                 )
-        ids = self._insert(points, payload)
-        self.stats.inserted += int(points.shape[0])
-        self.version = version_clock.next()
-        id_map = self._maybe_compact()
-        if id_map is not None:
-            ids = id_map[ids]
+        # lifecycle mutations record on the process-global trace timeline
+        # (TID_LIFECYCLE lane), so a serving-stack trace shows mutations
+        # interleaved with the batches they invalidate
+        with get_tracer().span(
+            "lifecycle.add", cat="lifecycle", collection=self.name,
+            placement=self.placement, rows=int(points.shape[0]),
+        ) as sp:
+            ids = self._insert(points, payload)
+            self.stats.inserted += int(points.shape[0])
+            self.version = version_clock.next()
+            sp.set(version=self.version)
+            id_map = self._maybe_compact()
+            if id_map is not None:
+                ids = id_map[ids]
+                sp.set(compacted=True)
         return ids
 
     def remove(self, ids) -> np.ndarray | None:
@@ -242,10 +252,18 @@ class CollectionLifecycle:
         when the policy fired — every outstanding id must be remapped
         through it — or None when no compaction happened."""
         ids = jnp.atleast_1d(jnp.asarray(ids, jnp.int32))
-        self._delete(ids)
-        self.stats.deleted += int(ids.shape[0])
-        self.version = version_clock.next()
-        return self._maybe_compact()
+        with get_tracer().span(
+            "lifecycle.remove", cat="lifecycle", collection=self.name,
+            placement=self.placement, rows=int(ids.shape[0]),
+        ) as sp:
+            self._delete(ids)
+            self.stats.deleted += int(ids.shape[0])
+            self.version = version_clock.next()
+            sp.set(version=self.version)
+            id_map = self._maybe_compact()
+            if id_map is not None:
+                sp.set(compacted=True)
+        return id_map
 
     # ------------------------------------------------------------- compaction
     def _occupancy(self) -> tuple[int, int]:
@@ -278,6 +296,14 @@ class CollectionLifecycle:
         K/L, which shifts the recall/cost curves) and re-fits it when
         the calibration queries were retained (``calibrate(...,
         retain=True)``)."""
+        with get_tracer().span(
+            "lifecycle.compact", cat="lifecycle", collection=self.name,
+            placement=self.placement, n_before=int(self.n),
+        ) as sp:
+            id_map = self._compact_traced(sp)
+        return id_map
+
+    def _compact_traced(self, sp) -> np.ndarray:
         self._key, kc = jax.random.split(self._key)
         id_map = np.asarray(self._compact_impl(kc))
         if self.payload is not None:
@@ -294,6 +320,7 @@ class CollectionLifecycle:
         self.built_n = self.n
         self.stats.compactions += 1
         self.version = version_clock.next()
+        sp.set(n_after=int(self.n), version=self.version)
         if self.calibration is not None or self._calib_queries is not None:
             self.calibration = None  # stale: K/L and block geometry changed
             if self._calib_queries is not None:
@@ -329,7 +356,11 @@ class CollectionLifecycle:
         do not ride in snapshots — only the fitted table does."""
         kw = dict(k=k, r0=r0, steps_max=steps_max, engine=engine,
                   interpret=interpret, measure_ms=measure_ms)
-        table = self._calibrate_impl(queries, **kw)
+        with get_tracer().span(
+            "lifecycle.calibrate", cat="lifecycle", collection=self.name,
+            placement=self.placement, steps_max=steps_max,
+        ):
+            table = self._calibrate_impl(queries, **kw)
         self.calibration = table
         if retain:
             self._calib_queries = np.asarray(queries, np.float32)
@@ -368,10 +399,19 @@ class CollectionLifecycle:
         Defaults to one past the latest step already in ``directory`` so
         successive snapshots never overwrite each other (Checkpointer
         keeps the most recent few and GCs the rest)."""
+        with get_tracer().span(
+            "lifecycle.snapshot", cat="lifecycle", collection=self.name,
+            placement=self.placement,
+        ) as sp:
+            step = self._snapshot_traced(directory, step, sp)
+        return step
+
+    def _snapshot_traced(self, directory, step, sp) -> int:
         ck = Checkpointer(directory)
         if step is None:
             latest = ck.latest_step()
             step = 0 if latest is None else latest + 1
+        sp.set(step=step)
         tree = dict(self._snapshot_arrays())
         tree["prng_key"] = np.asarray(jax.random.key_data(self._key))
         if self.payload is not None:

@@ -61,14 +61,19 @@ may use to pin engine resolution.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
 import time
 from collections import deque
 
+import jax
 import numpy as np
 
 from ..core.serve_search import PendingSearch, validate_engine
+from ..obs import Observability
+from ..obs.metrics import LATENCY_MS_BUCKETS, MetricsRegistry
+from ..obs.trace import TID_RING0, TID_SCHEDULER
 from ..tune import planner as _planner
 from ..tune.policy import RecallTarget, ResolvedPlan, resolve_policy
 from .cache import CachedResult, QueryResultCache
@@ -97,6 +102,7 @@ class QueryRequest:
                                       # collection search_policy >
                                       # service default_policy
     done: bool = False
+    traced: bool = False              # sampled into the span recorder
     cached: bool = False              # served from the query-result cache
     dists: np.ndarray | None = None   # (k,) ascending; +inf = unfilled slot
     ids: np.ndarray | None = None     # (k,) neighbor ids; index.n = sentinel
@@ -145,115 +151,222 @@ class _TokenBucket:
         return False
 
 
-class _TenantStats:
-    def __init__(self):
-        self.submitted = 0
-        self.served = 0
-        self.rejected = 0
-        self.cache_hits = 0
+class _WindowClock:
+    """First-submit / last-completion timestamps for a QPS window,
+    mirrored into registry gauges for export.  Min-merged on the start
+    edge: a cache hit may record a later first-submit while an earlier
+    batch still sits in the in-flight ring."""
+
+    def __init__(self, start_gauge, end_gauge, **labels):
+        self._g0 = start_gauge
+        self._g1 = end_gauge
+        self._labels = labels
         self.t_first: float | None = None
         self.t_last: float | None = None
 
-    def record_served(self, req: QueryRequest, now: float):
-        self.served += 1
-        if req.cached:
-            self.cache_hits += 1
-        if self.t_first is None or req.submitted < self.t_first:
-            self.t_first = req.submitted
+    def record(self, submitted: float, now: float) -> None:
+        if self.t_first is None or submitted < self.t_first:
+            self.t_first = submitted
+            self._g0.set(submitted, **self._labels)
         self.t_last = now
+        self._g1.set(now, **self._labels)
+
+    def span(self) -> float:
+        if self.t_first is None or self.t_last <= self.t_first:
+            return 0.0
+        return self.t_last - self.t_first
+
+
+class _TenantStats:
+    """Per-tenant admission/serving view over the metrics registry —
+    the mutators the scheduler calls, the snapshot ``tenant_stats()``
+    returns.  All state lives in registry series labeled by tenant."""
+
+    def __init__(self, registry: MetricsRegistry, tenant: str):
+        self.tenant = tenant
+        r = registry
+        self._submitted = r.counter(
+            "repro_store_tenant_submitted_total", "Requests admitted by tenant"
+        )
+        self._withdrawn = r.counter(
+            "repro_store_tenant_withdrawn_total",
+            "Admitted requests withdrawn by all-or-nothing serve()",
+        )
+        self._served = r.counter(
+            "repro_store_tenant_served_total", "Requests completed by tenant"
+        )
+        self._rejected = r.counter(
+            "repro_store_quota_rejections_total",
+            "submit() calls rejected by the tenant token bucket",
+        )
+        self._hits = r.counter(
+            "repro_store_tenant_cache_hits_total",
+            "Tenant requests served from the query-result cache",
+        )
+        self._window = _WindowClock(
+            r.gauge("repro_store_tenant_window_start_seconds",
+                    "Earliest submit timestamp in the tenant QPS window"),
+            r.gauge("repro_store_tenant_window_end_seconds",
+                    "Latest completion timestamp in the tenant QPS window"),
+            tenant=tenant,
+        )
+
+    def record_submitted(self):
+        self._submitted.inc(tenant=self.tenant)
+
+    def record_withdrawn(self):
+        self._withdrawn.inc(tenant=self.tenant)
+
+    def record_rejected(self):
+        self._rejected.inc(tenant=self.tenant)
+
+    def record_served(self, req: QueryRequest, now: float):
+        self._served.inc(tenant=self.tenant)
+        if req.cached:
+            self._hits.inc(tenant=self.tenant)
+        self._window.record(req.submitted, now)
 
     def snapshot(self) -> dict:
-        span = (
-            (self.t_last - self.t_first)
-            if (self.t_first is not None and self.t_last > self.t_first)
-            else 0.0
-        )
+        t = dict(tenant=self.tenant)
+        served = self._served.value(**t)
+        span = self._window.span()
         return {
-            "submitted": self.submitted,
-            "served": self.served,
-            "rejected": self.rejected,
-            "cache_hits": self.cache_hits,
-            "qps": self.served / span if span > 0 else float("nan"),
+            "submitted": int(
+                self._submitted.value(**t) - self._withdrawn.value(**t)
+            ),
+            "served": int(served),
+            "rejected": int(self._rejected.value(**t)),
+            "cache_hits": int(self._hits.value(**t)),
+            "qps": served / span if span > 0 else 0.0,
         }
 
 
 class _CollectionStats:
-    def __init__(self):
-        self.served = 0
-        self.batches = 0
-        self.batches_overlapped = 0
-        self.cache_hits = 0
-        self.padded_slots = 0
-        # bounded reservoir: percentiles over the most recent window, so
-        # a long-lived serving process doesn't grow memory per request
-        self.latencies_ms: deque[float] = deque(maxlen=8192)
-        self.radius_steps = 0
-        self.candidates = 0
-        # per-query termination-step histogram (step -> count): how much
-        # of the schedule each query actually ran, which is the work the
-        # planner/adaptive-termination saves.  Sharded collections feed
-        # the same counter — their radius_steps arrive pmax'd across
-        # shards from the collective merge.
-        self.step_hist: dict[int, int] = {}
-        self.t_first: float | None = None
-        self.t_last: float | None = None
+    """Per-collection serving view over the metrics registry.  Snapshot
+    keys are the stable ``svc.stats()`` contract; every number behind
+    them is a registry series labeled by collection, so the same
+    quantities export through Prometheus/JSON and feed the SLO watch.
+    Empty windows report ``0.0``, never NaN."""
+
+    def __init__(self, registry: MetricsRegistry, name: str):
+        self.name = name
+        r = registry
+        self._served = r.counter(
+            "repro_store_queries_served_total", "Queries completed"
+        )
+        self._batches = r.counter(
+            "repro_store_batches_total", "Device batches dispatched"
+        )
+        self._overlapped = r.counter(
+            "repro_store_batches_overlapped_total",
+            "Batches issued while another batch was already in flight",
+        )
+        self._cache_hits = r.counter(
+            "repro_store_cache_hits_total",
+            "Queries served from the result cache",
+        )
+        self._padded = r.counter(
+            "repro_store_padded_slots_total",
+            "Batch slots filled with padding, not real queries",
+        )
+        # bounded window reservoir inside the histogram: percentiles over
+        # the most recent 8192 queries, so a long-lived serving process
+        # doesn't grow memory per request
+        self._latency = r.histogram(
+            "repro_store_latency_ms", "End-to-end request latency (ms)",
+            buckets=LATENCY_MS_BUCKETS, window=8192,
+        )
+        self._fill = r.histogram(
+            "repro_store_batch_fill_ratio",
+            "Real rows / batch shape at dispatch",
+            buckets=(0.25, 0.5, 0.75, 1.0), window=1024,
+        )
+        self._radius_steps = r.counter(
+            "repro_store_radius_steps_total", "Schedule steps run"
+        )
+        self._candidates = r.counter(
+            "repro_store_candidates_total", "Verified candidate slots fetched"
+        )
+        # per-query termination-step counters (label step=j): how much of
+        # the schedule each query actually ran, which is the work the
+        # planner/adaptive-termination saves — and the SLO watch's drift
+        # signal.  Sharded collections feed the same counter — their
+        # radius_steps arrive pmax'd across shards from the merge.
+        self._steps_hist = r.counter(
+            "repro_store_termination_steps_total",
+            "Queries by the schedule step their termination fired at",
+        )
+        self._window = _WindowClock(
+            r.gauge("repro_store_window_start_seconds",
+                    "Earliest submit timestamp in the QPS window"),
+            r.gauge("repro_store_window_end_seconds",
+                    "Latest completion timestamp in the QPS window"),
+            collection=name,
+        )
+        self._steps_fam = self._steps_hist  # series() read in snapshot
 
     def _record_req(self, r: QueryRequest):
-        self.latencies_ms.append(r.latency_ms)
-        self.radius_steps += r.radius_steps
-        self.candidates += r.candidates
-        s = int(r.radius_steps)
-        self.step_hist[s] = self.step_hist.get(s, 0) + 1
+        self._latency.observe(r.latency_ms, collection=self.name)
+        self._radius_steps.inc(r.radius_steps, collection=self.name)
+        self._candidates.inc(r.candidates, collection=self.name)
+        self._steps_hist.inc(
+            collection=self.name, step=int(r.radius_steps)
+        )
 
     def record_batch(self, reqs, shape, now, *, overlapped: bool):
-        self.served += len(reqs)
-        self.batches += 1
-        self.batches_overlapped += int(overlapped)
-        self.padded_slots += shape - len(reqs)
-        first = min(r.submitted for r in reqs)
-        # min-merge: a cache hit may have recorded a later t_first while
-        # this batch sat in the in-flight ring
-        if self.t_first is None or first < self.t_first:
-            self.t_first = first
-        self.t_last = now
+        c = dict(collection=self.name)
+        self._served.inc(len(reqs), **c)
+        self._batches.inc(**c)
+        if overlapped:
+            self._overlapped.inc(**c)
+        self._padded.inc(shape - len(reqs), **c)
+        self._fill.observe(len(reqs) / shape, **c)
+        self._window.record(min(r.submitted for r in reqs), now)
         for r in reqs:
             self._record_req(r)
 
     def record_hit(self, req: QueryRequest, now: float):
-        self.served += 1
-        self.cache_hits += 1
-        if self.t_first is None or req.submitted < self.t_first:
-            self.t_first = req.submitted
-        self.t_last = now
+        c = dict(collection=self.name)
+        self._served.inc(**c)
+        self._cache_hits.inc(**c)
+        self._window.record(req.submitted, now)
         self._record_req(req)
 
+    def _step_hist(self) -> dict[int, int]:
+        out = {}
+        for labels, v in self._steps_fam.series():
+            if labels.get("collection") == self.name:
+                out[int(labels["step"])] = int(v)
+        return dict(sorted(out.items()))
+
     def snapshot(self) -> dict:
-        lat = np.asarray(self.latencies_ms, np.float64)
-        span = (
-            (self.t_last - self.t_first)
-            if (self.t_first is not None and self.t_last > self.t_first)
-            else 0.0
+        c = dict(collection=self.name)
+        served = self._served.value(**c)
+        batches = self._batches.value(**c)
+        hits = self._cache_hits.value(**c)
+        padded = self._padded.value(**c)
+        span = self._window.span()
+        p50, p90, p99 = (
+            float(x) for x in self._latency.percentile([50.0, 90.0, 99.0], **c)
         )
         return {
-            "queries": self.served,
-            "batches": self.batches,
-            "qps": self.served / span if span > 0 else float("nan"),
-            "latency_ms_p50": float(np.percentile(lat, 50)) if lat.size else float("nan"),
-            "latency_ms_p99": float(np.percentile(lat, 99)) if lat.size else float("nan"),
-            "mean_radius_steps": self.radius_steps / max(self.served, 1),
-            "mean_candidates": self.candidates / max(self.served, 1),
-            "termination_steps_hist": dict(sorted(self.step_hist.items())),
+            "queries": int(served),
+            "batches": int(batches),
+            "qps": served / span if span > 0 else 0.0,
+            "latency_ms_p50": p50,
+            "latency_ms_p90": p90,
+            "latency_ms_p99": p99,
+            "latency_ms_mean": self._latency.mean(**c),
+            "mean_radius_steps": self._radius_steps.value(**c) / max(served, 1),
+            "mean_candidates": self._candidates.value(**c) / max(served, 1),
+            "termination_steps_hist": self._step_hist(),
             "padding_efficiency": (
-                self.served / (self.served + self.padded_slots)
-                if self.served else float("nan")
+                served / (served + padded) if served else 0.0
             ),
-            "cache_hits": self.cache_hits,
-            "cache_hit_rate": (
-                self.cache_hits / self.served if self.served else float("nan")
-            ),
+            "cache_hits": int(hits),
+            "cache_hit_rate": hits / served if served else 0.0,
             "overlap_ratio": (
-                self.batches_overlapped / self.batches
-                if self.batches else float("nan")
+                self._overlapped.value(**c) / batches if batches else 0.0
             ),
         }
 
@@ -271,6 +384,9 @@ class _InFlight:
     overlapped: bool       # issued while another batch was in flight
     engine: str            # resolved engine the batch was dispatched with
     plan: ResolvedPlan     # resolved schedule the batch was dispatched with
+    seq: int = 0           # monotonic batch number (trace correlation)
+    tid: int = TID_RING0   # trace lane = TID_RING0 + ring slot at issue
+    t_issued: float = 0.0  # when the issue stage handed it to the device
 
 
 class StoreService:
@@ -293,6 +409,7 @@ class StoreService:
         cache_quantize_eps: float | None = None,
         default_policy=None,
         clock=time.monotonic,
+        obs: Observability | None = None,
     ):
         assert batch_shapes == tuple(sorted(batch_shapes)) and batch_shapes
         assert inflight_depth >= 0
@@ -307,6 +424,19 @@ class StoreService:
         # service-level query-planning default (repro.tune policy) — the
         # lowest-precedence rung of request > collection > service
         self.default_policy = default_policy
+        # observability bundle: metrics always on (the stats snapshots
+        # below are views over the registry), tracing opt-in via the
+        # bundle's tracer (`Observability(trace=True)`)
+        self.obs = obs if obs is not None else Observability()
+        self.registry = self.obs.registry
+        self.tracer = self.obs.tracer
+        self._g_queue = self.registry.gauge(
+            "repro_store_queue_depth", "Admitted, not-yet-issued requests"
+        )
+        self._g_ring = self.registry.gauge(
+            "repro_store_inflight_batches",
+            "Issued-but-not-completed batches in the overlap ring",
+        )
         if cache is not None:
             self.cache = cache
         else:
@@ -314,6 +444,8 @@ class StoreService:
                 QueryResultCache(cache_size, quantize_eps=cache_quantize_eps)
                 if cache_size > 0 else None
             )
+        if self.cache is not None:
+            self.cache.bind_metrics(self.registry)
         self._clock = clock
         self.collections: dict[str, object] = {}
         self.quotas: dict[str, TenantQuota] = {}
@@ -324,13 +456,23 @@ class StoreService:
         self._tenant_stats: dict[str, _TenantStats] = {}
         self._inflight: deque[_InFlight] = deque()
         self._uid = 0
+        self._batch_seq = 0
+
+    def _tstats(self, tenant: str) -> _TenantStats:
+        s = self._tenant_stats.get(tenant)
+        if s is None:
+            s = self._tenant_stats[tenant] = _TenantStats(self.registry, tenant)
+        return s
 
     # ----------------------------------------------------------------- admin
     def attach(self, collection) -> None:
         """Register a Collection (or any search-compatible object)."""
         self.collections[collection.name] = collection
         self._queues.setdefault(collection.name, {})
-        self._stats.setdefault(collection.name, _CollectionStats())
+        if collection.name not in self._stats:
+            self._stats[collection.name] = _CollectionStats(
+                self.registry, collection.name
+            )
 
     def create_collection(self, name: str, key, data, **kw):
         from .collection import Collection
@@ -425,13 +567,18 @@ class StoreService:
                 "default_k at construction (k is compiled into the dispatch)"
             )
         now = self._clock()
-        tstats = self._tenant_stats.setdefault(tenant, _TenantStats())
+        tstats = self._tstats(tenant)
         bucket = self._buckets.get(tenant)
         if bucket is None:
             bucket = _TokenBucket(self.quotas.get(tenant, TenantQuota()), now)
             self._buckets[tenant] = bucket
         if not bucket.try_take(now):
-            tstats.rejected += 1
+            tstats.record_rejected()
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    "quota.reject", cat="request", t=now,
+                    tenant=tenant, collection=collection,
+                )
             raise QuotaExceeded(
                 f"tenant {tenant!r} over quota "
                 f"(rate={bucket.quota.rate}/s, burst={bucket.quota.capacity})"
@@ -445,10 +592,12 @@ class StoreService:
             tenant=tenant,
             engine=engine,
             plan=plan,
+            traced=self.tracer.should_sample(),
         )
         self._uid += 1
         self._queues[collection].setdefault(tenant, deque()).append(req)
-        tstats.submitted += 1
+        tstats.record_submitted()
+        self._g_queue.set(self.pending())
         return req
 
     def pending(self) -> int:
@@ -488,6 +637,15 @@ class StoreService:
                     break
                 reqs = self._drain_wrr(name, cap)
                 drained += len(reqs)
+                if self.tracer.enabled:
+                    t_drain = self._clock()
+                    for r in reqs:
+                        if r.traced:
+                            self.tracer.add_span(
+                                "request.queue_wait", r.submitted, t_drain,
+                                cat="request", uid=r.uid, tenant=r.tenant,
+                                collection=name,
+                            )
                 misses = self._serve_cached(name, reqs)
                 if misses:
                     # one device program per (engine, plan): split mixed
@@ -499,8 +657,11 @@ class StoreService:
                         by_prog.setdefault((r.engine, r.plan), []).append(r)
                     for (eng, plan), group in by_prog.items():
                         self._issue(name, group, eng, plan)
+        self._g_queue.set(self.pending())
         if force:
             self._complete_all()
+        if self.obs.slo is not None:
+            self.obs.slo.maybe_check(self._clock())
         return drained
 
     def poll(self) -> int:
@@ -590,10 +751,13 @@ class StoreService:
             r.latency_ms = (now - r.submitted) * 1e3
             r.cached = True
             r.done = True
+            if r.traced:
+                self.tracer.instant(
+                    "request.cache_hit", cat="request", t=now,
+                    uid=r.uid, collection=name,
+                )
             self._stats[name].record_hit(r, now)
-            self._tenant_stats.setdefault(
-                r.tenant, _TenantStats()
-            ).record_served(r, now)
+            self._tstats(r.tenant).record_served(r, now)
         return misses
 
     # ------------------------------------------------- issue / complete stages
@@ -607,6 +771,8 @@ class StoreService:
             engine = self.resolve_engine(name)
         if plan is None:
             plan = self.resolve_plan(name)
+        traced = self.tracer.enabled
+        t_a0 = self._clock() if traced else 0.0
         m = len(reqs)
         shape = self._shape_for(m)
         d = reqs[0].query.shape[0]
@@ -622,15 +788,38 @@ class StoreService:
             {} if plan.termination is None
             else {"termination": plan.termination}
         )
-        dists, ids, stats = col.search(
-            Q, k=self.default_k, r0=plan.r0, steps=plan.steps,
-            engine=engine, with_stats=True, interpret=self.interpret,
-            rows=m,  # only m of `shape` rows are real queries
-            **term_kw,
+        seq = self._batch_seq
+        self._batch_seq += 1
+        # lane = ring slot this batch will occupy, so a Perfetto render
+        # shows overlap directly: batch N+1's issue span sits one lane up,
+        # inside batch N's pending window
+        tid = TID_RING0 + len(self._inflight)
+        t_i0 = self._clock() if traced else 0.0
+        dispatch_ctx = (
+            jax.profiler.TraceAnnotation(f"store.dispatch.{name}")
+            if traced else contextlib.nullcontext()
         )
-        payload = None
-        if getattr(col, "payload", None) is not None:
-            payload = col.get_payload(ids[:m])  # async gather, same stream
+        with dispatch_ctx:
+            dists, ids, stats = col.search(
+                Q, k=self.default_k, r0=plan.r0, steps=plan.steps,
+                engine=engine, with_stats=True, interpret=self.interpret,
+                rows=m,  # only m of `shape` rows are real queries
+                **term_kw,
+            )
+            payload = None
+            if getattr(col, "payload", None) is not None:
+                payload = col.get_payload(ids[:m])  # async gather, same stream
+        t_i1 = self._clock() if traced else 0.0
+        if traced:
+            self.tracer.add_span(
+                "batch.assemble", t_a0, t_i0, cat="batch", tid=TID_SCHEDULER,
+                seq=seq, collection=name, rows=m, shape=shape,
+            )
+            self.tracer.add_span(
+                "batch.issue", t_i0, t_i1, cat="batch", tid=tid,
+                seq=seq, collection=name, rows=m, shape=shape,
+                engine=engine, overlapped=len(self._inflight) > 0,
+            )
         batch = _InFlight(
             name=name,
             reqs=reqs,
@@ -641,8 +830,12 @@ class StoreService:
             overlapped=len(self._inflight) > 0,
             engine=engine,
             plan=plan,
+            seq=seq,
+            tid=tid,
+            t_issued=t_i1,
         )
         self._inflight.append(batch)
+        self._g_ring.set(len(self._inflight))
         while len(self._inflight) > self.inflight_depth:
             self._complete(self._inflight.popleft())
 
@@ -651,6 +844,8 @@ class StoreService:
         fill the tickets, and publish cache entries under the version the
         batch was issued at (a mutation mid-flight bumps the version, so
         those entries are born unreachable rather than stale)."""
+        traced = self.tracer.enabled
+        t_c0 = self._clock() if traced else 0.0
         dists, ids, stats = batch.pending.result()
         dists = np.asarray(dists)
         ids = np.asarray(ids)
@@ -658,6 +853,17 @@ class StoreService:
         cands = np.asarray(stats["candidates"])
         payloads = None if batch.payload is None else np.asarray(batch.payload)
         now = self._clock()
+        if traced:
+            # pending window: issue handoff -> this host sync (batch N+1's
+            # issue span lands inside it when the ring overlapped)
+            self.tracer.add_span(
+                "batch.pending", batch.t_issued, t_c0, cat="batch",
+                tid=batch.tid, seq=batch.seq, collection=batch.name,
+            )
+            self.tracer.add_span(
+                "batch.complete", t_c0, now, cat="batch", tid=batch.tid,
+                seq=batch.seq, collection=batch.name, rows=len(batch.reqs),
+            )
         for j, r in enumerate(batch.reqs):
             r.dists = dists[j, : r.k]
             r.ids = ids[j, : r.k]
@@ -681,12 +887,16 @@ class StoreService:
                         candidates=int(cands[j]),
                     ),
                 )
-            self._tenant_stats.setdefault(
-                r.tenant, _TenantStats()
-            ).record_served(r, now)
+            self._tstats(r.tenant).record_served(r, now)
+        if traced and self.cache is not None and batch.version is not None:
+            self.tracer.instant(
+                "cache.put", cat="cache", t=now, tid=batch.tid,
+                seq=batch.seq, collection=batch.name, entries=len(batch.reqs),
+            )
         self._stats[batch.name].record_batch(
             batch.reqs, batch.shape, now, overlapped=batch.overlapped
         )
+        self._g_ring.set(len(self._inflight))  # callers popleft before calling
 
     def _complete_all(self) -> None:
         while self._inflight:
@@ -714,7 +924,10 @@ class StoreService:
             for r in reqs:
                 if queue is not None and r in queue:
                     queue.remove(r)
-                    self._tenant_stats[tenant].submitted -= 1
+                    # counters are monotonic: withdrawal is its own counter,
+                    # and the snapshot reports submitted - withdrawn
+                    self._tenant_stats[tenant].record_withdrawn()
+            self._g_queue.set(self.pending())
             raise
         self.flush()
         return (
