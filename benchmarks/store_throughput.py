@@ -373,6 +373,12 @@ def bench_sharded_updates(
     query" cost.  Query QPS is measured through the StoreService before
     and after the churn (cache off: mutations would invalidate it anyway,
     and serving repeats would measure the wrong thing).
+
+    Gates: every compact must leave the fleet balanced (max/min live
+    ratio <= 1.25 — compaction rebalances, it does not just rebuild in
+    place); no deleted point may resurface; post-churn recall vs brute
+    force must hold; and a snapshot taken on pn shards must restore
+    elastically onto pn//2 with comparable recall.
     """
     if smoke:
         scale, n_queries, rounds = min(scale, 0.05), 32, 2
@@ -431,6 +437,16 @@ def bench_sharded_updates(
         col.live_count()
         compact_s.append(time.perf_counter() - t0)
 
+        # gate: compaction REBALANCES — survivors migrate toward the
+        # emptiest shards, so the post-compact fleet is near-uniform
+        # however lopsided the preceding adds were
+        cts = col.shard_counts()
+        cmax, cmin = int(cts.max()), int(cts.min())
+        assert cmax - cmin <= 1 or cmax <= 1.25 * max(cmin, 1), (
+            f"post-compact shard imbalance {cmax}/{cmin} exceeds 1.25x: "
+            f"{cts.tolist()}"
+        )
+
         # gate: no point deleted in ANY round resurfaces after the
         # rebuild (a stale id surviving a later re-base would show up
         # here, not just in this round's victims)
@@ -448,7 +464,8 @@ def bench_sharded_updates(
     qps_after = n_queries / _stream(svc, "fleet", stream, batch_size)
 
     # gate: post-churn recall vs brute force of the surviving point set,
-    # matched through the payload tags (ids re-base across sharded adds)
+    # matched through the payload tags (adds keep ids stable, but each
+    # compact renumbers — tags carry identity across the rebuilds)
     alive_tags = np.flatnonzero(alive)
     _, gt_i = brute_force(data[alive_tags], queries, k=k)
     d_f, i_f = map(np.asarray, col.search(queries, k=k, r0=0.5, steps=8))
@@ -461,6 +478,36 @@ def bench_sharded_updates(
     rec = float(np.mean(recs))
     assert rec > 0.5, f"post-churn sharded recall@{k} collapsed: {rec:.3f}"
     assert col.live_count() == int(alive.sum())
+
+    # elastic-restore smoke: snapshot on pn shards, restore on pn', and
+    # the migrated fleet must answer with comparable recall (identity
+    # through the payload tags — the migration renumbers global ids)
+    rec_elastic, pn_new, t_restore = float("nan"), 0, float("nan")
+    if pn > 1:
+        import tempfile
+
+        pn_new = pn // 2
+        tmpdir = tempfile.mkdtemp(prefix="sharded_bench_snap_")
+        step = col.snapshot(tmpdir)
+        mesh2 = jax.make_mesh((pn_new,), ("data",))
+        t0 = time.perf_counter()
+        col2 = ShardedCollection.restore(tmpdir, mesh=mesh2, step=step)
+        col2.live_count()
+        t_restore = time.perf_counter() - t0
+        assert col2.live_count() == int(alive.sum())
+        d_r, i_r = map(np.asarray, col2.search(queries, k=k, r0=0.5, steps=8))
+        tags_r = np.asarray(col2.get_payload(i_r)).astype(int)
+        recs_r = []
+        for qi in range(queries.shape[0]):
+            got = tags_r[qi][np.isfinite(d_r[qi])]
+            want = alive_tags[np.asarray(gt_i)[qi]]
+            recs_r.append(len(set(got.tolist()) & set(want.tolist())) / k)
+        rec_elastic = float(np.mean(recs_r))
+        assert rec_elastic > 0.5, (
+            f"recall collapsed across elastic restore {pn}->{pn_new}: "
+            f"{rec_elastic:.3f}"
+        )
+        del col2
 
     report = {
         "mode": "sharded_updates",
@@ -481,12 +528,16 @@ def bench_sharded_updates(
         "post_churn_recall_at_k": rec,
         "live_points": int(alive.sum()),
         "shard_counts": col.shard_counts().tolist(),
+        "elastic_restore_shards": pn_new,
+        "elastic_restore_wall_s": t_restore,
+        "elastic_restore_recall_at_k": rec_elastic,
     }
     print(
         f"[sharded-updates x{pn}] add={report['add_points_per_s']:.0f} pts/s "
         f"remove={report['remove_points_per_s']:.0f} pts/s "
         f"compact={report['compact_wall_s_mean']*1e3:.0f} ms  "
-        f"qps {qps_before:.1f} -> {qps_after:.1f}  recall@{k}={rec:.3f}"
+        f"qps {qps_before:.1f} -> {qps_after:.1f}  recall@{k}={rec:.3f}  "
+        f"elastic {pn}->{pn_new} recall={rec_elastic:.3f}"
     )
     with open(out, "w") as f:
         json.dump(report, f, indent=2)

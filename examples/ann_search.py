@@ -118,9 +118,9 @@ def main(scale: float = 0.25, dataset: str = "sift-s"):
     _, _, reqs_s = svc.serve("demo-sharded", queries, k=k, tenant="web")
     sv0 = sc.version
     sc.add(extra[:64], payload=np.arange(n_shard, n_shard + 64))
-    # NOTE: a sharded add re-bases existing global ids (DESIGN.md §9) —
-    # draw removal ids from a *fresh* search, or track identity via the
-    # payload
+    # ids are stable under sharded adds (strided id space, DESIGN.md
+    # §9): search results and add() handles stay valid until the next
+    # compact(), whose id map reports the one renumbering event
     d_f, i_f = sc.search(queries[:4], k=k, r0=0.5, steps=8)
     sc.remove(np.unique(np.asarray(i_f)[np.isfinite(np.asarray(d_f))])[:16])
     sc.compact()

@@ -32,9 +32,23 @@ from . import hashing
 from .index import DBLSHIndex, _str_order, build
 from .params import DBLSHParams
 
-__all__ = ["insert", "delete", "compact", "live_count", "live_ids_padded"]
+__all__ = ["grown_params", "insert", "delete", "compact", "live_count",
+           "live_ids_padded"]
 
 _INF = jnp.inf
+
+
+def grown_params(p: DBLSHParams, n_total: int) -> DBLSHParams:
+    """Params for an index grown in place to ``n_total`` points.
+
+    ``max_blocks`` may have been capped by the *build-time* block count
+    (:meth:`DBLSHParams.resolve` takes ``min(budget, ceil(n/B))``);
+    appended blocks lift that cap, so it is re-derived at the new n —
+    otherwise a small index could never probe past its original blocks
+    and inserted points would be unreachable.  An explicitly larger
+    setting is kept."""
+    grown = dataclasses.replace(p, n=n_total, max_blocks=0).resolve().max_blocks
+    return dataclasses.replace(p, n=n_total, max_blocks=max(p.max_blocks, grown))
 
 
 def insert(index: DBLSHIndex, new_points: jax.Array) -> DBLSHIndex:
@@ -75,7 +89,7 @@ def insert(index: DBLSHIndex, new_points: jax.Array) -> DBLSHIndex:
     # old sentinel ids (== n_old) must move to the new sentinel n_total
     old_ids = jnp.where(index.ids_blocks >= n_old, n_total, index.ids_blocks)
 
-    new_params = dataclasses.replace(p, n=n_total)
+    new_params = grown_params(p, n_total)
     fields = dict(
         proj_vecs=index.proj_vecs,
         proj_blocks=jnp.concatenate([index.proj_blocks, pb], axis=1),
@@ -102,9 +116,16 @@ def insert(index: DBLSHIndex, new_points: jax.Array) -> DBLSHIndex:
 
 
 def delete(index: DBLSHIndex, del_ids: jax.Array) -> DBLSHIndex:
-    """Tombstone ``del_ids`` (k,) int32; re-tighten affected MBRs."""
+    """Tombstone ``del_ids`` (k,); re-tighten affected MBRs.
+
+    Ids are int32 end to end (inputs are cast, matching search results
+    and compaction id maps).  Values outside ``[0, n)`` are no-ops: the
+    sentinel ``n`` only re-tombstones already-dead slots and anything
+    else matches nothing — the sharded wrappers rely on this for
+    SPMD-uniform deletes and for gids landing in stride headroom."""
     p = index.params
     n = index.n
+    del_ids = jnp.asarray(del_ids, jnp.int32)
     dead = jnp.isin(index.ids_blocks, del_ids)  # (L, nb, B)
     ids = jnp.where(dead, n, index.ids_blocks)
     proj = jnp.where(dead[..., None], _INF, index.proj_blocks)

@@ -129,7 +129,9 @@ class Collection(CollectionLifecycle):
     # -------------------------------------------------------- placement hooks
     def _insert(self, points, payload) -> np.ndarray:
         m = points.shape[0]
-        ids = np.arange(self.n, self.n + m, dtype=np.int64)
+        # int32 end to end: search results, id maps, and delete all speak
+        # int32, so returned ids round-trip without re-casting
+        ids = np.arange(self.n, self.n + m, dtype=np.int32)
         self.index = _updates.insert(self.index, points)
         if payload is not None:
             self.payload = jnp.concatenate([self.payload, payload], axis=0)

@@ -152,7 +152,9 @@ class CollectionLifecycle:
     ):
         if payload is not None:
             payload = jnp.asarray(payload)
-            assert payload.shape[0] == self.n, (payload.shape, self.n)
+            assert payload.shape[0] == self.id_space, (
+                payload.shape, self.id_space,
+            )
         self.name = name
         self.payload = payload
         self.policy = policy or CompactionPolicy()
@@ -209,6 +211,15 @@ class CollectionLifecycle:
 
     def live_count(self) -> int:
         raise NotImplementedError
+
+    @property
+    def id_space(self) -> int:
+        """Exclusive upper bound of the global id space — every id that
+        ``add`` or ``search`` returns is below it, and the payload buffer
+        has exactly this many rows.  Dense placements equal ``n``;
+        strided (sharded) placements leave per-shard insert headroom, so
+        it can exceed ``n``."""
+        return self.n
 
     # ----------------------------------------------------------------- writes
     def add(self, points, payload=None) -> np.ndarray:
@@ -311,10 +322,10 @@ class CollectionLifecycle:
             pay = np.asarray(self.payload)
             # scatter each surviving row to its new id: for the dense
             # local layout this is exactly the ascending gather
-            # pay[live_old]; sharded layouts may leave per-shard padding
-            # holes, which stay zero and are never returned (their ids
-            # are tombstoned).
-            buf = np.zeros((self.n,) + pay.shape[1:], pay.dtype)
+            # pay[live_old]; strided/sharded layouts leave per-shard
+            # padding and headroom holes, which stay zero and are never
+            # returned (their ids are tombstoned or unallocated).
+            buf = np.zeros((self.id_space,) + pay.shape[1:], pay.dtype)
             buf[id_map[live_old]] = pay[live_old]
             self.payload = jnp.asarray(buf)
         self.built_n = self.n
@@ -383,14 +394,19 @@ class CollectionLifecycle:
         self.stats.queries += int(Q.shape[0]) if rows is None else int(rows)
 
     def get_payload(self, ids):
-        """Payload rows for returned neighbor ids. Invalid slots (id ==
-        the sentinel) clamp to the *last* payload row — always mask on
-        the distances (+inf marks unfilled slots), not on ids."""
+        """Payload rows for returned neighbor ids.
+
+        Out-of-range ids clamp on *both* ends: the unfilled-slot sentinel
+        (``id_space``) clamps to the last payload row and a negative id
+        (e.g. -1 from a compaction id map marking a deleted point) clamps
+        to row 0 instead of silently wrapping to the tail.  Clamped rows
+        are arbitrary, not an error — always mask on the distances (+inf
+        marks unfilled slots) or on ``id_map >= 0``, not on ids."""
         if self.payload is None:
             raise ValueError(f"collection {self.name!r} has no payload")
         ids = jnp.asarray(ids)
         return jnp.take(
-            self.payload, jnp.minimum(ids, self.payload.shape[0] - 1), axis=0
+            self.payload, jnp.clip(ids, 0, self.payload.shape[0] - 1), axis=0
         )
 
     # ------------------------------------------------------------ persistence
@@ -466,7 +482,9 @@ def restore_collection(directory: str, step: int | None = None, *, mesh=None):
     Reads the manifest alone (no array loads) to dispatch: local
     snapshots return a :class:`~repro.store.collection.Collection`;
     sharded ones need ``mesh=`` and return a
-    :class:`~repro.store.router.ShardedCollection` placed on it."""
+    :class:`~repro.store.router.ShardedCollection` placed on it — on any
+    shard count: a mesh differing from the snapshot's triggers the
+    elastic migration path (see ``ShardedCollection.restore``)."""
     meta, step = Checkpointer(directory).read_meta(step)
     if meta.get("placement", "local") == "sharded":
         if mesh is None:

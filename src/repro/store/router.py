@@ -9,25 +9,30 @@ top-k merge with one all_gather into globally-id'd results.
 protocol as a local :class:`~repro.store.collection.Collection`
 (``store.lifecycle.CollectionLifecycle``): ``add`` routes inserts to the
 least-loaded shard, ``remove`` translates global ids per shard,
-``compact`` rebuilds every shard from its survivors with a gathered
-global id remap, and ``snapshot`` / ``restore(mesh=...)`` persist the
-whole state — so a :class:`~repro.store.service.StoreService` serves
-both placements through one admission queue, one cache-invalidation
-contract, and one policy/engine resolution path, with no read-only
-special cases.
+``compact`` rebalances survivors across shards and rebuilds with a
+gathered global id remap, and ``snapshot`` / ``restore(mesh=...)``
+persist the whole state — elastically: a snapshot taken on P shards
+restores onto any shard count — so a
+:class:`~repro.store.service.StoreService` serves both placements
+through one admission queue, one cache-invalidation contract, and one
+policy/engine resolution path, with no read-only special cases.
 
 :func:`open_collection` is the router decision point: it places data on
 a single device when it fits (``max_points_per_shard``), otherwise fans
 out over the mesh — the lifecycle options (``policy``, ``engine``,
 ``search_policy``) apply to whichever placement wins.
 
-**Id contract** (DESIGN.md §9): global ids are placement-relative,
-``gid = rank * n_local + local``.  That keeps the merge's disjoint-id
-invariant, but an ``add`` grows ``n_local`` and therefore *re-bases*
-every existing global id (``g -> (g // n_old) * n_new + g % n_old``);
-``compact`` renumbers like the local placement and returns the id map.
-Callers that hold ids across sharded mutations should re-derive them
-from search results or carry identity in the payload.
+**Id contract** (DESIGN.md §9): global ids are *strided*,
+``gid = rank * stride + local`` with per-shard headroom
+(``stride >= n_local``, sized by the compaction policy's growth ratio).
+That keeps the merge's disjoint-id invariant AND makes ids durable
+handles: an ``add`` grows ``n_local`` inside the stride, so every
+existing id survives untouched.  Only ``compact`` renumbers — when the
+policy fires, when called explicitly, or when an ``add`` would overflow
+the stride — and it returns the id map exactly like the local
+placement.  Elastic ``restore`` onto a different shard count also
+renumbers (the manifest's geometry is P-specific); derive fresh ids
+from searches after one.
 """
 
 from __future__ import annotations
@@ -47,6 +52,7 @@ from ..core.distributed import (
     build_sharded,
     compact_sharded,
     delete_sharded,
+    id_stride,
     insert_sharded,
     search_sharded,
     shard_live_counts,
@@ -81,7 +87,28 @@ class ShardedCollection(CollectionLifecycle):
         # tickets and cache keys reflect the engine that actually ran
         # (and a drained batch is never split over engines pointlessly)
         self.fixed_engine = "jnp"
+        # set transiently by _insert when a batch would overflow the id
+        # stride, so the forced compact re-strides with room for it
+        self._stride_reserve = 0
+        payload = kw.get("payload")
+        if payload is not None:
+            payload = jnp.asarray(payload)
+            if (payload.shape[0] == sharded.n_total
+                    and sharded.n_total != self.id_space):
+                # caller handed a dense one-row-per-point payload (the
+                # create() convention): expand it into the strided id
+                # layout — row for gid g at buffer index g, headroom
+                # holes zero
+                kw = dict(kw, payload=self._expand_payload(payload))
         super().__init__(name, **kw)
+
+    def _expand_payload(self, dense: jax.Array) -> jax.Array:
+        """Dense (n_total, ...) payload -> strided (id_space, ...)."""
+        s = self.sharded
+        row = np.arange(s.n_total)
+        gid = (row // s.n_local) * s.stride + row % s.n_local
+        buf = jnp.zeros((self.id_space,) + dense.shape[1:], dense.dtype)
+        return buf.at[jnp.asarray(gid)].set(dense)
 
     def _validate_default_engine(self, engine: str | None) -> str | None:
         if engine not in (None, "jnp"):
@@ -114,13 +141,26 @@ class ShardedCollection(CollectionLifecycle):
         if params is None:
             # size K/L for the per-shard n: each device answers locally.
             params = DBLSHParams.derive(n=n // pn, d=d, **derive_kw)
-        sharded = build_sharded(key, data, params, mesh, axis=axis)
+        # id stride with insert headroom: the growth trigger fires at
+        # growth_ratio * built n, so sizing the stride to the same ratio
+        # means a well-behaved policy compacts before the stride ever
+        # forces a renumber
+        pol = policy or CompactionPolicy()
+        stride = id_stride(n // pn, cls._headroom(pol))
+        sharded = build_sharded(key, data, params, mesh, axis=axis,
+                                stride=stride)
         # build consumes the caller's key whole (identical hash functions
         # on every shard); fold for the compaction key stream instead of
         # splitting so the built index matches a local build(key, ...)
         kc = jax.random.fold_in(key, 0x5EED)
         return cls(name, sharded, mesh, payload=payload, policy=policy,
                    key=kc, engine=engine, search_policy=search_policy)
+
+    @staticmethod
+    def _headroom(policy: CompactionPolicy) -> float:
+        """Stride headroom factor: track the growth trigger, floored so
+        a no-growth policy still leaves real insert room."""
+        return max(float(policy.growth_ratio), 1.25)
 
     # ---------------------------------------------------------------- surface
     @property
@@ -131,6 +171,10 @@ class ShardedCollection(CollectionLifecycle):
     def d(self) -> int:
         return self.sharded.index.data.shape[1]
 
+    @property
+    def id_space(self) -> int:
+        return self.sharded.id_space
+
     def live_count(self) -> int:
         return int(np.asarray(shard_live_counts(self.sharded, self.mesh)).sum())
 
@@ -140,38 +184,51 @@ class ShardedCollection(CollectionLifecycle):
 
     def _occupancy(self) -> tuple[int, int]:
         counts = self.shard_counts()  # one device read serves both
-        return int(counts.sum()), int(counts.max()) * int(counts.shape[0])
+        live = int(counts.sum())
+        pn = int(counts.shape[0])
+        # compaction rebalances, so the attainable n is the balanced
+        # ceiling — imbalance alone now justifies a rebuild when it
+        # leaves the fleet hollow enough to trip the policy
+        return live, pn * -(-live // pn)
 
     # -------------------------------------------------------- placement hooks
     def _insert(self, points, payload) -> np.ndarray:
+        m = int(points.shape[0])
+        if self.sharded.n_local + m > self.sharded.stride:
+            # the stride is the id contract's renumbering boundary: ids
+            # are stable until the headroom is exhausted, then one
+            # compact() renumbers (returning the id map through the
+            # normal add/remove channels) and re-strides with room for
+            # this batch
+            self._stride_reserve = m
+            try:
+                self.compact()
+            finally:
+                self._stride_reserve = 0
         counts = self.shard_counts()
         target = int(np.argmin(counts))  # least-loaded shard takes the batch
-        pn = int(counts.shape[0])
-        m = int(points.shape[0])
-        n_old = self.sharded.n_local
-        self.sharded = insert_sharded(
-            self.sharded, points, target, mesh=self.mesh
-        )
-        n_new = self.sharded.n_local
+        s = self.sharded
+        n_old = s.n_local
+        self.sharded = insert_sharded(s, points, target, mesh=self.mesh)
+        base = target * s.stride + n_old
         if self.payload is not None:
-            # re-base the global payload layout: rows live at
-            # rank * n_local + local, so growth re-slots every shard's
-            # block.  The new rows are replicated to every shard's tail
-            # (only the target's are live; dead copies are never
-            # returned — their ids are tombstoned).
-            tail = self.payload.shape[1:]
-            old = jnp.reshape(self.payload, (pn, n_old) + tail)
-            rep = jnp.broadcast_to(payload[None], (pn, m) + tail)
-            self.payload = jnp.concatenate([old, rep], axis=1).reshape(
-                (pn * n_new,) + tail
+            # ids are stable, so the strided payload layout is too: the
+            # batch lands in the target's headroom — one in-place tail
+            # write instead of re-slotting every shard's block
+            self.payload = self.payload.at[base:base + m].set(
+                jnp.asarray(payload)
             )
-        return target * n_new + n_old + np.arange(m, dtype=np.int64)
+        return base + np.arange(m, dtype=np.int32)
 
     def _delete(self, ids) -> None:
         self.sharded = delete_sharded(self.sharded, ids, mesh=self.mesh)
 
     def _compact_impl(self, key) -> np.ndarray:
-        self.sharded, id_map = compact_sharded(self.sharded, key, self.mesh)
+        self.sharded, id_map = compact_sharded(
+            self.sharded, key, self.mesh,
+            headroom=self._headroom(self.policy),
+            reserve=self._stride_reserve,
+        )
         return id_map
 
     def _calibrate_impl(self, queries, *, k, r0, steps_max, engine,
@@ -185,29 +242,35 @@ class ShardedCollection(CollectionLifecycle):
                 with_stats=with_stats,
             )
 
+        rows, gids = self._live_rows_and_ids()
         return _planner.calibrate(
             self.sharded.index, queries, k=kk, r0=r0, steps_max=steps_max,
             measure_ms=measure_ms, search_fn=search_fn,
-            oracle_rows=self._live_global_rows(),
+            oracle_rows=rows, oracle_ids=gids,
         )
 
-    def _live_global_rows(self) -> np.ndarray | None:
-        """Global data-row indices (== global ids) of live points, or
-        None when every row is live.  The oracle must exclude dead rows:
-        a sharded insert leaves P-1 tombstoned replicas of every point
-        at identical coordinates, and per-shard compaction padding adds
-        zero rows — none of them returnable."""
+    def _live_rows_and_ids(self) -> tuple[np.ndarray | None, np.ndarray | None]:
+        """Live points as ``(data_rows, gids)`` — the calibration oracle
+        needs both: brute force runs over data *rows* while the search
+        reports strided *gids*, and the two spaces coincide only in the
+        dense, fully-live case (then ``(None, None)``: use everything).
+        The oracle must exclude dead rows: a sharded insert leaves P-1
+        tombstoned replicas of every point at identical coordinates, and
+        compaction padding adds zero rows — none of them returnable."""
         s = self.sharded
         pn = int(self.mesh.shape[s.axis])
         ids0 = np.asarray(s.index.ids_blocks[0])  # (nb_global, B) local ids
         blocks = ids0.reshape(pn, -1)
-        rows = []
+        rows, gids = [], []
         for r in range(pn):
             loc = np.unique(blocks[r])
             loc = loc[loc < s.n_local]
             rows.append(loc + r * s.n_local)
-        live = np.concatenate(rows)
-        return None if live.size == s.n_total else live
+            gids.append(loc + r * s.stride)
+        rows = np.concatenate(rows)
+        if rows.size == s.n_total and s.stride == s.n_local:
+            return None, None
+        return rows, np.concatenate(gids)
 
     # ------------------------------------------------------------------ reads
     def search(
@@ -248,9 +311,9 @@ class ShardedCollection(CollectionLifecycle):
     def _snapshot_arrays(self) -> dict:
         # np.asarray gathers each sharded array to one host copy — the
         # manifest stores the *global* layout plus the shard geometry
-        # needed to re-place it (restore requires an equal shard count:
-        # the per-shard STR packing and the rank-offset id math are both
-        # baked at this P).
+        # (shards / n_local / stride) needed either to re-place it
+        # bit-for-bit on an equal mesh or to migrate it onto a different
+        # shard count (elastic restore).
         return {
             f: np.asarray(getattr(self.sharded.index, f))
             for f in _INDEX_ARRAY_FIELDS
@@ -263,15 +326,27 @@ class ShardedCollection(CollectionLifecycle):
             "shards": int(self.mesh.shape[self.sharded.axis]),
             "n_local": self.sharded.n_local,
             "n_total": self.sharded.n_total,
+            "stride": self.sharded.stride,
         }
 
     @classmethod
     def restore(
         cls, directory: str, *, mesh, step: int | None = None,
+        migrate: bool | None = None,
     ) -> "ShardedCollection":
-        """Re-place a sharded snapshot onto ``mesh`` (same shard count as
-        at snapshot time — elastic re-sharding means a rebuild, because
-        the per-shard STR layout and rank-offset ids are P-specific)."""
+        """Re-place a sharded snapshot onto ``mesh``.
+
+        On an equal shard count the persisted per-shard layout is
+        device_put back verbatim (bit-identical restore).  Onto a
+        *different* shard count the fleet is elastic: live rows are
+        extracted from the manifest, re-partitioned balanced over the
+        new mesh (the same balanced-contiguous split compaction uses),
+        and rebuilt per shard — which renumbers global ids and
+        invalidates any fitted calibration (derive fresh ids from
+        searches; re-calibrate for planning).  ``migrate=True`` forces
+        the migration path even at equal shard counts (a rebalancing
+        restore); ``migrate=False`` demands the bit-identical path and
+        raises on a shard-count mismatch."""
         tree, meta = Checkpointer(directory).restore(step)
         if meta.get("placement", "local") != "sharded":
             raise ValueError(
@@ -280,11 +355,16 @@ class ShardedCollection(CollectionLifecycle):
             )
         axis = meta["axis"]
         pn = int(meta["shards"])
+        if migrate is None:
+            migrate = int(mesh.shape[axis]) != pn
+        if migrate:
+            return cls._restore_migrated(tree, meta, mesh)
         if mesh.shape[axis] != pn:
             raise ValueError(
                 f"snapshot was taken on {pn} shards over {axis!r} but the "
-                f"mesh has {mesh.shape[axis]}: the per-shard layout cannot "
-                "be re-sharded — rebuild with ShardedCollection.create"
+                f"mesh has {mesh.shape[axis]} and migrate=False: the "
+                "per-shard layout is P-specific — allow migration or "
+                "restore onto an equal mesh"
             )
         params = DBLSHParams(**meta["params"])
         specs = _index_specs(axis, params)
@@ -299,9 +379,82 @@ class ShardedCollection(CollectionLifecycle):
         sharded = ShardedDBLSH(
             index=index, axis=axis, n_total=int(meta["n_total"]),
             n_local=int(meta["n_local"]),
+            # pre-stride snapshots carry dense ids
+            stride=int(meta.get("stride", meta["n_local"])),
         )
         return cls(meta["name"], sharded, mesh,
                    **cls._common_restore_kwargs(tree, meta))
+
+    @classmethod
+    def _restore_migrated(cls, tree, meta, mesh) -> "ShardedCollection":
+        """Elastic restore: manifest rows -> balanced rebuild on ``mesh``.
+
+        Survivor extraction and re-partitioning run on host from the
+        gathered manifest (restore already has the host copy); the
+        balanced split is the one :func:`compact_sharded` uses, so the
+        post-restore fleet meets the same imbalance bound (counts differ
+        by at most 1).  Global ids are renumbered; payload rows follow
+        their points through the old->new gid map."""
+        axis = meta["axis"]
+        pn_old = int(meta["shards"])
+        n_local = int(meta["n_local"])
+        stride_old = int(meta.get("stride", n_local))
+        pn = int(mesh.shape[axis])
+        p_old = DBLSHParams(**meta["params"])
+        # live (local id, data row, gid) per old shard, from table 0 of
+        # the persisted blocks — ascending gid order, like compaction
+        blocks = np.asarray(tree["ids_blocks"])[0].reshape(pn_old, -1)
+        data = np.asarray(tree["data"]).reshape(pn_old, n_local, -1)
+        rows, old_gids = [], []
+        for r in range(pn_old):
+            loc = np.unique(blocks[r])
+            loc = loc[loc < n_local]
+            rows.append(data[r, loc])
+            old_gids.append(loc + r * stride_old)
+        surv = np.concatenate(rows)
+        old_gids = np.concatenate(old_gids)
+        total = int(surv.shape[0])
+        if total == 0:
+            raise ValueError("restore: snapshot holds no live points")
+        base, rem = divmod(total, pn)
+        targets = base + (np.arange(pn) < rem)
+        n_keep = int(targets.max())
+        kw = cls._common_restore_kwargs(tree, meta)
+        stride = id_stride(n_keep, cls._headroom(kw["policy"]))
+        dst_off = np.concatenate([[0], np.cumsum(targets)])
+        padded = np.zeros((pn * n_keep, surv.shape[1]), np.float32)
+        new_gids = np.empty(total, np.int64)
+        for r in range(pn):
+            seg = surv[dst_off[r]:dst_off[r + 1]]
+            padded[r * n_keep:r * n_keep + seg.shape[0]] = seg
+            new_gids[dst_off[r]:dst_off[r + 1]] = (
+                r * stride + np.arange(seg.shape[0])
+            )
+        params = DBLSHParams.derive(
+            n=n_keep, d=p_old.d, c=p_old.c, w0=p_old.w0, t=p_old.t,
+            k=p_old.k, block_size=p_old.block_size,
+            inline_vectors=p_old.inline_vectors,
+        )
+        kw["key"], kb = jax.random.split(kw["key"])
+        sharded = build_sharded(kb, jnp.asarray(padded), params, mesh,
+                                axis=axis, stride=stride)
+        pad_gids = np.concatenate([
+            r * stride + np.arange(int(targets[r]), n_keep) for r in range(pn)
+        ])
+        if pad_gids.size:
+            sharded = delete_sharded(
+                sharded, jnp.asarray(pad_gids, jnp.int32), mesh=mesh
+            )
+        if kw["payload"] is not None:
+            pay = np.asarray(kw["payload"])
+            buf = np.zeros((pn * stride,) + pay.shape[1:], pay.dtype)
+            buf[new_gids] = pay[old_gids]
+            kw["payload"] = jnp.asarray(buf)
+        # the geometry changed: the old growth baseline and fitted
+        # schedule table describe an index that no longer exists
+        kw["built_n"] = pn * n_keep
+        kw["calibration"] = None
+        return cls(meta["name"], sharded, mesh, **kw)
 
 
 def open_collection(
@@ -329,7 +482,9 @@ def open_collection(
     verification is pinned to jnp) — it is validated, never silently
     dropped.
     """
-    n = np.asarray(data).shape[0]
+    # np.shape reads the shape attribute without materializing: routing
+    # must never gather a device-sharded array to host just to count it
+    n = np.shape(data)[0]
     if mesh is not None and mesh.shape[axis] > 1 and n > max_points_per_shard:
         return ShardedCollection.create(
             name, key, data, mesh, axis=axis, payload=payload, policy=policy,

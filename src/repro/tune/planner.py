@@ -123,6 +123,7 @@ def calibrate(
     repeats: int = 2,
     search_fn=None,
     oracle_rows=None,
+    oracle_ids=None,
 ) -> ScheduleTable:
     """Probe ``queries`` (m, d) against ``index`` and fit the table.
 
@@ -139,12 +140,15 @@ def calibrate(
     the params and the (global) data for the brute-force oracle.
 
     ``oracle_rows`` restricts the brute-force ground truth to the rows
-    the search can actually return (their original row ids are reported,
-    so recall overlap stays in the search's id space).  Without it a
-    mutated index under-measures: tombstoned rows — including the
-    per-shard dead replicas a sharded insert leaves behind at identical
-    coordinates — would occupy ground-truth top-k slots no search result
-    can ever match.
+    the search can actually return.  Without it a mutated index
+    under-measures: tombstoned rows — including the per-shard dead
+    replicas a sharded insert leaves behind at identical coordinates —
+    would occupy ground-truth top-k slots no search result can ever
+    match.  ``oracle_ids`` (same length) supplies the id each oracle row
+    is *returned as* when the search's id space is not the data-row
+    space — e.g. strided sharded gids — so recall overlap compares like
+    with like; it defaults to ``oracle_rows`` (dense layouts, where row
+    index == id).
     """
     p = index.params
     k = k or p.k
@@ -161,7 +165,11 @@ def calibrate(
     else:
         rows = jnp.asarray(np.asarray(oracle_rows), jnp.int32)
         gt_d, gt_i = brute_force(jnp.take(index.data, rows, axis=0), Q, k=k)
-        gt_i = jnp.take(rows, gt_i)
+        ids_src = (
+            rows if oracle_ids is None
+            else jnp.asarray(np.asarray(oracle_ids), jnp.int32)
+        )
+        gt_i = jnp.take(ids_src, gt_i)
     if r0 is None:
         r0 = derive_r0(np.asarray(gt_d)[:, 0], p.c)
 

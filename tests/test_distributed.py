@@ -92,8 +92,13 @@ oc = open_collection("routed", kb, data, mesh=mesh, max_points_per_shard=1024,
 assert isinstance(oc, ShardedCollection) and oc.policy.growth_ratio == 7.7
 del oc
 
-# add: routed to the least-loaded shard, payload rides the id re-base
+# strided id space: stride carries insert headroom over n_local
+assert col.sharded.stride == 1024 and col.id_space == 8192
+
+# add: routed to the least-loaded shard; ids land in the target's
+# stride headroom and are STABLE — later adds never re-base them
 ids1 = col.add(extra[:40], payload=np.arange(4096, 4136))
+assert ids1.dtype == np.int32
 c1 = col.shard_counts()
 assert c1.sum() == 4136 and c1.max() - c1.min() == 40, c1
 q = extra[7:8]
@@ -104,6 +109,22 @@ assert int(i[0, 0]) == int(ids1[7])  # returned ids are current global ids
 ids2 = col.add(extra[40:80], payload=np.arange(4136, 4176))
 c2 = col.shard_counts()  # second batch lands on a different shard
 assert c2.sum() == 4176 and c2.max() - c2.min() == 40, c2
+assert len(set(ids1.tolist()) & set(ids2.tolist())) == 0
+
+# id stability across >= 3 subsequent adds: the held handles from the
+# first batch keep resolving with NO remap (stats.compactions == 0)
+ids3 = col.add(extra[80:100], payload=np.arange(4176, 4196))
+d, i = col.search(q, k=1, r0=0.25, steps=8, exact=True)
+assert int(i[0, 0]) == int(ids1[7])  # three adds later, same handle
+assert col.stats.compactions == 0
+np.testing.assert_array_equal(
+    np.asarray(col.get_payload(ids1[None]))[0], np.arange(4096, 4136))
+# held ids remove cleanly: tombstone the third batch by its handles
+col.remove(ids3)
+d_h, i_h = map(np.asarray, col.search(extra[80:100], k=5, r0=0.5, steps=8))
+leaked = set(ids3.tolist()) & set(
+    i_h[np.isfinite(d_h)].reshape(-1).tolist())
+assert not leaked, leaked
 
 # remove by current global ids: tombstoned ids never return
 d_s, i_s = map(np.asarray, col.search(queries, k=10, r0=0.5, steps=8))
@@ -116,12 +137,18 @@ leaked = set(victims.tolist()) & set(
     i_s2[np.isfinite(d_s2)].reshape(-1).tolist())
 assert not leaked, leaked
 
-# compact: per-shard rebuild + gathered global id remap; id-set parity
-# vs brute force on the post-mutation point set, matched via payload
-# tags (the stable identity across sharded id re-bases)
+# compact: REBALANCING rebuild + gathered global id remap over the old
+# strided space; id-set parity vs brute force on the post-mutation
+# point set, matched via payload tags (compaction is the one event
+# that renumbers, so tags carry identity across it)
+space_old = col.id_space
 id_map = col.compact()
 assert col.stats.compactions == 1
+assert id_map.shape == (space_old,)
 assert int((id_map >= 0).sum()) == col.live_count() == 4176 - len(victims)
+cb = col.shard_counts()  # survivors migrated toward the emptiest shards
+assert cb.max() - cb.min() <= 1, cb
+assert cb.max() <= 1.25 * max(cb.min(), 1), cb
 all_pts = np.concatenate([data, extra[:80]])
 alive = np.ones(4176, bool)
 alive[victim_tags.astype(int)] = False
@@ -154,17 +181,37 @@ d_b, i_b = map(np.asarray, col2.search(queries, k=10, r0=0.5, steps=8))
 np.testing.assert_array_equal(i_a, i_b)
 np.testing.assert_array_equal(np.asarray(col.payload), np.asarray(col2.payload))
 
-# a snapshot cannot silently re-shard: the per-shard layout is P-baked
+# elastic restore: the same snapshot placed on HALF the shards — live
+# rows re-partition balanced over the new fleet, ids renumber, fitted
+# calibration drops, and identity carries through the payload tags
+mesh4 = jax.make_mesh((4,), ("data",))
+col4 = restore_collection(tmp, step, mesh=mesh4)
+n_live = col.live_count()
+assert col4.live_count() == n_live and col4.n == n_live
+assert col4.calibration is None and col4.version > col.version
+c4 = col4.shard_counts()
+assert c4.shape == (4,) and c4.max() - c4.min() <= 1, c4
+d_e, i_e = map(np.asarray, col4.search(queries, k=10, r0=0.5, steps=8))
+tags_e = np.asarray(col4.get_payload(i_e)).astype(int)
+recs_e = []
+for qi in range(queries.shape[0]):
+    f = np.isfinite(d_e[qi])
+    want_tags = alive_tags[gi[qi]]
+    recs_e.append(
+        len(set(tags_e[qi][f].tolist()) & set(want_tags.tolist())) / 10)
+rec_e = float(np.mean(recs_e))
+assert rec_e > 0.6, rec_e
+del col4
+# migrate=False demands the bit-identical path: shard-count change raises
 try:
-    restore_collection(tmp, step, mesh=jax.make_mesh((4, 2), ("data", "model")))
-    raise SystemExit("re-sharding restore should have failed")
+    ShardedCollection.restore(tmp, mesh=mesh4, step=step, migrate=False)
+    raise SystemExit("migrate=False re-shard restore should have failed")
 except ValueError:
     pass
 
-# imbalance-induced hollowness must not start an auto-compaction storm:
-# per-shard padding under the fleet max is structural (points never
-# migrate), so once compacted the policy goes quiet even when the live
-# ratio sits under min_live_ratio — and a second rebuild cannot shrink n
+# rebalancing compaction keeps the fleet dense: an imbalance-inducing
+# add is spread back over all shards by the next compact, so the policy
+# goes quiet (live == n) and a second rebuild changes nothing
 small = ShardedCollection.create(
     "storm", kb, data[:1024], mesh,
     params=DBLSHParams.derive(n=128, d=24, c=1.5, t=16, k=5),
@@ -172,7 +219,9 @@ small = ShardedCollection.create(
 small.add(extra[:120])  # one shard takes the whole batch -> imbalance
 small.compact()
 n_after = small.n
-assert small.live_count() < 0.95 * small.n  # hollow by imbalance alone
+assert small.live_count() == small.n == 1144  # rebalanced: no hollowness
+cs = small.shard_counts()
+assert cs.max() - cs.min() <= 1, cs
 assert not small.should_compact()
 small.compact()
 assert small.n == n_after
@@ -276,7 +325,7 @@ def _run(script, tag):
     env.pop("XLA_FLAGS", None)
     proc = subprocess.run(
         [sys.executable, "-c", script], env=env, capture_output=True, text=True,
-        timeout=520,
+        timeout=600,
     )
     assert tag in proc.stdout, f"stdout:\n{proc.stdout[-2000:]}\nstderr:\n{proc.stderr[-4000:]}"
 
@@ -289,9 +338,11 @@ def test_sharded_ann_8dev():
 @pytest.mark.slow
 def test_sharded_lifecycle_8dev():
     """The mutable sharded lifecycle at real shard count: least-loaded
-    insert routing, global-id delete translation, per-shard compaction
-    with the gathered remap, payload integrity across id re-bases,
-    snapshot/restore, and service cache invalidation."""
+    insert routing into stride headroom (ids stable across adds),
+    global-id delete translation, rebalancing compaction with the
+    gathered strided remap, payload integrity across the one renumber,
+    snapshot/restore plus elastic re-shard onto a smaller mesh, and
+    service cache invalidation."""
     _run(SCRIPT_SHARDED_LIFECYCLE, "SHARDED_LIFECYCLE_OK")
 
 

@@ -1,10 +1,11 @@
 """Sharded collection lifecycle: the unified mutable protocol.
 
 Tier-1 coverage runs on a 1-shard mesh (CPU hosts expose one device);
-the protocol — insert routing, global-id delete translation, per-shard
-compaction with a gathered id remap, payload ride-along, snapshot /
-restore, version-clock cache invalidation — is identical at any shard
-count, and the P=8 routing/balance/re-basing cases live in
+the protocol — insert routing, strided stable ids, global-id delete
+translation, rebalancing compaction with a gathered id remap, payload
+ride-along, snapshot / restore (including the elastic migration path),
+version-clock cache invalidation — is identical at any shard count, and
+the P=8 routing/balance/migration cases live in
 ``tests/test_distributed.py::test_sharded_lifecycle_8dev``.
 
 The engine matrix (``REPRO_STORE_TEST_ENGINES``) drives the service
@@ -127,6 +128,7 @@ def test_sharded_update_roundtrip_vs_brute_force(setup, mesh, seed):
     ids = col.add(extra[:m], payload=np.arange(800, 800 + m))
     n_tot = 800 + m
     assert col.live_count() == n_tot
+    assert ids.dtype == np.int32  # int32 end to end
 
     n_del = int(rng.integers(10, 120))
     del_ids = rng.choice(n_tot, size=n_del, replace=False).astype(np.int32)
@@ -152,26 +154,145 @@ def test_sharded_update_roundtrip_vs_brute_force(setup, mesh, seed):
         np.sort(id_map[id_map >= 0]), np.arange(n_live)
     )
 
-    # payload followed the remap: survivors keep their tags in old-id order
+    # payload followed the remap: survivors keep their tags in old-id
+    # order (the strided buffer's tail is headroom — zeros, unallocated)
     full = np.concatenate([data, extra[:m]])
     live_mask = np.ones(n_tot, bool)
     live_mask[del_tags] = False  # P=1: tag == original id == global id
     np.testing.assert_array_equal(
-        np.asarray(col.payload), np.flatnonzero(live_mask)
+        np.asarray(col.payload)[:n_live], np.flatnonzero(live_mask)
     )
+    assert np.all(np.asarray(col.payload)[n_live:] == 0)
 
-    # bit-exact fresh-build parity on one shard: same survivors, same key
+    # bit-exact fresh-build parity on one shard: same survivors, same
+    # key, same id stride (the stride sets the merge sentinel)
     survivors = full[live_mask]
     params = DBLSHParams.derive(
         n=n_live, d=16, c=1.5, w0=3.6, t=32, k=10
     )
-    fresh = build_sharded(key_pred, jnp.asarray(survivors), params, mesh)
+    fresh = build_sharded(key_pred, jnp.asarray(survivors), params, mesh,
+                          stride=col.sharded.stride)
     d_c, i_c = col.search(queries, k=10, r0=0.5, steps=8)
     d_f, i_f = search_sharded(
         fresh, jnp.asarray(queries), k=10, r0=0.5, steps=8, mesh=mesh
     )
     np.testing.assert_array_equal(np.asarray(i_c), np.asarray(i_f))
     np.testing.assert_array_equal(np.asarray(d_c), np.asarray(d_f))
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(deadline=None, max_examples=3)
+def test_sharded_ids_stable_across_adds(setup, mesh, seed):
+    """Property (the PR's id contract): ids returned by ``add`` stay
+    valid — exact-searchable and removable — across at least three
+    subsequent adds, with no remap and no compaction.  The stride
+    headroom absorbs the growth, so held ids are durable handles."""
+    data, extra, queries, kb = setup
+    rng = np.random.default_rng(seed)
+    col = _make("stable", kb, data, mesh, payload=np.arange(800))
+    assert col.sharded.stride >= 2 * col.sharded.n_local
+
+    held = col.add(extra[:20], payload=np.arange(800, 820))
+    held = np.asarray(held).copy()
+    off = 20
+    for _ in range(3):  # >= 3 subsequent adds
+        m = int(rng.integers(8, 40))
+        col.add(extra[off:off + m], payload=np.arange(800 + off, 800 + off + m))
+        off += m
+    assert col.stats.compactions == 0  # no renumbering happened
+
+    # every held id still resolves: exact search returns it verbatim
+    probe = rng.choice(20, size=5, replace=False)
+    d, i = col.search(extra[probe], k=1, r0=0.25, steps=8, exact=True)
+    assert np.all(np.asarray(d)[:, 0] < 1e-3)
+    np.testing.assert_array_equal(np.asarray(i)[:, 0], held[probe])
+    np.testing.assert_array_equal(
+        np.asarray(col.get_payload(held[None]))[0], 800 + np.arange(20)
+    )
+
+    # and still removes: the tombstoned handles never return
+    col.remove(held)
+    d2, i2 = col.search(extra[:20], k=5, r0=0.5, steps=8)
+    fin = np.isfinite(np.asarray(d2))
+    leaked = set(held.tolist()) & set(
+        np.asarray(i2)[fin].reshape(-1).tolist()
+    )
+    assert not leaked, leaked
+
+
+def test_sharded_stride_exhaustion_forces_renumber(setup, mesh):
+    """An add that would overflow the id stride triggers exactly one
+    compact (the sanctioned renumbering event) and then lands in the
+    fresh headroom — even with auto-compaction off."""
+    data, extra, queries, kb = setup
+    col = _make("ovf", kb, data[:40], mesh, payload=np.arange(40))
+    stride0 = col.sharded.stride
+    assert stride0 == 80  # headroom 2.0 over 40
+    ids = col.add(extra[:50], payload=np.arange(40, 90))  # 90 > 80
+    assert col.stats.compactions == 1
+    assert col.sharded.stride >= 90 and col.live_count() == 90
+    # the batch's ids are valid post-renumber handles
+    d, i = col.search(extra[3:4], k=1, r0=0.25, steps=8, exact=True)
+    assert float(d[0, 0]) < 1e-3 and int(i[0, 0]) == int(ids[3])
+    assert int(np.asarray(col.get_payload(i))[0, 0]) == 43
+
+
+def test_sharded_restore_migrated_rebalances(setup, mesh, tmp_path):
+    """The elastic restore path (forced here with ``migrate=True``; a
+    genuine P' != P runs in the 8-device script): manifest rows are
+    re-partitioned and rebuilt, ids renumber, payload follows its
+    points, calibration is dropped as stale."""
+    data, extra, queries, kb = setup
+    col = _make("el", kb, data, mesh, payload=np.arange(800))
+    col.add(extra[:30], payload=np.arange(800, 830))
+    col.remove(np.arange(0, 60, 2).astype(np.int32))  # 30 victims
+    col.calibrate(queries[:12], k=10)
+    step = col.snapshot(str(tmp_path))
+
+    col2 = ShardedCollection.restore(str(tmp_path), mesh=mesh, step=step,
+                                     migrate=True)
+    assert col2.live_count() == col.live_count() == 800
+    assert col2.n == 800  # migration also compacts the tombstones away
+    assert col2.calibration is None  # geometry changed: table is stale
+    assert col2.version > col.version
+
+    # recall parity vs brute force over the survivors, matched by tag
+    # (ids renumbered, the payload is the stable identity)
+    full = np.concatenate([data, extra[:30]])
+    alive = np.ones(830, bool)
+    alive[np.arange(0, 60, 2)] = False
+    alive_tags = np.flatnonzero(alive)
+    gd, gt = brute_force(jnp.asarray(full[alive_tags]),
+                         jnp.asarray(queries), k=10)
+    d2, i2 = col2.search(queries, k=10, r0=0.5, steps=8)
+    tags2 = np.asarray(col2.get_payload(i2)).astype(int)
+    recs = []
+    for qi in range(queries.shape[0]):
+        f = np.isfinite(np.asarray(d2)[qi])
+        want = alive_tags[np.asarray(gt)[qi]]
+        recs.append(len(set(tags2[qi][f].tolist()) & set(want.tolist())) / 10)
+    assert float(np.mean(recs)) > 0.6, recs
+
+    # migrate=False demands the bit-identical path — and still works on
+    # the equal mesh
+    col3 = ShardedCollection.restore(str(tmp_path), mesh=mesh, step=step,
+                                     migrate=False)
+    d3, i3 = col3.search(queries, k=10, r0=0.5, steps=8)
+    da, ia = col.search(queries, k=10, r0=0.5, steps=8)
+    np.testing.assert_array_equal(np.asarray(i3), np.asarray(ia))
+    np.testing.assert_array_equal(np.asarray(d3), np.asarray(da))
+
+
+def test_get_payload_clamps_both_ends(setup, mesh):
+    """A negative id (e.g. -1 from an id map marking a deletion) clamps
+    to row 0 instead of wrapping to the buffer tail."""
+    data, extra, queries, kb = setup
+    col = _make("clamp", kb, data[:100], mesh, payload=np.arange(100) + 7)
+    out = np.asarray(col.get_payload(np.array([[-1, -100, 0]])))[0]
+    np.testing.assert_array_equal(out, [7, 7, 7])
+    # sentinel (id_space) clamps to the last buffer row, as documented
+    sent = np.asarray(col.get_payload(np.array([col.id_space])))
+    assert sent.shape == (1,)
 
 
 def test_sharded_auto_compaction_policy_fires(setup, mesh):
@@ -183,10 +304,13 @@ def test_sharded_auto_compaction_policy_fires(setup, mesh):
         policy=CompactionPolicy(growth_ratio=1.5, auto=True),
     )
     built0 = col.built_n
-    col.add(data[100:180])  # 180 >= 1.5 * 100 -> compact
+    # 150 >= 1.5 * 100 -> compact; the batch also exactly fills the id
+    # stride (sized to the growth ratio), so the policy — not a forced
+    # stride renumber — is what fires
+    col.add(data[100:150])
     assert col.stats.compactions == 1
-    assert col.built_n == 180 > built0
-    assert col.live_count() == 180
+    assert col.built_n == 150 > built0
+    assert col.live_count() == 150
     # hollowness trigger: tombstone most points
     col2 = _make(
         "sh2", kb, data[:200], mesh,
