@@ -26,6 +26,15 @@ force of the surviving point set and that deleted points never
 resurface (non-zero exit on violation) — the CI hook for the sharded
 lifecycle.
 
+``--chaos`` soaks the resilience layer instead: a scripted fault matrix
+(transient + persistent dispatch raises, injected latency spikes under
+the brownout ladder, snapshot-writer kills at every crash stage) with
+hard gates — no ticket lost or hung, non-flagged results bit-equal the
+fault-free reference, degraded-phase p99 within 2x the healthy
+baseline, brownout heals to level 0, every snapshot crash recovers a
+verified committed state.  ``--smoke`` shrinks it to CI size; the JSON
+report is the chaos-soak artifact.
+
 Caveat for CPU-only hosts: the "device" shares cores with the host, so
 overlapped dispatch has nothing to hide behind and lands within noise
 of sync (~0.95-1.05x) — the overlap win needs a real accelerator,
@@ -350,6 +359,243 @@ def bench_obs(
     return report
 
 
+def bench_chaos(
+    scale: float = 0.2,
+    dataset: str = "sift-s",
+    batch_size: int = 16,
+    engine: str = "jnp",
+    k: int = 10,
+    smoke: bool = False,
+    out: str = "store_chaos.json",
+):
+    """Chaos soak: a scripted fault matrix against the serving stack.
+
+    Five phases over one collection:
+
+    A. **healthy** — fault-free stream; per-query reference results and
+       the healthy p99 baseline every later gate is relative to.
+    B. **dispatch raises** — a transient burst (retried, bit-equal), a
+       burst long enough to exhaust the retry budget, and one
+       non-transient raise (both fail their batch typed).
+    C. **latency spikes + brownout** — injected per-step delays breach
+       the p99 SLO; the BrownoutController walks the ladder down to the
+       floor schedule, which shrinks the injected delay with it (it
+       scales with ``plan.steps``, like real schedule cost).  A second
+       measurement stream then runs entirely degraded.
+    D. **heal** — faults removed; the ladder walks back to healthy and
+       results are bit-equal to the reference again.
+    E. **snapshot chaos** — the writer is killed at every snapshot-lane
+       site (torn leaf, torn manifest, all four crash stages);
+       ``restore_collection`` must land on a committed state bit-equal
+       to one the writer reached, and sweep the wreckage.
+
+    Gates (hard, non-zero exit on violation):
+
+    * no ticket lost or hung — every submitted ticket terminates with a
+      result or a typed error, queues and ring drain to zero;
+    * no wrong non-flagged result — every ticket with ``error is None``
+      and ``degraded`` False bit-matches the reference for its query;
+    * brownout holds the degraded-phase p99 within 2x the healthy
+      baseline, and heals back to level 0 once faults stop;
+    * every snapshot crash recovers a verified committed state.
+    """
+    import math as _math
+    import os
+    import tempfile
+
+    from repro.checkpoint import Checkpointer
+    from repro.resilience import BrownoutController, FaultPlan, \
+        SimulatedCrash, faults
+    from repro.store import restore_collection
+
+    if smoke:
+        scale = min(scale, 0.05)
+    data, queries = load_dataset(dataset, scale=scale)
+    col = Collection.create("chaos", jax.random.key(3), data, c=1.5,
+                            t=32, k=k)
+    r0, steps = 0.5, 8
+    ref_d, ref_i = (np.asarray(x) for x in
+                    col.search(queries, k=k, r0=r0, steps=steps,
+                               engine=engine))
+    nq = queries.shape[0]
+
+    def make_svc(latency_window=64):
+        svc = StoreService(
+            batch_shapes=(batch_size,), max_wait_ms=1e9, default_k=k,
+            r0=r0, steps=steps, engine=engine, inflight_depth=2,
+            cache_size=0, latency_window=latency_window,
+        )
+        svc.attach(col)
+        return svc
+
+    all_tickets: list[tuple[str, int, object]] = []
+
+    def run_stream(svc, n, phase):
+        for j in range(n):
+            qi = j % nq
+            all_tickets.append((phase, qi, svc.submit("chaos", queries[qi])))
+            if svc.pending() >= batch_size:
+                svc.step()
+        svc.flush()
+
+    gates: dict[str, bool] = {}
+    report: dict = {"dataset": dataset, "scale": scale,
+                    "batch_size": batch_size, "engine": engine}
+
+    # ---------------------------------------------------------- A: healthy
+    svc = make_svc()
+    run_stream(svc, 6 * batch_size, "healthy")
+    healthy = svc.stats("chaos")
+    p99_healthy = max(healthy["latency_ms_p99"], 2.0)  # sub-ms floors flake
+    report["healthy"] = healthy
+
+    # --------------------------------------------------- B: dispatch raises
+    svc = make_svc()
+    plan = (
+        FaultPlan()
+        .add("dispatch.raise", at=1, count=2, transient=True)   # retried ok
+        .add("dispatch.raise", at=6, count=3, transient=True)   # exhausts
+        .add("dispatch.raise", at=12, count=1, transient=False)  # immediate
+    )
+    n_before = len(all_tickets)
+    with faults.active(plan):
+        run_stream(svc, 12 * batch_size, "dispatch")
+    phase_b = [r for _, _, r in all_tickets[n_before:]]
+    b_failed = [r for r in phase_b if r.error is not None]
+    gates["dispatch_failures_typed"] = (
+        len(b_failed) == 2 * batch_size
+        and all(type(r.error).__name__ == "DispatchFailed" for r in b_failed)
+        and len(plan.fired) == 6
+    )
+    report["dispatch"] = {
+        "tickets": len(phase_b), "failed_typed": len(b_failed),
+        "faults_fired": len(plan.fired), "stats": svc.stats("chaos"),
+    }
+
+    # ------------------------------------- C: latency spikes under brownout
+    svc = make_svc(latency_window=32)
+    bc = BrownoutController(svc, floor_steps=1, heal_after=10**6)
+    slo = svc.obs.watch(
+        "chaos", latency_p99_ms=2.0 * p99_healthy, min_samples=8,
+        check_interval_s=0.0,
+    )
+    bc.attach(slo)
+    # per-step delay: at the full 8-step plan the spike alone is 2x the
+    # healthy p99 (breach); at the floor schedule it is 0.25x (headroom)
+    spike_per_step = p99_healthy / 4.0
+    plan = FaultPlan().add("dispatch.delay_ms", arg=spike_per_step,
+                           count=_math.inf)
+    with faults.active(plan):
+        run_stream(svc, 6 * batch_size, "spike_onset")
+        level_engaged = bc.level
+        n_before = len(all_tickets)
+        run_stream(svc, 6 * batch_size, "spike_degraded")
+    degraded_lat = [r.latency_ms for _, _, r in all_tickets[n_before:]]
+    p99_degraded = float(np.percentile(degraded_lat, 99))
+    gates["brownout_engaged"] = level_engaged >= 2
+    gates["brownout_holds_p99"] = p99_degraded <= 2.0 * p99_healthy
+    report["brownout"] = {
+        "p99_healthy_ms": p99_healthy,
+        "p99_degraded_ms": p99_degraded,
+        "level_engaged": level_engaged,
+        "transitions": bc.transitions,
+        "stats": svc.stats("chaos"),
+    }
+
+    # ------------------------------------------------------------- D: heal
+    bc.heal_after = 2  # chaos over: let the ladder walk back
+    run_stream(svc, 8 * batch_size, "heal")
+    gates["brownout_heals"] = bc.level == 0
+    report["heal"] = {"level_final": bc.level, "transitions": bc.transitions}
+
+    # --------------------------------------------------- E: snapshot chaos
+    snap_scenarios = [
+        ("torn_leaf", FaultPlan().add(
+            "snapshot.write.torn", file="arr_0.npy", arg=64, step=2)),
+        ("torn_manifest", FaultPlan().add(
+            "snapshot.write.torn", file="manifest.json", arg=32, step=2)),
+    ] + [
+        (f"crash_{stage}", FaultPlan().add(
+            "snapshot.write.crash", stage=stage, step=2))
+        for stage in faults.SNAPSHOT_CRASH_STAGES
+    ]
+    n_half = data.shape[0] // 2
+    snap_results = []
+    for label, splan in snap_scenarios:
+        sdir = tempfile.mkdtemp(prefix=f"chaos_snap_{label}_")
+        scol = Collection.create("snap", jax.random.key(5), data[:n_half],
+                                 c=1.5, t=16, k=k)
+        sref1 = [np.asarray(x) for x in
+                 scol.search(queries, k=k, r0=r0, steps=steps)]
+        scol.snapshot(sdir)
+        scol.add(data[n_half:])
+        sref2 = [np.asarray(x) for x in
+                 scol.search(queries, k=k, r0=r0, steps=steps)]
+        try:
+            with faults.active(splan):
+                scol.snapshot(sdir)
+        except SimulatedCrash:
+            pass
+        restored = restore_collection(sdir)
+        got = [np.asarray(x) for x in
+               restored.search(queries, k=k, r0=r0, steps=steps)]
+        committed = (
+            all(np.array_equal(g, r) for g, r in zip(got, sref1))
+            or all(np.array_equal(g, r) for g, r in zip(got, sref2))
+        )
+        Checkpointer(sdir)  # fresh open sweeps any wreckage
+        swept = not any(".tmp" in n for n in os.listdir(sdir))
+        snap_results.append(
+            {"scenario": label, "recovered_committed": committed,
+             "tmp_swept": swept}
+        )
+        print(f"[snapshot {label:>18s}] committed={committed} swept={swept}")
+    gates["snapshot_recovery"] = all(
+        s["recovered_committed"] and s["tmp_swept"] for s in snap_results
+    )
+    report["snapshot"] = snap_results
+
+    # ------------------------------------------------- global ticket gates
+    terminated = all(
+        r.done and (r.error is not None or r.dists is not None)
+        for _, _, r in all_tickets
+    )
+    clean = [
+        (phase, qi, r) for phase, qi, r in all_tickets
+        if r.error is None and not r.degraded
+    ]
+    bit_ok = all(
+        np.array_equal(r.dists, ref_d[qi, :k])
+        and np.array_equal(r.ids, ref_i[qi, :k])
+        for _, qi, r in clean
+    )
+    gates["no_ticket_lost_or_hung"] = terminated
+    gates["non_flagged_results_exact"] = bit_ok
+    report["tickets"] = {
+        "total": len(all_tickets),
+        "clean": len(clean),
+        "degraded": sum(1 for _, _, r in all_tickets
+                        if r.degraded and r.error is None),
+        "failed_typed": sum(1 for _, _, r in all_tickets
+                            if r.error is not None),
+    }
+    report["gates"] = gates
+    report["ok"] = all(gates.values())
+
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"[chaos] p99 healthy={p99_healthy:.1f}ms "
+          f"degraded={report['brownout']['p99_degraded_ms']:.1f}ms "
+          f"tickets={report['tickets']}")
+    for g, ok in gates.items():
+        print(f"[gate] {g}: {'ok' if ok else 'VIOLATED'}")
+    print(f"[report] -> {out}")
+    if not report["ok"]:
+        raise SystemExit("chaos gates violated: " + ", ".join(
+            g for g, ok in gates.items() if not ok))
+    return report
+
+
 def bench_sharded_updates(
     scale: float = 0.2,
     dataset: str = "sift-s",
@@ -639,12 +885,26 @@ if __name__ == "__main__":
                     help="with --obs: hard-fail if enabled overhead "
                          "exceeds --max-overhead (CI)")
     ap.add_argument("--max-overhead", type=float, default=0.05)
+    ap.add_argument("--chaos", action="store_true",
+                    help="chaos soak: scripted fault matrix (dispatch "
+                         "raises, latency spikes + brownout, snapshot "
+                         "crashes) with hard recovery gates")
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny sharded-updates run with correctness "
-                         "gates (CI)")
+                    help="tiny run with correctness gates (CI) — applies "
+                         "to --sharded-updates and --chaos")
     ap.add_argument("--out", default="store_throughput.json")
     args = ap.parse_args()
-    if args.obs:
+    if args.chaos:
+        bench_chaos(
+            scale=args.scale,
+            dataset=args.dataset,
+            batch_size=args.batch_sizes[0],
+            engine=args.engines[0],
+            smoke=args.smoke,
+            out=args.out if args.out != "store_throughput.json"
+            else "store_chaos.json",
+        )
+    elif args.obs:
         bench_obs(
             scale=args.scale,
             dataset=args.dataset,

@@ -1,1 +1,3 @@
-from .checkpointer import Checkpointer
+from .checkpointer import Checkpointer, CorruptSnapshot
+
+__all__ = ["Checkpointer", "CorruptSnapshot"]

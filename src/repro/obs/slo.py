@@ -115,6 +115,7 @@ class SLOWatch:
         clock=time.monotonic,
         tracer: Tracer | None = None,
         on_breach=None,
+        on_check=None,
     ):
         self.registry = registry
         self.collection = collection
@@ -129,6 +130,10 @@ class SLOWatch:
         self.clock = clock
         self.tracer = tracer if tracer is not None else get_tracer()
         self.on_breach = on_breach
+        # unlike on_breach (fired per event), on_check sees every check's
+        # full outcome — `([], now)` for a clean window — which is what a
+        # consumer that must *heal* (resilience.BrownoutController) needs
+        self.on_check = on_check
         self.events: deque[BreachEvent] = deque(maxlen=max_events)
         self._breaches = registry.counter(
             "repro_store_slo_breaches_total", "SLO breach events by kind"
@@ -229,6 +234,8 @@ class SLOWatch:
                         f"from the calibrated prediction over {n} queries — "
                         "re-calibrate",
                     ))
+        if self.on_check is not None:
+            self.on_check(out, now)
         return out
 
     def maybe_check(self, now: float | None = None) -> list[BreachEvent]:

@@ -21,34 +21,9 @@ from __future__ import annotations
 import time
 
 from ..checkpoint.checkpointer import Checkpointer
+from ..resilience.stragglers import StragglerMonitor
 
 __all__ = ["StragglerMonitor", "TrainSupervisor"]
-
-
-class StragglerMonitor:
-    """EWMA-based step-time outlier detection."""
-
-    def __init__(self, alpha: float = 0.1, threshold: float = 2.0, warmup: int = 3):
-        self.alpha = alpha
-        self.threshold = threshold
-        self.warmup = warmup
-        self.ewma = None
-        self.count = 0
-        self.flagged: list[tuple[int, float]] = []
-
-    def record(self, step: int, duration: float) -> bool:
-        """Returns True if this step is a straggler."""
-        self.count += 1
-        if self.ewma is None:
-            self.ewma = duration
-            return False
-        is_slow = self.count > self.warmup and duration > self.threshold * self.ewma
-        if is_slow:
-            self.flagged.append((step, duration))
-        else:
-            # only fold non-outliers into the baseline
-            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * duration
-        return is_slow
 
 
 class TrainSupervisor:
@@ -101,7 +76,11 @@ class TrainSupervisor:
                 self.restarts += 1
                 if self.restarts > self.max_restarts:
                     raise
-                self.ckpt.wait()
+                # an in-flight async save may itself have died (that can be
+                # the very failure we are recovering from) — drain it without
+                # re-raising; restore() below falls back to the newest
+                # *verified* step regardless of how the write ended
+                self.ckpt.wait(reraise=False)
                 latest = self.ckpt.latest_step()
                 if latest is None:
                     state, step = init_state, 0

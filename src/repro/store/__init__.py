@@ -77,14 +77,25 @@ from .lifecycle import (
     version_clock,
 )
 from .router import ShardedCollection, open_collection
-from .service import QueryRequest, QuotaExceeded, StoreService, TenantQuota
+from .service import (
+    BrownoutShed,
+    DeadlineExceeded,
+    DispatchFailed,
+    QueryRequest,
+    QuotaExceeded,
+    StoreService,
+    TenantQuota,
+)
 
 __all__ = [
+    "BrownoutShed",
     "CachedResult",
     "Collection",
     "CollectionLifecycle",
     "CollectionStats",
     "CompactionPolicy",
+    "DeadlineExceeded",
+    "DispatchFailed",
     "QueryRequest",
     "QueryResultCache",
     "QuotaExceeded",

@@ -45,7 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..checkpoint import Checkpointer
+from ..checkpoint import Checkpointer, CorruptSnapshot
 from ..core import validate_engine
 from ..obs.trace import get_tracer
 from ..tune import planner as _planner
@@ -484,17 +484,36 @@ def restore_collection(directory: str, step: int | None = None, *, mesh=None):
     sharded ones need ``mesh=`` and return a
     :class:`~repro.store.router.ShardedCollection` placed on it — on any
     shard count: a mesh differing from the snapshot's triggers the
-    elastic migration path (see ``ShardedCollection.restore``)."""
-    meta, step = Checkpointer(directory).read_meta(step)
-    if meta.get("placement", "local") == "sharded":
-        if mesh is None:
-            raise ValueError(
-                f"snapshot at {directory!r} is sharded "
-                f"({meta.get('shards')} shards): pass mesh= to place it"
-            )
-        from .router import ShardedCollection
+    elastic migration path (see ``ShardedCollection.restore``).
 
-        return ShardedCollection.restore(directory, mesh=mesh, step=step)
-    from .collection import Collection
+    Crash safety: with ``step=None`` this walks the directory's steps
+    newest-first (the ``LATEST`` designee first) and falls back past any
+    snapshot that fails integrity verification (torn write, bit-rot,
+    garbled manifest — :class:`~repro.checkpoint.CorruptSnapshot`) to
+    the newest step that restores cleanly.  An explicit ``step`` is
+    strict: its corruption propagates."""
+    ck = Checkpointer(directory)
+    candidates = ck._candidate_steps(step)
+    if not candidates:
+        raise FileNotFoundError(f"no checkpoints in {directory}")
+    last_err: Exception | None = None
+    for s in candidates:
+        try:
+            meta, s = ck.read_meta(s)
+            if meta.get("placement", "local") == "sharded":
+                if mesh is None:
+                    raise ValueError(
+                        f"snapshot at {directory!r} is sharded "
+                        f"({meta.get('shards')} shards): pass mesh= to place it"
+                    )
+                from .router import ShardedCollection
 
-    return Collection.restore(directory, step)
+                return ShardedCollection.restore(directory, mesh=mesh, step=s)
+            from .collection import Collection
+
+            return Collection.restore(directory, s)
+        except (CorruptSnapshot, FileNotFoundError, OSError) as e:
+            last_err = e
+            if step is not None:
+                raise
+    raise last_err

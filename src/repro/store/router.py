@@ -58,6 +58,7 @@ from ..core.distributed import (
     shard_live_counts,
 )
 from ..core.index import DBLSHIndex
+from ..resilience import faults
 from ..tune import planner as _planner
 from .collection import Collection, CompactionPolicy
 from .lifecycle import _INDEX_ARRAY_FIELDS, CollectionLifecycle
@@ -302,6 +303,10 @@ class ShardedCollection(CollectionLifecycle):
         Q = jnp.atleast_2d(jnp.asarray(Q, jnp.float32))
         self._count_queries(Q, rows)
         k = k or self.sharded.index.params.k
+        # shard.straggle: one slow shard stalls the all_gather merge —
+        # injected here (a no-op without an installed FaultPlan) so the
+        # service's EWMA straggler monitor sees it as a slow batch
+        faults.fire("shard.straggle", collection=self.name, scale=steps)
         return search_sharded(
             self.sharded, Q, k=k, r0=r0, steps=steps, mesh=self.mesh,
             with_stats=with_stats, exact=exact, termination=termination,

@@ -74,15 +74,49 @@ from ..core.serve_search import PendingSearch, validate_engine
 from ..obs import Observability
 from ..obs.metrics import LATENCY_MS_BUCKETS, MetricsRegistry
 from ..obs.trace import TID_RING0, TID_SCHEDULER
+from ..resilience import faults
+from ..resilience.stragglers import StragglerMonitor
 from ..tune import planner as _planner
-from ..tune.policy import RecallTarget, ResolvedPlan, resolve_policy
+from ..tune.policy import (
+    LatencyBudget,
+    RecallTarget,
+    ResolvedPlan,
+    resolve_policy,
+)
 from .cache import CachedResult, QueryResultCache
 
-__all__ = ["QueryRequest", "QuotaExceeded", "StoreService", "TenantQuota"]
+__all__ = [
+    "BrownoutShed",
+    "DeadlineExceeded",
+    "DispatchFailed",
+    "QueryRequest",
+    "QuotaExceeded",
+    "StoreService",
+    "TenantQuota",
+]
 
 
 class QuotaExceeded(RuntimeError):
     """Raised by ``submit`` when the tenant's token bucket is empty."""
+
+
+class BrownoutShed(QuotaExceeded):
+    """Raised by ``submit`` when the brownout controller is at its
+    load-shedding rung and the tenant is below the shed line.  A
+    subclass of :class:`QuotaExceeded` so existing all-or-nothing /
+    rejection handling applies unchanged."""
+
+
+class DeadlineExceeded(RuntimeError):
+    """The ticket's ``deadline_ms`` elapsed before its batch could be
+    issued; the ticket terminates with ``error`` set instead of
+    dispatching work nobody can use."""
+
+
+class DispatchFailed(RuntimeError):
+    """A batch's dispatch (or completion) raised after exhausting the
+    transient-retry budget; every ticket in the batch terminates with
+    ``error`` set to this, never left pending."""
 
 
 @dataclasses.dataclass
@@ -101,6 +135,14 @@ class QueryRequest:
                                       # termination) — request policy >
                                       # collection search_policy >
                                       # service default_policy
+    deadline_ms: float | None = None  # end-to-end budget from submit; the
+                                      # scheduler fails (pre-issue) or flags
+                                      # degraded (post-complete) past it
+    degraded: bool = False            # served on a cut-down schedule (deadline
+                                      # re-plan or brownout) or past deadline —
+                                      # the result is real but reduced-recall
+    error: Exception | None = None    # typed terminal error (DeadlineExceeded,
+                                      # DispatchFailed); done=True either way
     done: bool = False
     traced: bool = False              # sampled into the span recorder
     cached: bool = False              # served from the query-result cache
@@ -203,6 +245,10 @@ class _TenantStats:
             "repro_store_tenant_cache_hits_total",
             "Tenant requests served from the query-result cache",
         )
+        self._failed = r.counter(
+            "repro_store_tenant_failed_total",
+            "Tenant requests terminated with a typed error",
+        )
         self._window = _WindowClock(
             r.gauge("repro_store_tenant_window_start_seconds",
                     "Earliest submit timestamp in the tenant QPS window"),
@@ -226,6 +272,9 @@ class _TenantStats:
             self._hits.inc(tenant=self.tenant)
         self._window.record(req.submitted, now)
 
+    def record_failed(self):
+        self._failed.inc(tenant=self.tenant)
+
     def snapshot(self) -> dict:
         t = dict(tenant=self.tenant)
         served = self._served.value(**t)
@@ -237,6 +286,7 @@ class _TenantStats:
             "served": int(served),
             "rejected": int(self._rejected.value(**t)),
             "cache_hits": int(self._hits.value(**t)),
+            "failed": int(self._failed.value(**t)),
             "qps": served / span if span > 0 else 0.0,
         }
 
@@ -248,11 +298,24 @@ class _CollectionStats:
     quantities export through Prometheus/JSON and feed the SLO watch.
     Empty windows report ``0.0``, never NaN."""
 
-    def __init__(self, registry: MetricsRegistry, name: str):
+    def __init__(self, registry: MetricsRegistry, name: str,
+                 latency_window: int = 8192):
         self.name = name
         r = registry
         self._served = r.counter(
             "repro_store_queries_served_total", "Queries completed"
+        )
+        self._failed = r.counter(
+            "repro_store_requests_failed_total",
+            "Requests terminated with a typed error, by kind",
+        )
+        self._degraded = r.counter(
+            "repro_store_degraded_total",
+            "Requests served flagged-degraded (cut schedule or past deadline)",
+        )
+        self._straggler = r.counter(
+            "repro_store_straggler_batches_total",
+            "Completed batches the EWMA monitor flagged as stragglers",
         )
         self._batches = r.counter(
             "repro_store_batches_total", "Device batches dispatched"
@@ -270,11 +333,13 @@ class _CollectionStats:
             "Batch slots filled with padding, not real queries",
         )
         # bounded window reservoir inside the histogram: percentiles over
-        # the most recent 8192 queries, so a long-lived serving process
-        # doesn't grow memory per request
+        # the most recent `latency_window` queries (default 8192), so a
+        # long-lived serving process doesn't grow memory per request.
+        # Smaller windows make the p99 react faster — the chaos bench
+        # shrinks it so brownout heal is observable within a soak.
         self._latency = r.histogram(
             "repro_store_latency_ms", "End-to-end request latency (ms)",
-            buckets=LATENCY_MS_BUCKETS, window=8192,
+            buckets=LATENCY_MS_BUCKETS, window=latency_window,
         )
         self._fill = r.histogram(
             "repro_store_batch_fill_ratio",
@@ -312,6 +377,21 @@ class _CollectionStats:
         self._steps_hist.inc(
             collection=self.name, step=int(r.radius_steps)
         )
+        if r.degraded:
+            self._degraded.inc(collection=self.name)
+
+    def record_failed(self, kind: str):
+        self._failed.inc(collection=self.name, kind=kind)
+
+    def record_straggler(self):
+        self._straggler.inc(collection=self.name)
+
+    def _failed_total(self) -> int:
+        total = 0
+        for labels, v in self._failed.series():
+            if labels.get("collection") == self.name:
+                total += int(v)
+        return total
 
     def record_batch(self, reqs, shape, now, *, overlapped: bool):
         c = dict(collection=self.name)
@@ -368,6 +448,9 @@ class _CollectionStats:
             "overlap_ratio": (
                 self._overlapped.value(**c) / batches if batches else 0.0
             ),
+            "failed": self._failed_total(),
+            "degraded": int(self._degraded.value(**c)),
+            "straggler_batches": int(self._straggler.value(**c)),
         }
 
 
@@ -410,6 +493,11 @@ class StoreService:
         default_policy=None,
         clock=time.monotonic,
         obs: Observability | None = None,
+        retry_limit: int = 2,
+        retry_backoff_ms: float = 1.0,
+        retry_backoff_cap_ms: float = 50.0,
+        sleep=time.sleep,
+        latency_window: int = 8192,
     ):
         assert batch_shapes == tuple(sorted(batch_shapes)) and batch_shapes
         assert inflight_depth >= 0
@@ -421,6 +509,18 @@ class StoreService:
         self.engine = engine
         self.interpret = interpret
         self.inflight_depth = inflight_depth
+        # transient-dispatch retry budget: errors whose `transient`
+        # attribute is true are re-issued up to retry_limit times with
+        # capped exponential backoff before the batch fails typed
+        self.retry_limit = retry_limit
+        self.retry_backoff_ms = retry_backoff_ms
+        self.retry_backoff_cap_ms = retry_backoff_cap_ms
+        self._sleep = sleep
+        self._latency_window = latency_window
+        # a BrownoutController registers itself here (resilience.degrade);
+        # None = no degradation ladder, submit-time behavior unchanged
+        self.brownout = None
+        self._stragglers: dict[str, StragglerMonitor] = {}
         # service-level query-planning default (repro.tune policy) — the
         # lowest-precedence rung of request > collection > service
         self.default_policy = default_policy
@@ -471,7 +571,7 @@ class StoreService:
         self._queues.setdefault(collection.name, {})
         if collection.name not in self._stats:
             self._stats[collection.name] = _CollectionStats(
-                self.registry, collection.name
+                self.registry, collection.name, self._latency_window
             )
 
     def create_collection(self, name: str, key, data, **kw):
@@ -544,14 +644,20 @@ class StoreService:
         self, collection: str, query, k: int | None = None,
         tenant: str = "default", engine: str | None = None,
         policy=None, recall_target: float | None = None,
+        deadline_ms: float | None = None,
     ) -> QueryRequest:
         """Enqueue one query; returns its ticket (filled once dispatched).
         ``engine`` overrides the collection / service engine defaults for
         this request; ``policy`` (a ``repro.tune`` policy) overrides the
         collection / service planning defaults, and ``recall_target=x``
-        is sugar for ``policy=RecallTarget(x)``.  Raises
+        is sugar for ``policy=RecallTarget(x)``.  ``deadline_ms`` is an
+        end-to-end budget: a ticket still queued past it terminates with
+        a typed :class:`DeadlineExceeded` instead of dispatching, a
+        ticket that can only fit the remaining budget on a shorter
+        schedule is re-planned and flagged ``degraded``.  Raises
         :class:`QuotaExceeded` when the tenant is over quota — rejected
-        requests are never enqueued."""
+        requests are never enqueued — and :class:`BrownoutShed` when the
+        degradation ladder is shedding this tenant's load."""
         if collection not in self.collections:
             raise KeyError(f"unknown collection {collection!r}")
         if recall_target is not None:
@@ -560,6 +666,15 @@ class StoreService:
             policy = RecallTarget(recall_target)
         engine = self.resolve_engine(collection, engine)
         plan = self.resolve_plan(collection, policy)
+        degraded = False
+        if self.brownout is not None:
+            if self.brownout.should_shed(tenant):
+                self._tstats(tenant).record_rejected()
+                raise BrownoutShed(
+                    f"tenant {tenant!r} shed at brownout level "
+                    f"{self.brownout.level}"
+                )
+            plan, degraded = self.brownout.apply_plan(plan)
         k = self.default_k if k is None else k
         if k > self.default_k:
             raise ValueError(
@@ -592,6 +707,8 @@ class StoreService:
             tenant=tenant,
             engine=engine,
             plan=plan,
+            deadline_ms=deadline_ms,
+            degraded=degraded,
             traced=self.tracer.should_sample(),
         )
         self._uid += 1
@@ -646,6 +763,7 @@ class StoreService:
                                 cat="request", uid=r.uid, tenant=r.tenant,
                                 collection=name,
                             )
+                reqs = self._apply_deadlines(name, reqs)
                 misses = self._serve_cached(name, reqs)
                 if misses:
                     # one device program per (engine, plan): split mixed
@@ -711,6 +829,76 @@ class StoreService:
                     out.append(per_tenant[t].popleft())
                 if len(out) >= cap:
                     break
+        return out
+
+    # --------------------------------------------- deadlines / typed failure
+    def _fail_req(self, name: str, r: QueryRequest, exc: Exception,
+                  kind: str, now: float) -> None:
+        """Terminate one ticket with a typed error — the ticket contract
+        is that ``done`` flips exactly once, result or error, never
+        neither."""
+        r.error = exc
+        r.done = True
+        r.latency_ms = (now - r.submitted) * 1e3
+        self._stats[name].record_failed(kind)
+        self._tstats(r.tenant).record_failed()
+        if r.traced:
+            self.tracer.instant(
+                "request.failed", cat="request", t=now,
+                uid=r.uid, collection=name, kind=kind,
+            )
+
+    def _fail_batch(self, name: str, reqs: list[QueryRequest],
+                    exc: Exception, kind: str) -> None:
+        now = self._clock()
+        for r in reqs:
+            self._fail_req(name, r, exc, kind, now)
+
+    def _apply_deadlines(
+        self, name: str, reqs: list[QueryRequest]
+    ) -> list[QueryRequest]:
+        """Deadline gate at drain time.  Expired tickets terminate with
+        :class:`DeadlineExceeded` before any device work; tickets whose
+        remaining budget no longer fits their plan are re-planned through
+        ``LatencyBudget(remaining)`` — DB-LSH's schedule is the knob: a
+        shorter window schedule trades recall for latency continuously —
+        and flagged ``degraded``.  Re-planning needs a *measured*
+        calibration table (``Collection.calibrate(measure_ms=True)``);
+        without one the ticket keeps its plan and simply risks finishing
+        late (flagged at completion)."""
+        now = self._clock()
+        out: list[QueryRequest] = []
+        table = None
+        if any(r.deadline_ms is not None for r in reqs):
+            table = getattr(self.collections[name], "calibration", None)
+            if table is not None and not any(
+                math.isfinite(float(m)) for m in table.cost_ms
+            ):
+                table = None  # unmeasured: recall-only calibration
+        for r in reqs:
+            if r.deadline_ms is None:
+                out.append(r)
+                continue
+            remaining = r.deadline_ms - (now - r.submitted) * 1e3
+            if remaining <= 0:
+                self._fail_req(
+                    name, r,
+                    DeadlineExceeded(
+                        f"deadline {r.deadline_ms}ms elapsed before dispatch "
+                        f"(queued {(now - r.submitted) * 1e3:.3f}ms)"
+                    ),
+                    "deadline", now,
+                )
+                continue
+            if table is not None:
+                tight = _planner.plan(
+                    table, LatencyBudget(remaining),
+                    default_r0=self.r0, default_steps=self.steps,
+                )
+                if tight.steps < r.plan.steps:
+                    r.plan = tight
+                    r.degraded = True
+            out.append(r)
         return out
 
     # ------------------------------------------------------------- the cache
@@ -794,22 +982,52 @@ class StoreService:
         # shows overlap directly: batch N+1's issue span sits one lane up,
         # inside batch N's pending window
         tid = TID_RING0 + len(self._inflight)
-        t_i0 = self._clock() if traced else 0.0
+        t_i0 = self._clock()
         dispatch_ctx = (
             jax.profiler.TraceAnnotation(f"store.dispatch.{name}")
             if traced else contextlib.nullcontext()
         )
-        with dispatch_ctx:
-            dists, ids, stats = col.search(
-                Q, k=self.default_k, r0=plan.r0, steps=plan.steps,
-                engine=engine, with_stats=True, interpret=self.interpret,
-                rows=m,  # only m of `shape` rows are real queries
-                **term_kw,
-            )
-            payload = None
-            if getattr(col, "payload", None) is not None:
-                payload = col.get_payload(ids[:m])  # async gather, same stream
-        t_i1 = self._clock() if traced else 0.0
+        attempts = 0
+        while True:
+            try:
+                # fault sites (no-ops without an installed plan): an
+                # injected latency spike scales with the schedule the
+                # batch runs, like the real dispatch does
+                faults.fire("dispatch.delay_ms", collection=name,
+                            scale=plan.steps)
+                faults.fire("dispatch.raise", collection=name, engine=engine)
+                with dispatch_ctx:
+                    dists, ids, stats = col.search(
+                        Q, k=self.default_k, r0=plan.r0, steps=plan.steps,
+                        engine=engine, with_stats=True,
+                        interpret=self.interpret,
+                        rows=m,  # only m of `shape` rows are real queries
+                        **term_kw,
+                    )
+                    payload = None
+                    if getattr(col, "payload", None) is not None:
+                        # async gather, same stream
+                        payload = col.get_payload(ids[:m])
+                break
+            except Exception as e:
+                attempts += 1
+                transient = bool(getattr(e, "transient", False))
+                if transient and attempts <= self.retry_limit:
+                    self._sleep(
+                        min(self.retry_backoff_cap_ms,
+                            self.retry_backoff_ms * 2 ** (attempts - 1)) / 1e3
+                    )
+                    continue
+                # exhausted (or non-transient): every ticket terminates
+                # with a typed error — never parked in the ring forever
+                err = DispatchFailed(
+                    f"dispatch for collection {name!r} failed after "
+                    f"{attempts} attempt(s): {e}"
+                )
+                err.__cause__ = e
+                self._fail_batch(name, reqs, err, "dispatch")
+                return
+        t_i1 = self._clock()
         if traced:
             self.tracer.add_span(
                 "batch.assemble", t_a0, t_i0, cat="batch", tid=TID_SCHEDULER,
@@ -846,13 +1064,34 @@ class StoreService:
         those entries are born unreachable rather than stale)."""
         traced = self.tracer.enabled
         t_c0 = self._clock() if traced else 0.0
-        dists, ids, stats = batch.pending.result()
-        dists = np.asarray(dists)
-        ids = np.asarray(ids)
-        steps_taken = np.asarray(stats["radius_steps"])
-        cands = np.asarray(stats["candidates"])
-        payloads = None if batch.payload is None else np.asarray(batch.payload)
+        try:
+            dists, ids, stats = batch.pending.result()
+            dists = np.asarray(dists)
+            ids = np.asarray(ids)
+            steps_taken = np.asarray(stats["radius_steps"])
+            cands = np.asarray(stats["candidates"])
+            payloads = (
+                None if batch.payload is None else np.asarray(batch.payload)
+            )
+        except Exception as e:
+            # the device-side computation died after issue: the tickets
+            # still terminate, typed, instead of hanging in the ring
+            err = DispatchFailed(
+                f"completion for collection {batch.name!r} failed: {e}"
+            )
+            err.__cause__ = e
+            self._fail_batch(batch.name, batch.reqs, err, "complete")
+            self._g_ring.set(len(self._inflight))
+            return
         now = self._clock()
+        # issue->complete wall time feeds the EWMA straggler monitor —
+        # in a sharded deployment a flagged batch is the signature of one
+        # straggling shard holding the global merge hostage
+        mon = self._stragglers.get(batch.name)
+        if mon is None:
+            mon = self._stragglers[batch.name] = StragglerMonitor()
+        if mon.record(batch.seq, max(now - batch.t_issued, 0.0)):
+            self._stats[batch.name].record_straggler()
         if traced:
             # pending window: issue handoff -> this host sync (batch N+1's
             # issue span lands inside it when the ring overlapped)
@@ -872,6 +1111,8 @@ class StoreService:
             r.radius_steps = int(steps_taken[j])
             r.candidates = int(cands[j])
             r.latency_ms = (now - r.submitted) * 1e3
+            if r.deadline_ms is not None and r.latency_ms > r.deadline_ms:
+                r.degraded = True  # served, but past its budget — flagged
             r.done = True
             if self.cache is not None and batch.version is not None:
                 # copies: r.dists/r.ids above are views of the same batch
@@ -905,19 +1146,24 @@ class StoreService:
     # ------------------------------------------------------------ convenience
     def serve(self, collection: str, Q, k: int | None = None,
               tenant: str = "default", engine: str | None = None,
-              policy=None, recall_target: float | None = None):
+              policy=None, recall_target: float | None = None,
+              deadline_ms: float | None = None):
         """Submit a whole query matrix as single requests, flush, and return
         stacked (dists, ids) — the micro-batching round trip.  All-or-
         nothing under quota: if any row is rejected, the rows already
         enqueued are withdrawn before :class:`QuotaExceeded` propagates
-        (no orphaned tickets dispatching work nobody observes)."""
+        (no orphaned tickets dispatching work nobody observes).  A ticket
+        that terminated with a typed error (deadline, failed dispatch)
+        re-raises that error here — callers driving tickets individually
+        check ``req.error`` instead."""
         reqs = []
         try:
             for q in np.atleast_2d(Q):
                 reqs.append(
                     self.submit(collection, q, k=k, tenant=tenant,
                                 engine=engine, policy=policy,
-                                recall_target=recall_target)
+                                recall_target=recall_target,
+                                deadline_ms=deadline_ms)
                 )
         except QuotaExceeded:
             queue = self._queues[collection].get(tenant)
@@ -930,6 +1176,9 @@ class StoreService:
             self._g_queue.set(self.pending())
             raise
         self.flush()
+        for r in reqs:
+            if r.error is not None:
+                raise r.error
         return (
             np.stack([r.dists for r in reqs]),
             np.stack([r.ids for r in reqs]),

@@ -290,6 +290,7 @@ EXPECTED_STATS_KEYS = {
     "latency_ms_p99", "latency_ms_mean", "mean_radius_steps",
     "mean_candidates", "termination_steps_hist", "padding_efficiency",
     "cache_hits", "cache_hit_rate", "overlap_ratio",
+    "failed", "degraded", "straggler_batches",
 }
 
 
