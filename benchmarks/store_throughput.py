@@ -10,11 +10,14 @@ QPS.
 
 ``--obs`` benchmarks the observability contract instead: the same
 overlapped stream with ``repro.obs`` fully enabled (tracing, sample
-rate 1.0) vs disabled, interleaved best-of-rounds.  It asserts bit-equal
-results, writes the metrics registry (JSON + Prometheus text) and the
-trace (JSONL + Perfetto timeline) as artifacts, verifies the timeline
-shows the in-flight ring overlap, and — with ``--gate`` — hard-fails if
-the enabled overhead exceeds ``--max-overhead`` (default 5%).
+rate 1.0) vs disabled vs EXPLAIN-sampled (per-query explain records at
+the recommended 1/64 rate), interleaved best-of-rounds.  It asserts
+bit-equal results across all three arms, writes the metrics registry
+(JSON + Prometheus text), the trace (JSONL + Perfetto timeline), and
+the sampled explains (JSON) as artifacts, verifies the timeline shows
+the in-flight ring overlap, and — with ``--gate`` — hard-fails if the
+tracing-enabled or explain-sampled overhead exceeds ``--max-overhead``
+(default 5%).
 
 ``--sharded-updates`` benchmarks the *mutable sharded lifecycle*
 instead: a ShardedCollection absorbs interleaved add / remove / compact
@@ -67,7 +70,7 @@ except ImportError:
     from common import load_dataset, recall_and_ratio
 
 from repro.core import brute_force
-from repro.obs import Observability, Tracer
+from repro.obs import DEFAULT_EXPLAIN_SAMPLE_RATE, Observability, Tracer
 from repro.obs.metrics import MetricsRegistry
 from repro.store import (
     Collection,
@@ -238,17 +241,20 @@ def bench_obs(
 ):
     """Observability overhead + artifact benchmark (the repro.obs gate).
 
-    Runs the same all-unique overlapped stream twice per round — obs off
-    (metrics only, tracing disabled) and obs fully on (tracing enabled,
-    sample_rate 1.0) — interleaved, keeping each arm's best round
-    (shared hosts drift; interleaving keeps the drift off one arm).
-    Asserts the two arms return **bit-equal** results, writes the
-    enabled arm's metrics registry (JSON + Prometheus text) and trace
-    (JSONL + Perfetto ``trace_event`` timeline) next to ``out``, and
-    verifies the timeline actually shows ring overlap (batch N+1's issue
-    span inside batch N's pending window, one lane up).  With ``gate``
-    the ≤ ``max_overhead`` enabled-overhead contract is a hard assert —
-    the CI hook.
+    Runs the same all-unique overlapped stream three times per round —
+    obs off (metrics only, tracing disabled), obs fully on (tracing
+    enabled, sample_rate 1.0), and EXPLAIN-sampled (auto-explain at
+    :data:`DEFAULT_EXPLAIN_SAMPLE_RATE`, which splits sampled requests
+    into their own ``with_explain`` batches) — interleaved, keeping each
+    arm's best round (shared hosts drift; interleaving keeps the drift
+    off one arm).  Asserts all arms return **bit-equal** results, writes
+    the enabled arm's metrics registry (JSON + Prometheus text), trace
+    (JSONL + Perfetto ``trace_event`` timeline), and the explain arm's
+    sampled-explains JSON next to ``out``, and verifies the timeline
+    actually shows ring overlap (batch N+1's issue span inside batch N's
+    pending window, one lane up).  With ``gate`` the ≤ ``max_overhead``
+    overhead contract is a hard assert on the tracing *and* explain
+    arms — the CI hook.
     """
     data, queries = load_dataset(dataset, scale=scale)
     col = Collection.create(
@@ -260,16 +266,21 @@ def bench_obs(
     jitter = 1e-4 * np.arange(n_queries, dtype=np.float32)[:, None]
     stream = (tiled + jitter).astype(np.float32)
 
-    def run(traced: bool):
+    def run(traced: bool, explain_rate: float = 0.0):
         # private tracer per run: the global one must stay untouched so
         # the obs-off arm is genuinely off
         obs = Observability(
             registry=MetricsRegistry(),
             tracer=Tracer(enabled=False),
             trace=traced,
+            explain_sample_rate=explain_rate,
         )
+        # the singleton shape is what keeps explain sampling cheap: a
+        # sampled request batches separately (different compiled
+        # program), and without a (1,) rung it would pad out to a full
+        # batch_size dispatch — ~30% overhead instead of ~3% at 1/64
         svc = StoreService(
-            batch_shapes=(batch_size,), max_wait_ms=1e9, default_k=k,
+            batch_shapes=(1, batch_size), max_wait_ms=1e9, default_k=k,
             r0=0.5, steps=8, engine=engine, inflight_depth=2,
             cache_size=0, obs=obs,
         )
@@ -286,23 +297,40 @@ def bench_obs(
         i = np.stack([t.ids for t in tickets])
         return svc, obs, wall, d, i
 
-    run(False), run(True)  # warmup: compiles the (batch_size, d) program
+    # three arms: obs off, obs fully on (tracing), and explain sampling
+    # at the recommended production rate (splits sampled requests into
+    # their own with_explain batches — the cost under test)
+    ARMS = {
+        "off": lambda: run(False),
+        "on": lambda: run(True),
+        "explain": lambda: run(False,
+                               explain_rate=DEFAULT_EXPLAIN_SAMPLE_RATE),
+    }
+    for arm in ARMS.values():  # warmup: compiles both dispatch programs
+        arm()
     best = {}
     for _ in range(rounds):
-        for arm in (False, True):
-            svc, obs, wall, d, i = run(arm)
-            key = "on" if arm else "off"
+        for key, arm in ARMS.items():
+            svc, obs, wall, d, i = arm()
             if key not in best or wall < best[key][2]:
                 best[key] = (svc, obs, wall, d, i)
 
     _, _, wall_off, d_off, i_off = best["off"]
     svc_on, obs_on, wall_on, d_on, i_on = best["on"]
+    _, obs_ex, wall_ex, d_ex, i_ex = best["explain"]
 
     # contract 1: observability never changes results
     assert np.array_equal(d_off, d_on) and np.array_equal(i_off, i_on), (
         "obs-enabled results diverged from obs-off"
     )
+    # contract 1b: sampled EXPLAIN never changes results either — the
+    # explain'd requests run a separate compiled program but must land
+    # bit-equal where the plain dispatch would have put them
+    assert np.array_equal(d_off, d_ex) and np.array_equal(i_off, i_ex), (
+        "explain-sampled results diverged from explain-off"
+    )
     overhead = wall_on / wall_off - 1.0
+    overhead_ex = wall_ex / wall_off - 1.0
 
     # contract 2: the exported timeline shows the ring overlap
     overlap_ok = _overlap_visible(obs_on.tracer)
@@ -318,6 +346,10 @@ def bench_obs(
     obs_on.registry.export_prometheus(f"{stem}_metrics.prom")
     n_spans = obs_on.tracer.export_jsonl(f"{stem}_spans.jsonl")
     n_events = obs_on.tracer.export_perfetto(f"{stem}_trace.json")
+    n_explains = obs_ex.exemplars.export_json(f"{stem}_explains.json")
+    assert n_explains > 0, (
+        "explain arm sampled no requests — stride sampler broken?"
+    )
 
     report = {
         "mode": "obs",
@@ -330,7 +362,11 @@ def bench_obs(
         "device": str(jax.devices()[0]),
         "qps_off": n_queries / wall_off,
         "qps_on": n_queries / wall_on,
+        "qps_explain": n_queries / wall_ex,
         "overhead_frac": overhead,
+        "explain_overhead_frac": overhead_ex,
+        "explain_sample_rate": DEFAULT_EXPLAIN_SAMPLE_RATE,
+        "sampled_explains": n_explains,
         "max_overhead": max_overhead,
         "bit_equal": True,
         "overlap_ratio": stats["overlap_ratio"],
@@ -340,7 +376,8 @@ def bench_obs(
         "latency_ms_p50": stats["latency_ms_p50"],
         "latency_ms_p99": stats["latency_ms_p99"],
         "artifacts": [f"{stem}_metrics.json", f"{stem}_metrics.prom",
-                      f"{stem}_spans.jsonl", f"{stem}_trace.json"],
+                      f"{stem}_spans.jsonl", f"{stem}_trace.json",
+                      f"{stem}_explains.json"],
     }
     with open(out, "w") as f:
         json.dump(report, f, indent=2)
@@ -350,11 +387,21 @@ def bench_obs(
         f"(budget {max_overhead*100:.0f}%)  bit_equal=True "
         f"overlap_visible={overlap_ok}  spans={n_spans}"
     )
+    print(
+        f"[obs explain] qps={report['qps_explain']:.1f} "
+        f"overhead={overhead_ex*100:+.1f}% at sample_rate="
+        f"{DEFAULT_EXPLAIN_SAMPLE_RATE:.4f}  bit_equal=True "
+        f"sampled_explains={n_explains}"
+    )
     print(f"[report] -> {out}")
     if gate:
         assert overhead <= max_overhead, (
             f"obs-enabled overhead {overhead*100:.1f}% exceeds the "
             f"{max_overhead*100:.0f}% budget"
+        )
+        assert overhead_ex <= max_overhead, (
+            f"explain-sampled overhead {overhead_ex*100:.1f}% exceeds "
+            f"the {max_overhead*100:.0f}% budget"
         )
     return report
 

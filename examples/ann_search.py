@@ -90,6 +90,18 @@ def main(scale: float = 0.25, dataset: str = "sift-s"):
           f"(r0={t.plan.r0:.3f}), took {t.radius_steps} steps; "
           f"termination histogram {hist}")
 
+    # --- EXPLAIN ANALYZE one query: the full per-query story -------------
+    # (repro.obs.explain: plan provenance, cache/queue placement, the
+    # per-step half-windows + admitted slots the device measured, and
+    # which termination condition fired.  Explain'd requests batch
+    # separately and bypass the cache read, so results stay bit-equal
+    # to a plain submit of the same query.)
+    te = svc.submit("demo", queries[0], k=k, tenant="web", explain=True)
+    svc.flush()
+    assert np.array_equal(te.ids, ids_c[0])  # same answer, now explained
+    print("[explain]")
+    print(te.explain.render())
+
     # --- online growth: adds cross the policy threshold -> auto-compact ---
     # (every mutation bumps col.version, so cached results can't go stale)
     v0 = col.version

@@ -16,6 +16,9 @@ from .query import merge_dedup_topk, rc_nn, search, search_batch, probe_radius
 from .baselines import C2Index, FBLSH, MQIndex, brute_force
 from .serve_search import (
     ENGINES,
+    TERM_C1,
+    TERM_C2,
+    TERM_EXHAUSTED,
     PendingSearch,
     Termination,
     search_batch_fixed,
@@ -43,6 +46,9 @@ __all__ = [
     "Termination",
     "PendingSearch",
     "ENGINES",
+    "TERM_EXHAUSTED",
+    "TERM_C1",
+    "TERM_C2",
     "validate_engine",
     "merge_dedup_topk",
     "rc_nn",

@@ -141,10 +141,11 @@ def build_sharded(key, data, params_local: DBLSHParams, mesh,
 
 
 @partial(jax.jit, static_argnames=("k", "steps", "mesh", "with_stats",
-                                   "exact", "termination"))
+                                   "exact", "termination", "with_explain"))
 def search_sharded(s: ShardedDBLSH, Q: jax.Array, k: int = 0, r0: float = 1.0,
                    steps: int = 8, mesh=None, with_stats: bool = False,
-                   exact: bool = False, termination=None):
+                   exact: bool = False, termination=None,
+                   with_explain: bool = False):
     """Replicated queries -> (Q, k) global distances/ids.
 
     Returned ids live in the strided space ``gid = rank * stride +
@@ -165,17 +166,33 @@ def search_sharded(s: ShardedDBLSH, Q: jax.Array, k: int = 0, r0: float = 1.0,
     collectives inside the loop).  This is sound and conservative — a
     shard's local k-th distance upper-bounds the global k-th, so local
     C2 never fires before the global condition would, and local C1 sees
-    only the shard's own verified slots."""
+    only the shard's own verified slots.
+
+    ``with_explain`` (implies ``with_stats``) additionally returns the
+    per-shard EXPLAIN arrays *before* the pmax/psum collapse — the
+    ``repro.obs.explain`` attribution feed.  One extra all_gather of the
+    small per-query counters (no candidate data moves):
+
+    * ``shard_steps`` (P, Qn), ``shard_slots`` (P, Qn),
+      ``shard_cause`` (P, Qn) — each shard's schedule depth, verified
+      slots, and terminate cause for every query;
+    * ``step_slots`` (Qn, steps) — fleet-wide admitted-delta slots per
+      step (psum over shards; rows sum to ``stats['candidates']``);
+    * ``step_half`` (steps,), ``term_cause`` / ``final_radius`` (Qn,) —
+      the critical path's view: the cause/radius on the shard that ran
+      deepest (which set the pmax'd ``radius_steps``)."""
     p = s.index.params
     k = k or p.k
     axis = s.axis
     n_local, stride = s.n_local, s.stride
     space = s.id_space  # merge sentinel: one past the last valid gid
+    if with_explain:
+        with_stats = True
 
     def local_search(idx_tree, Qr):
         out = search_batch_fixed(
             idx_tree, Qr, k=k, r0=r0, steps=steps, with_stats=with_stats,
-            exact=exact, termination=termination,
+            exact=exact, termination=termination, with_explain=with_explain,
         )
         d, i = out[0], out[1]
         rank = jax.lax.axis_index(axis)
@@ -194,13 +211,39 @@ def search_sharded(s: ShardedDBLSH, Q: jax.Array, k: int = 0, r0: float = 1.0,
                 "radius_steps": jax.lax.pmax(out[2]["radius_steps"], axis),
                 "candidates": jax.lax.psum(out[2]["candidates"], axis),
             }
-            return merged + (stats,)
+            merged = merged + (stats,)
+        if with_explain:
+            lex = out[3]
+            shard_steps = jax.lax.all_gather(out[2]["radius_steps"], axis)
+            shard_slots = jax.lax.all_gather(out[2]["candidates"], axis)
+            shard_cause = jax.lax.all_gather(lex["term_cause"], axis)
+            shard_radius = jax.lax.all_gather(lex["final_radius"], axis)
+            # critical path = the shard whose schedule ran deepest (ties
+            # break to the lowest rank, matching pmax's value)
+            crit = jnp.argmax(shard_steps, axis=0)  # (Qn,)
+            take = lambda a: jnp.take_along_axis(a, crit[None], axis=0)[0]
+            explain = {
+                "step_half": lex["step_half"],  # replicated: same schedule
+                "step_slots": jax.lax.psum(lex["step_slots"], axis),
+                "term_cause": take(shard_cause),
+                "final_radius": take(shard_radius),
+                "shard_steps": shard_steps,
+                "shard_slots": shard_slots,
+                "shard_cause": shard_cause,
+            }
+            merged = merged + (explain,)
         return merged
 
     specs = _index_specs(axis, p)
     out_specs = (P(), P())
     if with_stats:
         out_specs = out_specs + ({"radius_steps": P(), "candidates": P()},)
+    if with_explain:
+        out_specs = out_specs + ({
+            "step_half": P(), "step_slots": P(), "term_cause": P(),
+            "final_radius": P(), "shard_steps": P(), "shard_slots": P(),
+            "shard_cause": P(),
+        },)
     return _shard_map(
         local_search, mesh=mesh,
         in_specs=(specs, P()), out_specs=out_specs,

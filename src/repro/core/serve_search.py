@@ -68,6 +68,9 @@ __all__ = [
     "PendingSearch",
     "validate_engine",
     "ENGINES",
+    "TERM_EXHAUSTED",
+    "TERM_C1",
+    "TERM_C2",
 ]
 
 _INF = jnp.inf
@@ -256,11 +259,18 @@ def _masked_delta_merge(best_d, best_i, delta, d2, ci, done, n, k):
     )
 
 
+#: ``explain["term_cause"]`` codes: why a query's schedule stopped
+#: advancing — C2 wins ties with C1 on the same step, mirroring the
+#: mask-update order of the dispatch itself.  ``repro.obs.explain``
+#: renders these into the human-readable record.
+TERM_EXHAUSTED, TERM_C1, TERM_C2 = 0, 1, 2
+
+
 @partial(
     jax.jit,
     static_argnames=(
         "k", "steps", "engine", "interpret", "with_stats", "exact",
-        "termination",
+        "termination", "with_explain",
     ),
 )
 def search_batch_fixed(
@@ -274,6 +284,7 @@ def search_batch_fixed(
     with_stats: bool = False,
     exact: bool = False,
     termination: Termination | None = None,
+    with_explain: bool = False,
 ):
     """Fixed-schedule batched (c,k)-ANN — one-pass incremental probing.
 
@@ -289,6 +300,12 @@ def search_batch_fixed(
         :class:`Termination` enables per-query adaptive termination
         (paper C1/C2 done masks + batch-wide while_loop early exit —
         the ``repro.tune`` subsystem's serving hook).
+      with_explain: additionally return the per-query *per-step* arrays
+        the stats reduce away (implies ``with_stats``): the EXPLAIN
+        ANALYZE feed for ``repro.obs.explain``.  The result arrays and
+        the done-mask updates are computed identically — explain only
+        *observes* — so distances/ids are bit-equal to the
+        ``with_explain=False`` program.
 
     Returns: (Qn, k) distances ascending, (Qn, k) ids; with ``with_stats``
     a third element ``{"radius_steps": (Qn,) int32, "candidates": (Qn,)
@@ -297,8 +314,20 @@ def search_batch_fixed(
     (all tables) counts its B slots once, at the step its window first
     overlaps it, and never while the query is already done.  Padded
     selection slots (blk == nb) are not work and are not counted.
+
+    With ``with_explain`` a fourth element::
+
+        {"step_half":    (steps,)     f32  per-step window halfwidths,
+         "step_slots":   (Qn, steps)  i32  admitted-delta slots per step
+                                           (rows sum to ``candidates``),
+         "term_cause":   (Qn,)        i32  TERM_EXHAUSTED | TERM_C1 |
+                                           TERM_C2 (first rule to fire),
+         "final_radius": (Qn,)        f32  radius at termination (the
+                                           certified radius under C2)}
     """
     validate_engine(engine)
+    if with_explain:
+        with_stats = True
     p = index.params
     k = k or p.k
     n = index.n
@@ -342,6 +371,16 @@ def search_batch_fixed(
     done = jnp.zeros((Qn,), bool)
     radius_steps = jnp.zeros((Qn,), jnp.int32)
     candidates = jnp.zeros((Qn,), jnp.int32)
+    # explain accumulators: fixed (Qn, steps)/(Qn,) shapes so the same
+    # dict threads through the unrolled loop and the while_loop carry
+    # (per-step writes land via a one-hot on the step index)
+    ex = None
+    if with_explain:
+        ex = {
+            "step_slots": jnp.zeros((Qn, steps), jnp.int32),
+            "term_cause": jnp.full((Qn,), TERM_EXHAUSTED, jnp.int32),
+            "final_radius": jnp.zeros((Qn,), jnp.float32),
+        }
 
     c1_thr = None
     if termination is not None and termination.use_c1:
@@ -350,8 +389,8 @@ def search_batch_fixed(
         )
     use_c2 = True if termination is None else termination.use_c2
 
-    def schedule_step(r, prev_half, best_d, best_i, done, radius_steps,
-                      candidates):
+    def schedule_step(j, r, prev_half, best_d, best_i, done, radius_steps,
+                      candidates, ex):
         half = 0.5 * (p.w0 * r)
         if with_stats:
             active = ~done
@@ -359,6 +398,10 @@ def search_batch_fixed(
             newly = (bhw_q <= half) & (bhw_q > prev_half)  # (Qn, S)
             n_slots = jnp.sum(newly.astype(jnp.int32), axis=1) * B
             candidates = candidates + jnp.where(active, n_slots, 0)
+            if with_explain:
+                onehot = (jnp.arange(steps) == j).astype(jnp.int32)
+                ex = dict(ex, step_slots=ex["step_slots"]
+                          + jnp.where(active, n_slots, 0)[:, None] * onehot)
 
         # newly-admitted delta slice: slots whose window first reaches
         # them at this radius (hw = +inf slots never admit); finished
@@ -369,7 +412,17 @@ def search_batch_fixed(
                 best_d, best_i, delta, d2, ci, done, n, k
             )
         if use_c2:
-            done = done | (best_d[:, k - 1] <= jnp.square(p.c * r))
+            fired = best_d[:, k - 1] <= jnp.square(p.c * r)
+            if with_explain:
+                newly_done = fired & ~done
+                ex = dict(
+                    ex,
+                    term_cause=jnp.where(newly_done, TERM_C2,
+                                         ex["term_cause"]),
+                    final_radius=jnp.where(newly_done, r,
+                                           ex["final_radius"]),
+                )
+            done = done | fired
         if c1_thr is not None:
             # C1 from the halfwidths the verify engines already emitted:
             # slots the current window admits whose distance is finite
@@ -377,16 +430,26 @@ def search_batch_fixed(
             n_adm = jnp.sum(
                 ((hw <= half) & jnp.isfinite(d2)).astype(jnp.int32), axis=1
             )
-            done = done | (n_adm >= c1_thr)
-        return half, best_d, best_i, done, radius_steps, candidates
+            fired = n_adm >= c1_thr
+            if with_explain:
+                newly_done = fired & ~done
+                ex = dict(
+                    ex,
+                    term_cause=jnp.where(newly_done, TERM_C1,
+                                         ex["term_cause"]),
+                    final_radius=jnp.where(newly_done, r,
+                                           ex["final_radius"]),
+                )
+            done = done | fired
+        return half, best_d, best_i, done, radius_steps, candidates, ex
 
     if termination is None:
         r = jnp.asarray(r0, jnp.float32)
         prev_half = -_INF
-        for _ in range(steps):
-            prev_half, best_d, best_i, done, radius_steps, candidates = (
-                schedule_step(r, prev_half, best_d, best_i, done,
-                              radius_steps, candidates)
+        for j in range(steps):
+            prev_half, best_d, best_i, done, radius_steps, candidates, ex = (
+                schedule_step(j, r, prev_half, best_d, best_i, done,
+                              radius_steps, candidates, ex)
             )
             r = r * p.c
     else:
@@ -395,31 +458,51 @@ def search_batch_fixed(
         # chain (bit-equal radii), exiting as soon as every query's done
         # mask fired — frozen state makes the exit result-invisible
         def cond_fn(carry):
-            j, _, _, _, _, done, _, _ = carry
+            j, _, _, _, _, done = carry[:6]
             more = j < steps
             if termination.early_exit:
                 more = more & ~jnp.all(done)
             return more
 
         def body_fn(carry):
-            j, r, prev_half, best_d, best_i, done, radius_steps, cands = carry
-            prev_half, best_d, best_i, done, radius_steps, cands = (
-                schedule_step(r, prev_half, best_d, best_i, done,
-                              radius_steps, cands)
+            j, r, prev_half, best_d, best_i, done, radius_steps, cands, ex = (
+                carry
+            )
+            prev_half, best_d, best_i, done, radius_steps, cands, ex = (
+                schedule_step(j, r, prev_half, best_d, best_i, done,
+                              radius_steps, cands, ex)
             )
             return (j + 1, r * p.c, prev_half, best_d, best_i, done,
-                    radius_steps, cands)
+                    radius_steps, cands, ex)
 
         carry = (
             jnp.asarray(0, jnp.int32),
             jnp.asarray(r0, jnp.float32),
             jnp.asarray(-_INF, jnp.float32),
-            best_d, best_i, done, radius_steps, candidates,
+            best_d, best_i, done, radius_steps, candidates, ex,
         )
-        (_, _, _, best_d, best_i, done, radius_steps, candidates) = (
+        (_, _, _, best_d, best_i, done, radius_steps, candidates, ex) = (
             jax.lax.while_loop(cond_fn, body_fn, carry)
         )
 
+    if with_explain:
+        # exhausted queries (cause 0) terminated at the schedule's final
+        # radius; the per-step halfwidths replay the same multiply chain
+        # the loop ran, so they match the admission masks bit-for-bit
+        halves, rr = [], jnp.asarray(r0, jnp.float32)
+        for _ in range(steps):
+            halves.append(0.5 * (p.w0 * rr))
+            rr = rr * p.c
+        ex = dict(
+            ex,
+            step_half=jnp.stack(halves),
+            final_radius=jnp.where(
+                ex["term_cause"] == TERM_EXHAUSTED, r_last,
+                ex["final_radius"],
+            ),
+        )
+        stats = {"radius_steps": radius_steps, "candidates": candidates}
+        return jnp.sqrt(best_d), best_i, stats, ex
     if with_stats:
         stats = {"radius_steps": radius_steps, "candidates": candidates}
         return jnp.sqrt(best_d), best_i, stats
@@ -571,17 +654,20 @@ class PendingSearch:
     scheduler to opportunistically retire in-flight batches).
     """
 
-    __slots__ = ("dists", "ids", "stats")
+    __slots__ = ("dists", "ids", "stats", "explain")
 
-    def __init__(self, dists, ids, stats=None):
+    def __init__(self, dists, ids, stats=None, explain=None):
         self.dists = dists
         self.ids = ids
         self.stats = stats
+        self.explain = explain  # device-side per-step arrays, or None
 
     def _leaves(self):
         leaves = [self.dists, self.ids]
         if self.stats is not None:
             leaves.extend(jax.tree_util.tree_leaves(self.stats))
+        if self.explain is not None:
+            leaves.extend(jax.tree_util.tree_leaves(self.explain))
         return leaves
 
     def ready(self) -> bool:
@@ -609,6 +695,7 @@ def search_batch_fixed_dispatch(
     with_stats: bool = False,
     exact: bool = False,
     termination: Termination | None = None,
+    with_explain: bool = False,
 ) -> PendingSearch:
     """Issue a fixed-schedule search without blocking on the device.
 
@@ -622,8 +709,10 @@ def search_batch_fixed_dispatch(
     out = search_batch_fixed(
         index, Q, k=k, r0=r0, steps=steps, engine=engine,
         interpret=interpret, with_stats=with_stats, exact=exact,
-        termination=termination,
+        termination=termination, with_explain=with_explain,
     )
+    if with_explain:
+        return PendingSearch(out[0], out[1], out[2], out[3])
     if with_stats:
         return PendingSearch(out[0], out[1], out[2])
     return PendingSearch(out[0], out[1])

@@ -52,6 +52,12 @@ Typical use::
         print(breach.message)                 # the ROADMAP-5 drift signal
 """
 
+from .explain import (
+    DEFAULT_EXPLAIN_SAMPLE_RATE,
+    ExemplarReservoir,
+    QueryExplain,
+    TERM_CAUSE_NAMES,
+)
 from .metrics import (
     Counter,
     Gauge,
@@ -66,12 +72,16 @@ from .trace import Span, Tracer, get_tracer
 __all__ = [
     "BreachEvent",
     "Counter",
+    "DEFAULT_EXPLAIN_SAMPLE_RATE",
+    "ExemplarReservoir",
     "Gauge",
     "Histogram",
     "MetricsRegistry",
     "Observability",
+    "QueryExplain",
     "SLOWatch",
     "Span",
+    "TERM_CAUSE_NAMES",
     "Tracer",
     "default_registry",
     "expected_step_pmf",
@@ -94,17 +104,50 @@ class Observability:
 
     def __init__(self, *, registry: MetricsRegistry | None = None,
                  tracer: Tracer | None = None, trace: bool = False,
-                 sample_rate: float | None = None):
+                 sample_rate: float | None = None,
+                 exemplars: ExemplarReservoir | None = None,
+                 explain_sample_rate: float = 0.0):
         self.registry = registry if registry is not None else MetricsRegistry()
         self.tracer = tracer if tracer is not None else get_tracer()
         if trace:
             self.tracer.enable(sample_rate)
         self.slo: SLOWatch | None = None
+        # tail-latency exemplars: every served ticket's (latency, uid)
+        # lands here; explain'd tickets keep their full QueryExplain, and
+        # SLO breaches pull the worst-k back out (obs.explain)
+        self.exemplars = (
+            exemplars if exemplars is not None else ExemplarReservoir()
+        )
+        # auto-explain sampling: submit(explain=None) explains 1 request
+        # in round(1/rate), counter-based (deterministic under test, like
+        # the tracer's sampler).  Off by default (rate 0) — explicit
+        # submit(explain=True) always works; pass
+        # explain_sample_rate=DEFAULT_EXPLAIN_SAMPLE_RATE to arm the
+        # production tail-exemplar feed
+        self.explain_sample_rate = explain_sample_rate
+        self._explain_stride = (
+            round(1.0 / explain_sample_rate) if explain_sample_rate > 0
+            else 0
+        )
+        self._explain_seen = 0
+
+    def should_explain(self) -> bool:
+        """Deterministic counter-based sampler for auto-explain: true
+        once per ``round(1/explain_sample_rate)`` calls (first call
+        fires, so short tests and thin traffic still sample)."""
+        if self._explain_stride <= 0:
+            return False
+        hit = self._explain_seen % self._explain_stride == 0
+        self._explain_seen += 1
+        return hit
 
     def watch(self, collection: str, **kw) -> SLOWatch:
         """Arm (and return) an :class:`SLOWatch` over ``collection`` on
         this bundle's registry/tracer; stored on ``self.slo`` so a
-        service can drive ``maybe_check`` from its scheduler loop."""
+        service can drive ``maybe_check`` from its scheduler loop.
+        The bundle's exemplar reservoir rides along by default, so
+        breaches carry rendered tail explains."""
         kw.setdefault("tracer", self.tracer)
+        kw.setdefault("exemplars", self.exemplars)
         self.slo = SLOWatch(self.registry, collection, **kw)
         return self.slo

@@ -233,14 +233,27 @@ class MetricsRegistry:
 
     # ------------------------------------------------------------- export
     @staticmethod
-    def _fmt_labels(labels: dict, extra: dict | None = None) -> str:
+    def _escape_label_value(v) -> str:
+        # text exposition format: backslash, double-quote, and newline
+        # must be escaped inside label values (backslash first, or the
+        # other escapes get double-escaped)
+        return (
+            str(v)
+            .replace("\\", "\\\\")
+            .replace('"', '\\"')
+            .replace("\n", "\\n")
+        )
+
+    @classmethod
+    def _fmt_labels(cls, labels: dict, extra: dict | None = None) -> str:
         merged = dict(labels)
         if extra:
             merged.update(extra)
         if not merged:
             return ""
         inner = ",".join(
-            f'{k}="{v}"' for k, v in sorted(merged.items(), key=lambda kv: str(kv[0]))
+            f'{k}="{cls._escape_label_value(v)}"'
+            for k, v in sorted(merged.items(), key=lambda kv: str(kv[0]))
         )
         return "{" + inner + "}"
 
@@ -269,7 +282,8 @@ class MetricsRegistry:
                 for labels, v in fam.series():
                     lab = self._fmt_labels(labels)
                     lines.append(f"{fam.name}{lab} {self._fmt_num(v)}")
-        return "\n".join(lines) + "\n"
+        # an empty registry exports valid (empty) text, not a bare "\n"
+        return "\n".join(lines) + "\n" if lines else ""
 
     def to_json(self) -> dict:
         """JSON-serializable dump: the benchmark / CI artifact shape."""

@@ -27,6 +27,13 @@ the breach), :meth:`SLOWatch.maybe_check` rate-limits it for serving
 loops.  Breaches append to :attr:`SLOWatch.events` (bounded), count in
 the registry (``repro_store_slo_breaches_total``), mark the trace
 timeline, and invoke an optional callback.
+
+When an :class:`~repro.obs.explain.ExemplarReservoir` is attached
+(``exemplars=``), each breach additionally carries the worst-k
+tail-latency exemplars in ``detail["exemplars"]`` — ticket uid, latency,
+and (for sampled/explain'd queries) the *rendered*
+:class:`~repro.obs.explain.QueryExplain` — so a p99 page names actual
+queries and their per-step window/slot story, not just a percentile.
 """
 
 from __future__ import annotations
@@ -116,6 +123,8 @@ class SLOWatch:
         tracer: Tracer | None = None,
         on_breach=None,
         on_check=None,
+        exemplars=None,
+        exemplar_k: int = 3,
     ):
         self.registry = registry
         self.collection = collection
@@ -134,6 +143,10 @@ class SLOWatch:
         # full outcome — `([], now)` for a clean window — which is what a
         # consumer that must *heal* (resilience.BrownoutController) needs
         self.on_check = on_check
+        # tail-latency exemplar reservoir (repro.obs.explain): breaches
+        # attach the worst-k sampled tickets with rendered explains
+        self.exemplars = exemplars
+        self.exemplar_k = exemplar_k
         self.events: deque[BreachEvent] = deque(maxlen=max_events)
         self._breaches = registry.counter(
             "repro_store_slo_breaches_total", "SLO breach events by kind"
@@ -177,6 +190,33 @@ class SLOWatch:
     # ------------------------------------------------------------- checking
     def _emit(self, kind: str, now: float, observed: float, threshold: float,
               detail: dict, message: str) -> BreachEvent:
+        if self.exemplars is not None:
+            # prefer sampled exemplars whose full explain is in hand; fall
+            # back to bare (uid, latency) pairs only when nothing sampled
+            worst = self.exemplars.worst(
+                self.exemplar_k, collection=self.collection,
+                with_explain_only=True,
+            ) or self.exemplars.worst(
+                self.exemplar_k, collection=self.collection
+            )
+            detail = dict(
+                detail,
+                exemplars=[
+                    {
+                        "uid": w["uid"],
+                        "latency_ms": w["latency_ms"],
+                        "explain": (
+                            None if w["explain"] is None
+                            else w["explain"].to_dict()
+                        ),
+                        "rendered": (
+                            None if w["explain"] is None
+                            else w["explain"].render()
+                        ),
+                    }
+                    for w in worst
+                ],
+            )
         ev = BreachEvent(
             kind=kind, collection=self.collection, t=now, observed=observed,
             threshold=threshold, detail=detail, message=message,

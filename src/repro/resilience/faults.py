@@ -54,6 +54,7 @@ __all__ = [
     "SNAPSHOT_WRITE_SITES",
     "SimulatedCrash",
     "active",
+    "active_plan",
     "fire",
     "install",
     "uninstall",
@@ -198,6 +199,14 @@ def install(plan: FaultPlan) -> FaultPlan:
 def uninstall() -> None:
     global _ACTIVE
     _ACTIVE = None
+
+
+def active_plan() -> FaultPlan | None:
+    """The currently installed plan, or ``None``.  Observability reads
+    this (never mutates): the service's EXPLAIN path snapshots
+    ``len(plan.fired)`` around a dispatch to attribute fault sites hit
+    to the batch that hit them."""
+    return _ACTIVE
 
 
 @contextlib.contextmanager

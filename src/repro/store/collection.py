@@ -171,6 +171,7 @@ class Collection(CollectionLifecycle):
         rows: int | None = None,
         exact: bool = False,
         termination=None,
+        with_explain: bool = False,
     ):
         """Batched (c,k)-ANN through the fixed-schedule serving path.
 
@@ -180,7 +181,9 @@ class Collection(CollectionLifecycle):
         fixed batch-shape menu); the query counter advances by ``rows``,
         not the padded shape.  The returned arrays are device futures —
         nothing here blocks, so a caller may overlap host work with the
-        search (DESIGN.md §6).
+        search (DESIGN.md §6).  ``with_explain`` (implies
+        ``with_stats``) appends the per-query per-step EXPLAIN arrays —
+        see :func:`~repro.core.serve_search.search_batch_fixed`.
         """
         Q = jnp.atleast_2d(jnp.asarray(Q, jnp.float32))
         self._count_queries(Q, rows)
@@ -188,7 +191,7 @@ class Collection(CollectionLifecycle):
             self.index, Q, k=k, r0=r0, steps=steps,
             engine=engine or self.default_engine or "jnp",
             with_stats=with_stats, interpret=interpret, exact=exact,
-            termination=termination,
+            termination=termination, with_explain=with_explain,
         )
 
     # ------------------------------------------------------------ persistence

@@ -287,6 +287,7 @@ class ShardedCollection(CollectionLifecycle):
         rows: int | None = None,
         exact: bool = False,
         termination=None,
+        with_explain: bool = False,
     ):
         """Global (c,k)-ANN: per-shard fixed-schedule search + all_gather
         top-k merge. ``engine`` / ``interpret`` are accepted for API
@@ -298,7 +299,10 @@ class ShardedCollection(CollectionLifecycle):
         radius_steps by pmax), so ``svc.stats()`` reports real per-query
         probe effort for sharded collections.  ``termination`` applies
         per shard (each device runs its own C1/C2 masks and while_loop
-        exit — see ``search_sharded``)."""
+        exit — see ``search_sharded``).  ``with_explain`` appends the
+        per-step EXPLAIN arrays *with per-shard attribution* (steps /
+        slots / cause per shard, gathered before the pmax/psum
+        collapse — see ``search_sharded``)."""
         del engine, interpret
         Q = jnp.atleast_2d(jnp.asarray(Q, jnp.float32))
         self._count_queries(Q, rows)
@@ -310,6 +314,7 @@ class ShardedCollection(CollectionLifecycle):
         return search_sharded(
             self.sharded, Q, k=k, r0=r0, steps=steps, mesh=self.mesh,
             with_stats=with_stats, exact=exact, termination=termination,
+            with_explain=with_explain,
         )
 
     # ------------------------------------------------------------ persistence

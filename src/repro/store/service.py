@@ -63,6 +63,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import hashlib
 import math
 import time
 from collections import deque
@@ -72,6 +73,7 @@ import numpy as np
 
 from ..core.serve_search import PendingSearch, validate_engine
 from ..obs import Observability
+from ..obs.explain import TERM_CAUSE_NAMES, QueryExplain
 from ..obs.metrics import LATENCY_MS_BUCKETS, MetricsRegistry
 from ..obs.trace import TID_RING0, TID_SCHEDULER
 from ..resilience import faults
@@ -81,7 +83,7 @@ from ..tune.policy import (
     LatencyBudget,
     RecallTarget,
     ResolvedPlan,
-    resolve_policy,
+    resolve_policy_with_source,
 )
 from .cache import CachedResult, QueryResultCache
 
@@ -152,6 +154,12 @@ class QueryRequest:
     latency_ms: float = 0.0
     radius_steps: int = 0
     candidates: int = 0
+    explain: QueryExplain | None = None  # EXPLAIN ANALYZE record, present
+                                         # when submit(..., explain=True)
+                                         # asked or auto-sampling picked
+                                         # this ticket; filled progressively
+                                         # through drain/issue/complete and
+                                         # whole once done=True
 
 
 @dataclasses.dataclass(frozen=True)
@@ -247,7 +255,12 @@ class _TenantStats:
         )
         self._failed = r.counter(
             "repro_store_tenant_failed_total",
-            "Tenant requests terminated with a typed error",
+            "Tenant requests terminated with a typed error, by kind",
+        )
+        self._degraded = r.counter(
+            "repro_store_tenant_degraded_total",
+            "Tenant requests served flagged-degraded (cut schedule or "
+            "past deadline)",
         )
         self._window = _WindowClock(
             r.gauge("repro_store_tenant_window_start_seconds",
@@ -270,15 +283,26 @@ class _TenantStats:
         self._served.inc(tenant=self.tenant)
         if req.cached:
             self._hits.inc(tenant=self.tenant)
+        if req.degraded:
+            self._degraded.inc(tenant=self.tenant)
         self._window.record(req.submitted, now)
 
-    def record_failed(self):
-        self._failed.inc(tenant=self.tenant)
+    def record_failed(self, kind: str = "error"):
+        self._failed.inc(tenant=self.tenant, kind=kind)
+
+    def _failed_by_kind(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for labels, v in self._failed.series():
+            if labels.get("tenant") == self.tenant:
+                out[labels.get("kind", "error")] = \
+                    out.get(labels.get("kind", "error"), 0) + int(v)
+        return out
 
     def snapshot(self) -> dict:
         t = dict(tenant=self.tenant)
         served = self._served.value(**t)
         span = self._window.span()
+        failed = self._failed_by_kind()
         return {
             "submitted": int(
                 self._submitted.value(**t) - self._withdrawn.value(**t)
@@ -286,7 +310,9 @@ class _TenantStats:
             "served": int(served),
             "rejected": int(self._rejected.value(**t)),
             "cache_hits": int(self._hits.value(**t)),
-            "failed": int(self._failed.value(**t)),
+            "failed": sum(failed.values()),
+            "deadline_exceeded": failed.get("deadline", 0),
+            "degraded": int(self._degraded.value(**t)),
             "qps": served / span if span > 0 else 0.0,
         }
 
@@ -470,6 +496,8 @@ class _InFlight:
     seq: int = 0           # monotonic batch number (trace correlation)
     tid: int = TID_RING0   # trace lane = TID_RING0 + ring slot at issue
     t_issued: float = 0.0  # when the issue stage handed it to the device
+    retries: int = 0       # transient-dispatch retries the issue burned
+    fault_sites: tuple = ()  # injected fault sites the dispatch hit
 
 
 class StoreService:
@@ -631,20 +659,29 @@ class StoreService:
         table.  No policy anywhere resolves to the service's own
         (r0, steps) with no adaptive termination — the pre-tune dispatch,
         bit-for-bit."""
+        return self._resolve_plan_ex(collection, policy)[0]
+
+    def _resolve_plan_ex(self, collection: str, policy=None):
+        """:meth:`resolve_plan` plus the provenance EXPLAIN records:
+        ``(plan, source, policy, table_used)`` where ``source`` names the
+        resolution rung that won ("request"/"collection"/"service", or
+        "default" when no rung supplied a policy)."""
         col = self.collections[collection]
-        policy = resolve_policy(
+        policy, source = resolve_policy_with_source(
             policy, getattr(col, "search_policy", None), self.default_policy
         )
-        return _planner.plan(
-            getattr(col, "calibration", None), policy,
-            default_r0=self.r0, default_steps=self.steps,
+        table = getattr(col, "calibration", None)
+        plan = _planner.plan(
+            table, policy, default_r0=self.r0, default_steps=self.steps,
         )
+        return plan, source, policy, table is not None
 
     def submit(
         self, collection: str, query, k: int | None = None,
         tenant: str = "default", engine: str | None = None,
         policy=None, recall_target: float | None = None,
         deadline_ms: float | None = None,
+        explain: bool | None = None,
     ) -> QueryRequest:
         """Enqueue one query; returns its ticket (filled once dispatched).
         ``engine`` overrides the collection / service engine defaults for
@@ -654,10 +691,19 @@ class StoreService:
         end-to-end budget: a ticket still queued past it terminates with
         a typed :class:`DeadlineExceeded` instead of dispatching, a
         ticket that can only fit the remaining budget on a shorter
-        schedule is re-planned and flagged ``degraded``.  Raises
-        :class:`QuotaExceeded` when the tenant is over quota — rejected
-        requests are never enqueued — and :class:`BrownoutShed` when the
-        degradation ladder is shedding this tenant's load."""
+        schedule is re-planned and flagged ``degraded``.  ``explain=True``
+        attaches an EXPLAIN ANALYZE record (``ticket.explain``, a
+        :class:`~repro.obs.explain.QueryExplain`) filled through the
+        ticket's lifetime — plan provenance, queue/batch/cache story,
+        the device's per-step window/slot measurements and terminate
+        cause; ``explain=None`` (default) auto-samples at the bundle's
+        ``explain_sample_rate``; ``explain=False`` never explains.
+        Explain'd requests bypass the result-cache read (annotated, so
+        the device story is always real) and batch separately — results
+        stay bit-equal either way.  Raises :class:`QuotaExceeded` when
+        the tenant is over quota — rejected requests are never enqueued
+        — and :class:`BrownoutShed` when the degradation ladder is
+        shedding this tenant's load."""
         if collection not in self.collections:
             raise KeyError(f"unknown collection {collection!r}")
         if recall_target is not None:
@@ -665,8 +711,10 @@ class StoreService:
                 raise ValueError("pass either policy= or recall_target=, not both")
             policy = RecallTarget(recall_target)
         engine = self.resolve_engine(collection, engine)
-        plan = self.resolve_plan(collection, policy)
+        plan, plan_source, plan_policy, plan_table = \
+            self._resolve_plan_ex(collection, policy)
         degraded = False
+        replanned = None
         if self.brownout is not None:
             if self.brownout.should_shed(tenant):
                 self._tstats(tenant).record_rejected()
@@ -675,6 +723,8 @@ class StoreService:
                     f"{self.brownout.level}"
                 )
             plan, degraded = self.brownout.apply_plan(plan)
+            if degraded:
+                replanned = "brownout"
         k = self.default_k if k is None else k
         if k > self.default_k:
             raise ValueError(
@@ -711,6 +761,26 @@ class StoreService:
             degraded=degraded,
             traced=self.tracer.should_sample(),
         )
+        if explain or (explain is None and self.obs.should_explain()):
+            req.explain = QueryExplain(
+                uid=req.uid, collection=collection, tenant=tenant,
+                engine=engine, plan_r0=plan.r0, plan_steps=plan.steps,
+                plan_termination=(
+                    None if plan.termination is None
+                    else repr(plan.termination)
+                ),
+                plan_source=plan_source,
+                plan_policy=(
+                    None if plan_policy is None else repr(plan_policy)
+                ),
+                plan_table=plan_table,
+                replanned=replanned,
+                brownout_level=(
+                    self.brownout.level if self.brownout is not None else 0
+                ),
+                degraded=degraded,
+                traced=req.traced,
+            )
         self._uid += 1
         self._queues[collection].setdefault(tenant, deque()).append(req)
         tstats.record_submitted()
@@ -754,10 +824,14 @@ class StoreService:
                     break
                 reqs = self._drain_wrr(name, cap)
                 drained += len(reqs)
-                if self.tracer.enabled:
+                if self.tracer.enabled or \
+                        any(r.explain is not None for r in reqs):
                     t_drain = self._clock()
                     for r in reqs:
-                        if r.traced:
+                        if r.explain is not None:
+                            r.explain.queue_wait_ms = \
+                                (t_drain - r.submitted) * 1e3
+                        if r.traced and self.tracer.enabled:
                             self.tracer.add_span(
                                 "request.queue_wait", r.submitted, t_drain,
                                 cat="request", uid=r.uid, tenant=r.tenant,
@@ -766,15 +840,20 @@ class StoreService:
                 reqs = self._apply_deadlines(name, reqs)
                 misses = self._serve_cached(name, reqs)
                 if misses:
-                    # one device program per (engine, plan): split mixed
-                    # batches (requests resolve engines and plans at
-                    # submit, so a batch is mixed only under per-request
-                    # overrides / policies)
+                    # one device program per (engine, plan, explain):
+                    # split mixed batches (requests resolve engines and
+                    # plans at submit, so a batch is mixed only under
+                    # per-request overrides / policies / sampled
+                    # explains — the explain variant is a different
+                    # compiled program returning the per-step arrays)
                     by_prog: dict[tuple, list[QueryRequest]] = {}
                     for r in misses:
-                        by_prog.setdefault((r.engine, r.plan), []).append(r)
-                    for (eng, plan), group in by_prog.items():
-                        self._issue(name, group, eng, plan)
+                        by_prog.setdefault(
+                            (r.engine, r.plan, r.explain is not None), []
+                        ).append(r)
+                    for (eng, plan, explained), group in by_prog.items():
+                        self._issue(name, group, eng, plan,
+                                    with_explain=explained)
         self._g_queue.set(self.pending())
         if force:
             self._complete_all()
@@ -841,7 +920,7 @@ class StoreService:
         r.done = True
         r.latency_ms = (now - r.submitted) * 1e3
         self._stats[name].record_failed(kind)
-        self._tstats(r.tenant).record_failed()
+        self._tstats(r.tenant).record_failed(kind)
         if r.traced:
             self.tracer.instant(
                 "request.failed", cat="request", t=now,
@@ -898,6 +977,18 @@ class StoreService:
                 if tight.steps < r.plan.steps:
                     r.plan = tight
                     r.degraded = True
+                    if r.explain is not None:
+                        # the schedule the ticket will actually run is no
+                        # longer the one resolution produced: re-stamp it
+                        # and name the deadline re-plan as the cause
+                        r.explain.replanned = "deadline"
+                        r.explain.degraded = True
+                        r.explain.plan_r0 = tight.r0
+                        r.explain.plan_steps = tight.steps
+                        r.explain.plan_termination = (
+                            None if tight.termination is None
+                            else repr(tight.termination)
+                        )
             out.append(r)
         return out
 
@@ -909,21 +1000,47 @@ class StoreService:
             plan.steps, plan.termination,
         )
 
+    @staticmethod
+    def _cache_key_str(key: tuple) -> str:
+        """Human-readable form of a cache key for EXPLAIN records (the
+        raw key embeds the query bytes; here they become a short
+        digest)."""
+        name, version, qbytes, k, engine, r0, steps, term = key
+        qh = hashlib.blake2b(qbytes, digest_size=6).hexdigest()
+        return (
+            f"{name}@v{version}/q:{qh}/k{k}/{engine}/r0={r0:g}/s{steps}"
+            + ("" if term is None else "/adaptive")
+        )
+
     def _serve_cached(self, name: str, reqs: list[QueryRequest]):
-        """Fill cache hits in place; returns the misses to dispatch."""
+        """Fill cache hits in place; returns the misses to dispatch.
+        Explain'd requests are never cache-served silently: they bypass
+        the read (annotated with the key they would have probed) so the
+        EXPLAIN record always carries a real device story; their results
+        are still published to the cache at completion."""
         if self.cache is None:
+            for r in reqs:
+                if r.explain is not None:
+                    r.explain.cache_outcome = "uncached"
             return reqs
         # no version attribute -> no invalidation signal: never cache
         # (serving version-0 hits forever is exactly the staleness the
         # version contract exists to prevent)
         version = getattr(self.collections[name], "version", None)
         if version is None:
+            for r in reqs:
+                if r.explain is not None:
+                    r.explain.cache_outcome = "uncached"
             return reqs
         misses = []
         for r in reqs:
-            entry = self.cache.get(
-                self._cache_key(name, version, r.query, r.engine, r.plan)
-            )
+            key = self._cache_key(name, version, r.query, r.engine, r.plan)
+            if r.explain is not None:
+                r.explain.cache_outcome = "bypass"
+                r.explain.cache_key = self._cache_key_str(key)
+                misses.append(r)
+                continue
+            entry = self.cache.get(key)
             if entry is None:
                 misses.append(r)
                 continue
@@ -946,14 +1063,20 @@ class StoreService:
                 )
             self._stats[name].record_hit(r, now)
             self._tstats(r.tenant).record_served(r, now)
+            self.obs.exemplars.record(r.latency_ms, r.uid, name)
         return misses
 
     # ------------------------------------------------- issue / complete stages
     def _issue(self, name: str, reqs: list[QueryRequest],
                engine: str | None = None,
-               plan: ResolvedPlan | None = None) -> None:
+               plan: ResolvedPlan | None = None,
+               with_explain: bool = False) -> None:
         """Stage 1: pad host-side and put the batch on the device without
-        blocking (``col.search`` returns device futures)."""
+        blocking (``col.search`` returns device futures).  With
+        ``with_explain`` the dispatch runs the explain variant of the
+        compiled search (per-query per-step arrays ride back with the
+        results) and the batch records its retry count and the fault
+        sites its dispatch hit, for the tickets' EXPLAIN records."""
         col = self.collections[name]
         if engine is None:
             engine = self.resolve_engine(name)
@@ -987,7 +1110,15 @@ class StoreService:
             jax.profiler.TraceAnnotation(f"store.dispatch.{name}")
             if traced else contextlib.nullcontext()
         )
+        # explain travels as an opt-in kwarg (like termination) so plain
+        # attachables that predate it keep working on the default path
+        explain_kw = {"with_explain": True} if with_explain else {}
+        # fault-site attribution: anything the active plan fires between
+        # here and a successful dispatch belongs to this batch
+        fplan = faults.active_plan()
+        fired0 = len(fplan.fired) if fplan is not None else 0
         attempts = 0
+        explain_arrays = None
         while True:
             try:
                 # fault sites (no-ops without an installed plan): an
@@ -997,13 +1128,17 @@ class StoreService:
                             scale=plan.steps)
                 faults.fire("dispatch.raise", collection=name, engine=engine)
                 with dispatch_ctx:
-                    dists, ids, stats = col.search(
+                    out = col.search(
                         Q, k=self.default_k, r0=plan.r0, steps=plan.steps,
                         engine=engine, with_stats=True,
                         interpret=self.interpret,
                         rows=m,  # only m of `shape` rows are real queries
-                        **term_kw,
+                        **term_kw, **explain_kw,
                     )
+                    if with_explain:
+                        dists, ids, stats, explain_arrays = out
+                    else:
+                        dists, ids, stats = out
                     payload = None
                     if getattr(col, "payload", None) is not None:
                         # async gather, same stream
@@ -1042,7 +1177,7 @@ class StoreService:
             name=name,
             reqs=reqs,
             shape=shape,
-            pending=PendingSearch(dists, ids, stats),
+            pending=PendingSearch(dists, ids, stats, explain_arrays),
             payload=payload,
             version=getattr(col, "version", None),  # None = uncacheable
             overlapped=len(self._inflight) > 0,
@@ -1051,6 +1186,11 @@ class StoreService:
             seq=seq,
             tid=tid,
             t_issued=t_i1,
+            retries=attempts,
+            fault_sites=(
+                () if fplan is None
+                else tuple(s for s, _ in fplan.fired[fired0:])
+            ),
         )
         self._inflight.append(batch)
         self._g_ring.set(len(self._inflight))
@@ -1103,6 +1243,9 @@ class StoreService:
                 "batch.complete", t_c0, now, cat="batch", tid=batch.tid,
                 seq=batch.seq, collection=batch.name, rows=len(batch.reqs),
             )
+        ex = batch.pending.explain
+        if ex is not None:
+            ex = {k2: np.asarray(v) for k2, v in ex.items()}
         for j, r in enumerate(batch.reqs):
             r.dists = dists[j, : r.k]
             r.ids = ids[j, : r.k]
@@ -1113,6 +1256,8 @@ class StoreService:
             r.latency_ms = (now - r.submitted) * 1e3
             if r.deadline_ms is not None and r.latency_ms > r.deadline_ms:
                 r.degraded = True  # served, but past its budget — flagged
+            if r.explain is not None and ex is not None:
+                self._fill_explain(r, batch, ex, j, now)
             r.done = True
             if self.cache is not None and batch.version is not None:
                 # copies: r.dists/r.ids above are views of the same batch
@@ -1129,6 +1274,12 @@ class StoreService:
                     ),
                 )
             self._tstats(r.tenant).record_served(r, now)
+            # tail-exemplar feed: every served ticket's (latency, uid)
+            # lands in its latency bucket's ring; explain'd tickets keep
+            # the full record so SLO breaches can render the worst-k
+            self.obs.exemplars.record(
+                r.latency_ms, r.uid, batch.name, r.explain
+            )
         if traced and self.cache is not None and batch.version is not None:
             self.tracer.instant(
                 "cache.put", cat="cache", t=now, tid=batch.tid,
@@ -1139,6 +1290,43 @@ class StoreService:
         )
         self._g_ring.set(len(self._inflight))  # callers popleft before calling
 
+    def _fill_explain(self, r: QueryRequest, batch: _InFlight,
+                      ex: dict, j: int, now: float) -> None:
+        """Finish one ticket's EXPLAIN record at completion: the batch's
+        placement in the scheduler (seq / ring slot / fill), the device's
+        per-step measurements for row ``j``, per-shard attribution when
+        the sharded path gathered it, and the resilience story the issue
+        stage recorded."""
+        e = r.explain
+        e.batch_seq = batch.seq
+        e.ring_slot = batch.tid - TID_RING0
+        e.batch_rows = len(batch.reqs)
+        e.batch_shape = batch.shape
+        e.steps_run = r.radius_steps
+        e.candidates = r.candidates
+        e.term_cause = TERM_CAUSE_NAMES.get(
+            int(ex["term_cause"][j]), str(int(ex["term_cause"][j]))
+        )
+        e.final_radius = float(ex["final_radius"][j])
+        e.step_half = [float(x) for x in ex["step_half"]]
+        e.step_slots = [int(x) for x in ex["step_slots"][j]]
+        if "shard_steps" in ex:  # sharded placement: pre-collapse view
+            e.shard_steps = [int(x) for x in ex["shard_steps"][:, j]]
+            e.shard_slots = [int(x) for x in ex["shard_slots"][:, j]]
+            e.shard_cause = [int(x) for x in ex["shard_cause"][:, j]]
+        e.degraded = r.degraded
+        e.retries = batch.retries
+        e.fault_sites = list(batch.fault_sites)
+        e.latency_ms = r.latency_ms
+        if r.traced and self.tracer.enabled:
+            # instant on the request's async-span timeline: a Perfetto
+            # view links the rendered explain back to the request by uid
+            self.tracer.instant(
+                "request.explain", cat="explain", t=now, uid=r.uid,
+                collection=batch.name, term_cause=e.term_cause,
+                steps_run=e.steps_run,
+            )
+
     def _complete_all(self) -> None:
         while self._inflight:
             self._complete(self._inflight.popleft())
@@ -1147,7 +1335,8 @@ class StoreService:
     def serve(self, collection: str, Q, k: int | None = None,
               tenant: str = "default", engine: str | None = None,
               policy=None, recall_target: float | None = None,
-              deadline_ms: float | None = None):
+              deadline_ms: float | None = None,
+              explain: bool | None = None):
         """Submit a whole query matrix as single requests, flush, and return
         stacked (dists, ids) — the micro-batching round trip.  All-or-
         nothing under quota: if any row is rejected, the rows already
@@ -1163,7 +1352,7 @@ class StoreService:
                     self.submit(collection, q, k=k, tenant=tenant,
                                 engine=engine, policy=policy,
                                 recall_target=recall_target,
-                                deadline_ms=deadline_ms)
+                                deadline_ms=deadline_ms, explain=explain)
                 )
         except QuotaExceeded:
             queue = self._queues[collection].get(tenant)

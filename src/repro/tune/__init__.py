@@ -38,16 +38,19 @@ from .planner import ScheduleTable, calibrate, plan
 from .policy import (
     FixedSchedule,
     LatencyBudget,
+    POLICY_SOURCES,
     RecallTarget,
     ResolvedPlan,
     policy_from_dict,
     policy_to_dict,
     resolve_policy,
+    resolve_policy_with_source,
 )
 
 __all__ = [
     "FixedSchedule",
     "LatencyBudget",
+    "POLICY_SOURCES",
     "RecallTarget",
     "ResolvedPlan",
     "ScheduleTable",
@@ -58,6 +61,7 @@ __all__ = [
     "policy_from_dict",
     "policy_to_dict",
     "resolve_policy",
+    "resolve_policy_with_source",
     "search_batch_adaptive",
     "termination_radii",
     "termination_step_histogram",

@@ -42,11 +42,13 @@ from ..core.serve_search import Termination
 __all__ = [
     "FixedSchedule",
     "LatencyBudget",
+    "POLICY_SOURCES",
     "RecallTarget",
     "ResolvedPlan",
     "policy_from_dict",
     "policy_to_dict",
     "resolve_policy",
+    "resolve_policy_with_source",
 ]
 
 
@@ -105,6 +107,23 @@ def resolve_policy(*candidates):
         if c is not None:
             return c
     return None
+
+
+#: provenance names for the three resolution rungs, by candidate index;
+#: past the end (all ``None``) the plan came from the service's raw
+#: (r0, steps) with no policy at all.
+POLICY_SOURCES = ("request", "collection", "service")
+
+
+def resolve_policy_with_source(*candidates):
+    """Like :func:`resolve_policy` but also names the rung that won —
+    ``(policy, "request"|"collection"|"service")``, or
+    ``(None, "default")`` when no rung supplied a policy.  This is what
+    the EXPLAIN path records as the plan-resolution chain."""
+    for c, source in zip(candidates, POLICY_SOURCES):
+        if c is not None:
+            return c, source
+    return None, "default"
 
 
 # --------------------------------------------------------------- persistence

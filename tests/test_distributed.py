@@ -241,6 +241,63 @@ print("SHARDED_LIFECYCLE_OK", rec)
 """
 
 
+SCRIPT_SHARDED_EXPLAIN = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, numpy as np
+from repro.core import DBLSHParams
+from repro.core.distributed import build_sharded, search_sharded
+from repro.data import make_clustered, normalize_scale
+from repro.obs import Observability
+from repro.store import ShardedCollection, StoreService
+
+mesh = jax.make_mesh((8,), ("data",))
+key = jax.random.key(7)
+kd, kb = jax.random.split(key)
+allpts = make_clustered(kd, 4120, 24, n_clusters=8, spread=0.02)
+data, queries = allpts[:4096], allpts[4096:]
+data, queries, _ = normalize_scale(data, queries)
+
+params = DBLSHParams.derive(n=4096, d=24, c=1.5, t=48, k=8, K=8, L=3)
+sh = build_sharded(kb, data, params, mesh, axis="data")
+
+# explain-off bit-equality on the sharded path
+base = search_sharded(sh, queries, k=8, r0=0.5, steps=6, mesh=mesh,
+                      with_stats=True)
+d, i, st, ex = search_sharded(sh, queries, k=8, r0=0.5, steps=6, mesh=mesh,
+                              with_stats=True, with_explain=True)
+np.testing.assert_array_equal(np.asarray(base[0]), np.asarray(d))
+np.testing.assert_array_equal(np.asarray(base[1]), np.asarray(i))
+np.testing.assert_array_equal(np.asarray(base[2]["radius_steps"]),
+                              np.asarray(st["radius_steps"]))
+np.testing.assert_array_equal(np.asarray(base[2]["candidates"]),
+                              np.asarray(st["candidates"]))
+# per-shard attribution pre-collapse: slots psum to the merged total,
+# the critical-path shard's steps equal the pmax'd radius_steps
+slots = np.asarray(ex["shard_slots"]); steps = np.asarray(ex["shard_steps"])
+assert slots.shape[0] == steps.shape[0] == 8
+np.testing.assert_array_equal(slots.sum(axis=0), np.asarray(st["candidates"]))
+np.testing.assert_array_equal(steps.max(axis=0), np.asarray(st["radius_steps"]))
+np.testing.assert_array_equal(np.asarray(ex["step_slots"]).sum(axis=1),
+                              np.asarray(st["candidates"]))
+
+# the service fills per-shard attribution into the ticket's record
+col = ShardedCollection("shx", sh, mesh)
+svc = StoreService(batch_shapes=(1, 4), max_wait_ms=1e9, default_k=8,
+                   r0=0.5, steps=6, obs=Observability())
+svc.attach(col)
+t = svc.submit("shx", np.asarray(queries[0]), explain=True)
+svc.flush()
+assert t.done and t.error is None, t.error
+e = t.explain
+assert e.shard_steps is not None and len(e.shard_steps) == 8
+assert max(e.shard_steps) == t.radius_steps == e.steps_run
+assert sum(e.shard_slots) == t.candidates == sum(e.step_slots)
+assert "shards:" in e.render()
+print("SHARDED_EXPLAIN_OK")
+"""
+
+
 SCRIPT_TRAIN_PARITY = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -333,6 +390,13 @@ def _run(script, tag):
 @pytest.mark.slow
 def test_sharded_ann_8dev():
     _run(SCRIPT_SHARDED_ANN, "SHARDED_ANN_OK")
+
+
+@pytest.mark.slow
+def test_sharded_explain_8dev():
+    """EXPLAIN on the sharded placement: with_explain is bit-equal off,
+    per-shard attribution survives to the ticket's record."""
+    _run(SCRIPT_SHARDED_EXPLAIN, "SHARDED_EXPLAIN_OK")
 
 
 @pytest.mark.slow

@@ -32,19 +32,26 @@ import pytest
 
 import jax
 
-from repro.core import DBLSHParams
+from repro.core import DBLSHParams, Termination, search_batch_fixed
 from repro.data import make_clustered, normalize_scale
 from repro.obs import (
     BreachEvent,
+    ExemplarReservoir,
     MetricsRegistry,
     Observability,
+    QueryExplain,
     SLOWatch,
     Tracer,
     expected_step_pmf,
     get_tracer,
 )
 from repro.obs.trace import TID_LIFECYCLE, TID_RING0, TID_SCHEDULER
-from repro.store import Collection, QuotaExceeded, StoreService
+from repro.store import (
+    Collection,
+    DeadlineExceeded,
+    QuotaExceeded,
+    StoreService,
+)
 from repro.tune import ScheduleTable
 
 ENGINES = os.environ.get("REPRO_STORE_TEST_ENGINES", "jnp").replace(",", " ").split()
@@ -567,3 +574,225 @@ class TestSLOWatch:
         clk.advance(0.01)  # 10 ms of queue wait: p99 >> the 0.5 ms objective
         svc.step(force=True)
         assert seen and seen[0].kind == "latency_p99"
+
+
+# --------------------------------------------------------- explain / exemplars
+class TestExplainDevice:
+    """Device-side with_explain: the off path must be bit-equal (it is
+    the same compiled program), and the per-step arrays must agree with
+    the with_stats accounting they refine."""
+
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_explain_off_bit_equal(self, setup, col, engine):
+        _, queries, _ = setup
+        interpret = True if engine != "jnp" else None
+        for term in (None, Termination()):
+            kw = dict(k=8, r0=0.5, steps=4, engine=engine,
+                      interpret=interpret, with_stats=True, termination=term)
+            d0, i0, s0 = search_batch_fixed(col.index, queries[:8], **kw)
+            d1, i1, s1, ex = search_batch_fixed(
+                col.index, queries[:8], with_explain=True, **kw
+            )
+            np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+            np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+            np.testing.assert_array_equal(
+                np.asarray(s0["radius_steps"]), np.asarray(s1["radius_steps"])
+            )
+            np.testing.assert_array_equal(
+                np.asarray(s0["candidates"]), np.asarray(s1["candidates"])
+            )
+            # contract: per-step admitted deltas partition the total
+            # verified slots, causes are in vocabulary, the halfwidth
+            # schedule is the geometric ladder
+            slots = np.asarray(ex["step_slots"])
+            np.testing.assert_array_equal(
+                slots.sum(axis=1), np.asarray(s0["candidates"])
+            )
+            assert set(np.asarray(ex["term_cause"]).tolist()) <= {0, 1, 2}
+            half = np.asarray(ex["step_half"])
+            assert half.shape == (4,)
+            np.testing.assert_allclose(half[1:] / half[:-1], 1.5, rtol=1e-5)
+
+
+class TestExplainService:
+    def test_ticket_contract_and_render(self, setup, col):
+        """submit(explain=True): the record's accounting matches the
+        ticket's with_stats numbers, the cache read is a bypass, and the
+        rendered text names the termination condition."""
+        _, queries, _ = setup
+        svc = _service(col, FakeClock(), max_wait_ms=1e9)
+        t = svc.submit("obscol", queries[0], explain=True)
+        plain = [svc.submit("obscol", q) for q in queries[1:4]]
+        svc.flush()
+        assert t.done and t.error is None
+        e = t.explain
+        assert e is not None
+        assert all(p.explain is None for p in plain)
+        # device accounting agrees with the ticket
+        assert e.steps_run == t.radius_steps
+        assert e.candidates == t.candidates == sum(e.step_slots)
+        assert e.cum_slots[-1] == t.candidates
+        assert len(e.step_half) == len(e.step_slots) == e.plan_steps == 4
+        assert e.term_cause in (
+            "schedule_exhausted", "c1_budget", "c2_certified"
+        )
+        # provenance: no policy anywhere -> the service's own schedule
+        assert e.plan_source == "default" and e.plan_policy is None
+        assert e.cache_outcome == "bypass" and "obscol@v" in e.cache_key
+        assert e.queue_wait_ms >= 0.0 and e.batch_seq >= 0
+        text = e.render()
+        assert f"uid={t.uid}" in text
+        assert "terminated: " + e.term_cause in text
+        assert "admitted_slots" in text and "cache: bypass" in text
+        json.dumps(e.to_dict())  # artifact shape is JSON-able
+
+    def test_explain_dispatch_bit_equal(self, setup, col):
+        """A fully-explained serve returns bit-identical results to a
+        plain serve of the same queries."""
+        _, queries, _ = setup
+
+        def run(explain):
+            svc = _service(col, FakeClock(), cache_size=0,
+                           inflight_depth=2)
+            d, i, _ = svc.serve("obscol", queries[:6], explain=explain)
+            return np.asarray(d), np.asarray(i)
+
+        d0, i0 = run(False)
+        d1, i1 = run(True)
+        np.testing.assert_array_equal(d0, d1)
+        np.testing.assert_array_equal(i0, i1)
+
+    def test_plan_provenance_names_request_rung(self, setup, col):
+        from repro.tune import FixedSchedule
+
+        _, queries, _ = setup
+        svc = _service(col, FakeClock())
+        t = svc.submit("obscol", queries[0], explain=True,
+                       policy=FixedSchedule(r0=0.5, steps=2))
+        svc.flush()
+        assert t.explain.plan_source == "request"
+        assert "FixedSchedule" in t.explain.plan_policy
+        assert t.explain.plan_steps == 2 and len(t.explain.step_half) == 2
+
+    def test_auto_sampling_stride(self, setup, col):
+        _, queries, _ = setup
+        obs = Observability(explain_sample_rate=0.5)  # stride 2
+        svc = _service(col, FakeClock(), obs=obs, cache_size=0)
+        tickets = [svc.submit("obscol", queries[i % 8]) for i in range(4)]
+        svc.flush()
+        flags = [t.explain is not None for t in tickets]
+        assert flags == [True, False, True, False]
+        # explicit flags override the sampler in both directions
+        assert svc.submit("obscol", queries[0], explain=True).explain
+        assert svc.submit("obscol", queries[0], explain=False).explain is None
+        # default bundle: sampling off, nothing explained implicitly
+        svc2 = _service(col, FakeClock(), cache_size=0)
+        t2 = svc2.submit("obscol", queries[0])
+        svc2.flush()
+        assert t2.explain is None
+
+    def test_tenant_degraded_and_deadline_counters(self, setup, col):
+        """Satellite: per-tenant degraded / deadline_exceeded surfaced
+        from labeled registry series."""
+        _, queries, _ = setup
+        clk = FakeClock()
+        svc = _service(col, clk, max_wait_ms=0.0, inflight_depth=2)
+        # served past its budget: issued at t=0, completed 10ms later
+        t1 = svc.submit("obscol", queries[0], deadline_ms=5.0, tenant="acme")
+        svc.step()
+        clk.advance(0.010)
+        svc.flush()
+        assert t1.done and t1.error is None and t1.degraded
+        # expired while queued: typed deadline failure
+        t2 = svc.submit("obscol", queries[1], deadline_ms=5.0, tenant="acme")
+        clk.advance(0.010)
+        svc.step()
+        assert isinstance(t2.error, DeadlineExceeded) and t2.done
+        ts = svc.tenant_stats("acme")
+        assert ts["degraded"] == 1
+        assert ts["deadline_exceeded"] == 1
+        assert ts["failed"] == 1
+        assert ts["served"] == 1
+
+    def test_breach_event_carries_rendered_exemplar(self, setup, col):
+        """Acceptance: a scripted p99 breach names actual queries — the
+        worst exemplar's rendered explain includes the termination
+        condition and per-step admitted slots."""
+        _, queries, _ = setup
+        clk = FakeClock()
+        svc = _service(col, clk, max_wait_ms=1e9)
+        t = svc.submit("obscol", queries[0], explain=True)
+        clk.advance(0.050)  # 50 ms in queue: the latency tail
+        svc.flush()
+        assert t.done and t.explain is not None
+        watch = svc.obs.watch(
+            "obscol", latency_p99_ms=1.0, min_samples=1, clock=clk,
+        )
+        events = watch.check(clk.now)
+        assert events and events[0].kind in ("latency_p50", "latency_p99")
+        exs = events[0].detail["exemplars"]
+        assert exs, "breach carried no exemplars"
+        best = exs[0]
+        assert best["uid"] == t.uid
+        assert best["explain"]["term_cause"] == t.explain.term_cause
+        assert "terminated: " + t.explain.term_cause in best["rendered"]
+        assert "admitted_slots" in best["rendered"]
+        # the event (exemplars included) survives JSON export
+        json.dumps(events[0].to_dict())
+
+
+class TestExemplarReservoir:
+    def test_worst_walks_tail_first(self):
+        res = ExemplarReservoir(buckets=(1.0, 10.0), per_bucket=4)
+        for uid, lat in enumerate([0.5, 5.0, 50.0, 2.0]):
+            res.record(lat, uid, "c")
+        worst = res.worst(3)
+        assert [w["uid"] for w in worst] == [2, 1, 3]
+        assert worst[0]["latency_ms"] == 50.0
+        # collection filter
+        res.record(99.0, 7, "other")
+        assert [w["uid"] for w in res.worst(1, collection="c")] == [2]
+
+    def test_explain_store_is_bounded(self):
+        res = ExemplarReservoir(buckets=(1.0,), per_bucket=2, max_explains=3)
+        for uid in range(6):
+            res.record(0.5, uid, "c", QueryExplain(uid=uid, collection="c"))
+        assert len(res.explains()) == 3
+        assert res.explain_for(5) is not None  # newest kept
+        assert res.explain_for(0) is None      # oldest evicted
+        # rings are bounded too
+        blob = res.to_json()
+        assert len(blob["exemplars"]) <= 2 * 2  # per_bucket x (buckets+inf)
+
+    def test_export_json(self, tmp_path):
+        res = ExemplarReservoir()
+        res.record(3.0, 1, "c", QueryExplain(uid=1, collection="c"))
+        path = str(tmp_path / "explains.json")
+        assert res.export_json(path) == 1
+        blob = json.loads(open(path).read())
+        assert blob["explains"][0]["uid"] == 1
+        assert blob["exemplars"][0]["latency_ms"] == 3.0
+
+
+class TestPrometheusHardening:
+    def test_label_values_escaped(self):
+        """Satellite: text-format escaping for quotes, backslashes, and
+        newlines in label values."""
+        reg = MetricsRegistry()
+        c = reg.counter("esc_total", "escaping")
+        c.inc(path='say "hi"\\now', msg="line1\nline2")
+        text = reg.to_prometheus()
+        assert 'path="say \\"hi\\"\\\\now"' in text
+        assert 'msg="line1\\nline2"' in text
+        # round-trip sanity: exactly one sample line, parseable shape
+        sample = [l for l in text.splitlines() if l.startswith("esc_total{")]
+        assert len(sample) == 1 and sample[0].endswith(" 1")
+
+    def test_empty_registry_exports_valid_empty_text(self):
+        assert MetricsRegistry().to_prometheus() == ""
+
+    def test_json_export_unaffected(self):
+        reg = MetricsRegistry()
+        reg.counter("c_total").inc(v='a"b')
+        blob = reg.to_json()
+        assert blob["c_total"]["series"][0]["labels"] == {"v": 'a"b'}
