@@ -15,10 +15,17 @@ reduce-scatter / all-to-all / collective-permute.
 Also reports MODEL_FLOPS = 6*N*D(tokens) (dense) or 6*N_active*D (MoE)
 and the usefulness ratio MODEL_FLOPS / HLO_FLOPs, the dominant term, and
 one-line bottleneck advice per cell.
+
+``--search`` instead runs the serving-path roofline: analytic
+bytes-moved / FLOPs per query for the fused one-pass search kernel vs
+the unfused pipeline (dist kernel + HBM candidate pool + per-step XLA
+merges), across distance dtypes — emitted as
+``BENCH_search_roofline.json`` (a CI artifact; see DESIGN.md §13).
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
 
@@ -176,7 +183,137 @@ def advice(row):
     return "already compute-bound: close MODEL/HLO gap (remat waste, attention flops)"
 
 
-def main():
+# ---------------------------------------------------------------------------
+# Serving-path roofline: fused one-pass search kernel vs unfused pipeline
+# ---------------------------------------------------------------------------
+
+#: bytes per candidate vector element by distance dtype (int8 rows also
+#: read one fp32 dequant scale per slot, accounted separately)
+_VEC_BYTES = {"fp32": 4, "bf16": 2, "int8": 1}
+
+
+def search_cell(S, B, d, K, steps, k, dtype="fp32"):
+    """Analytic per-query bytes-moved and FLOPs for the serving search.
+
+    The unfused pipeline (pre-fusion serving path) runs the distance
+    kernel, writes the (S*B,) d2/hw candidate pools to HBM, then re-reads
+    the pools ``steps`` times for the per-step masked delta merges (each
+    merge is a separate XLA program over the full pool).  The fused
+    kernel keeps candidates in VMEM: blocks stream in once, the only HBM
+    writes are the (steps, ks) bin accumulators.
+
+    FLOPs count the arithmetic both paths share (halfwidth + norm-form
+    distance) plus each path's merge work: the unfused merge runs
+    ``steps`` passes of the k-round min-select over the full pool; the
+    fused kernel folds each slot into one bin (k-round min-select over
+    one block), so its merge work is per-slot, not per-step.
+
+    ks is the bin accumulator width: ``k`` for fp32, ``4k`` for the
+    quantized shortlist.
+    """
+    vb = _VEC_BYTES[dtype]
+    ks = k if dtype == "fp32" else 4 * k
+    slots = S * B
+    # --- shared streaming reads: proj (K f32) + vec (d) + norm (f32) + id
+    block_read = slots * (K * 4 + d * vb + 4 + 4)
+    if dtype == "int8":
+        block_read += slots * 4  # per-slot dequant scale
+    # --- shared arithmetic: hw (3 ops/dim over K) + norm-form dist (2d+3)
+    flops_dist = slots * (3 * K + 2 * d + 3)
+
+    # unfused: pools to HBM, then steps x (read pool + k-round merge)
+    pool_bytes = slots * (4 + 4 + 4)  # d2 + hw + ids
+    unfused_bytes = (
+        block_read + pool_bytes            # kernel writes the pools
+        + steps * pool_bytes               # each step's merge re-reads them
+        + steps * k * 8                    # running top-k read-modify-write
+    )
+    unfused_flops = flops_dist + steps * k * 4 * (slots + k)
+
+    # fused: blocks stream once; bins are the only HBM traffic
+    bins_bytes = steps * ks * 8 + steps * 4
+    fused_bytes = block_read + bins_bytes
+    # per-slot bin fold: ks-round min-select over one block + ks carry
+    fused_flops = flops_dist + S * ks * 4 * (B + ks)
+
+    def mk(bytes_, flops):
+        return {
+            "bytes_per_query": int(bytes_),
+            "flops_per_query": int(flops),
+            "arith_intensity": round(flops / bytes_, 3),
+            "t_mem_us": round(bytes_ / HBM_BW * 1e6, 3),
+            "t_compute_us": round(flops / PEAK_FLOPS * 1e6, 6),
+            "bound": "memory" if bytes_ / HBM_BW > flops / PEAK_FLOPS
+                     else "compute",
+        }
+
+    fused = mk(fused_bytes, fused_flops)
+    unfused = mk(unfused_bytes, unfused_flops)
+    return {
+        "dtype": dtype,
+        "slots": slots,
+        "ks": ks,
+        "unfused": unfused,
+        "fused": fused,
+        "bytes_ratio": round(unfused["bytes_per_query"]
+                             / fused["bytes_per_query"], 3),
+        "flops_ratio": round(unfused["flops_per_query"]
+                             / fused["flops_per_query"], 3),
+    }
+
+
+def run_search(out="BENCH_search_roofline.json"):
+    """The BENCH workload's cells (n=100k reference + a large-d point)."""
+    cells = []
+    for name, (S, B, d, K, steps, k) in {
+        "ref_100k": (25, 64, 64, 10, 8, 10),     # BENCH_search_hotpath
+        "wide_d960": (25, 64, 960, 10, 8, 10),   # gist-shaped vectors
+        "deep_steps16": (25, 64, 64, 10, 16, 10),
+    }.items():
+        for dtype in ("fp32", "bf16", "int8"):
+            cells.append({"workload": name,
+                          "S": S, "B": B, "d": d, "K": K,
+                          "steps": steps, "k": k,
+                          **search_cell(S, B, d, K, steps, k, dtype)})
+    report = {
+        "bench": "search_roofline",
+        "model": (
+            "analytic per-query HBM traffic and FLOPs on the v5e "
+            "roofline constants; the fused kernel's win is the removed "
+            "candidate-pool round-trip (write + steps re-reads), which "
+            "grows with the schedule length while its own overhead "
+            "(the bin accumulators) is O(steps*ks) per query"
+        ),
+        "constants": {"peak_flops": PEAK_FLOPS, "hbm_bw": HBM_BW},
+        "cells": cells,
+    }
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(f"{'workload':<14}{'dtype':<6}{'bytes/q un':>12}{'bytes/q fu':>12}"
+          f"{'ratio':>7}{'AI un':>7}{'AI fu':>7}{'bound':>8}")
+    for c in cells:
+        print(f"{c['workload']:<14}{c['dtype']:<6}"
+              f"{c['unfused']['bytes_per_query']:>12}"
+              f"{c['fused']['bytes_per_query']:>12}"
+              f"{c['bytes_ratio']:>7}"
+              f"{c['unfused']['arith_intensity']:>7}"
+              f"{c['fused']['arith_intensity']:>7}"
+              f"{c['fused']['bound']:>8}")
+    # sanity gate: fusion must strictly cut bytes moved in every cell
+    assert all(c["bytes_ratio"] > 1.0 for c in cells)
+    return report
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--search", action="store_true",
+                    help="serving-path roofline (fused vs unfused search)")
+    ap.add_argument("--out", default="BENCH_search_roofline.json")
+    args = ap.parse_args(argv)
+    if args.search:
+        return run_search(args.out)
+    rows = []
     for mesh_tag in ("pod16x16", "pod2x16x16"):
         rows = run(mesh_tag)
         if not rows:

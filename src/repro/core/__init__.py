@@ -11,10 +11,11 @@ Public API:
 
 from .params import DBLSHParams, alpha_of_gamma, rho_star
 from .hashing import collision_prob, project, sample_projections
-from .index import DBLSHIndex, build, compute_norm_blocks
+from .index import DBLSHIndex, build, compute_norm_blocks, quantize_blocks
 from .query import merge_dedup_topk, rc_nn, search, search_batch, probe_radius
 from .baselines import C2Index, FBLSH, MQIndex, brute_force
 from .serve_search import (
+    DTYPES,
     ENGINES,
     TERM_C1,
     TERM_C2,
@@ -24,6 +25,7 @@ from .serve_search import (
     search_batch_fixed,
     search_batch_fixed_dispatch,
     search_batch_fixed_ref,
+    validate_dtype,
     validate_engine,
 )
 from .updates import compact, delete, insert, live_count
@@ -38,6 +40,7 @@ __all__ = [
     "DBLSHIndex",
     "build",
     "compute_norm_blocks",
+    "quantize_blocks",
     "search",
     "search_batch",
     "search_batch_fixed",
@@ -46,10 +49,12 @@ __all__ = [
     "Termination",
     "PendingSearch",
     "ENGINES",
+    "DTYPES",
     "TERM_EXHAUSTED",
     "TERM_C1",
     "TERM_C2",
     "validate_engine",
+    "validate_dtype",
     "merge_dedup_topk",
     "rc_nn",
     "probe_radius",

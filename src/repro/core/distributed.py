@@ -106,6 +106,8 @@ def _index_specs(axis: str, params) -> DBLSHIndex:
         data=P(axis),
         vec_blocks=P(None, axis) if params.inline_vectors else P(),
         norm_blocks=P(None, axis),
+        qvec_blocks=P(None, axis) if params.quant_dtype != "none" else P(),
+        qvec_scale=P(None, axis) if params.quant_dtype != "none" else P(),
         params=params,
     )
 
@@ -141,11 +143,12 @@ def build_sharded(key, data, params_local: DBLSHParams, mesh,
 
 
 @partial(jax.jit, static_argnames=("k", "steps", "mesh", "with_stats",
-                                   "exact", "termination", "with_explain"))
+                                   "exact", "termination", "with_explain",
+                                   "dtype"))
 def search_sharded(s: ShardedDBLSH, Q: jax.Array, k: int = 0, r0: float = 1.0,
                    steps: int = 8, mesh=None, with_stats: bool = False,
                    exact: bool = False, termination=None,
-                   with_explain: bool = False):
+                   with_explain: bool = False, dtype: str = "fp32"):
     """Replicated queries -> (Q, k) global distances/ids.
 
     Returned ids live in the strided space ``gid = rank * stride +
@@ -193,6 +196,7 @@ def search_sharded(s: ShardedDBLSH, Q: jax.Array, k: int = 0, r0: float = 1.0,
         out = search_batch_fixed(
             idx_tree, Qr, k=k, r0=r0, steps=steps, with_stats=with_stats,
             exact=exact, termination=termination, with_explain=with_explain,
+            dtype=dtype,
         )
         d, i = out[0], out[1]
         rank = jax.lax.axis_index(axis)

@@ -31,7 +31,7 @@ import jax.numpy as jnp
 from . import hashing
 from .params import DBLSHParams
 
-__all__ = ["DBLSHIndex", "build", "compute_norm_blocks"]
+__all__ = ["DBLSHIndex", "build", "compute_norm_blocks", "quantize_blocks"]
 
 
 def compute_norm_blocks(data: jax.Array, ids_blocks: jax.Array) -> jax.Array:
@@ -46,6 +46,42 @@ def compute_norm_blocks(data: jax.Array, ids_blocks: jax.Array) -> jax.Array:
     ).astype(jnp.float32)
 
 
+def quantize_blocks(
+    data: jax.Array, ids_blocks: jax.Array, quant_dtype: str
+) -> tuple[jax.Array, jax.Array]:
+    """Quantized per-table vector blocks for the reduced-precision dot.
+
+    Returns ``(qvec_blocks, qvec_scale)`` slot-aligned with ``ids_blocks``:
+
+      * ``bf16``: blocks cast to bfloat16, scale all-ones (unused);
+      * ``int8``: per-slot symmetric quantization ``round(x / s)`` with
+        ``s = amax(|x|) / 127`` (``s = 1`` on all-zero rows), so the
+        approximate dot is ``s_slot * s_q * <qx, qq>``.
+
+    Quantization is a pure deterministic function of ``data`` — snapshots
+    persist the fp32 truth and restore paths re-derive these (same pattern
+    as ``compute_norm_blocks``).  Padded / tombstoned slots (id >= n)
+    gather the zero fill, contributing a zero dot; admission and the final
+    re-rank mask them exactly, so no sentinel is needed here."""
+    if quant_dtype not in ("bf16", "int8"):
+        raise ValueError(f"quant_dtype must be 'bf16' or 'int8', got {quant_dtype!r}")
+    x = jnp.take(data, ids_blocks, axis=0, mode="fill", fill_value=0.0)
+    if quant_dtype == "bf16":
+        q = x.astype(jnp.bfloat16)
+        scale = jnp.ones(ids_blocks.shape, jnp.float32)
+        return q, scale
+    amax = jnp.max(jnp.abs(x), axis=-1)  # (L, nb, B)
+    scale = jnp.where(amax > 0.0, amax / 127.0, 1.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(x / scale[..., None]), -127.0, 127.0).astype(jnp.int8)
+    return q, scale
+
+
+def empty_quant_blocks(dtype) -> tuple[jax.Array, jax.Array]:
+    """Placeholder (empty) quantized fields for quant_dtype='none'."""
+    del dtype
+    return jnp.zeros((0,), jnp.int8), jnp.zeros((0,), jnp.float32)
+
+
 @partial(
     jax.tree_util.register_dataclass,
     data_fields=[
@@ -57,6 +93,8 @@ def compute_norm_blocks(data: jax.Array, ids_blocks: jax.Array) -> jax.Array:
         "data",
         "vec_blocks",
         "norm_blocks",
+        "qvec_blocks",
+        "qvec_scale",
     ],
     meta_fields=["params"],
 )
@@ -78,6 +116,11 @@ class DBLSHIndex:
                                   verify form ||x||^2 - 2<q,x> + ||q||^2
                                   reads these instead of re-reducing d
                                   diff lanes per candidate per radius
+      qvec_blocks: (L, nb, B, d)  quantized per-table vectors (bf16/int8)
+                                  for the reduced-precision distance path,
+                                  else () when params.quant_dtype='none'
+      qvec_scale:  (L, nb, B)     per-slot dequantization scales (f32),
+                                  all-ones for bf16, else ()
     """
 
     proj_vecs: jax.Array
@@ -88,6 +131,8 @@ class DBLSHIndex:
     data: jax.Array
     vec_blocks: jax.Array
     norm_blocks: jax.Array
+    qvec_blocks: jax.Array
+    qvec_scale: jax.Array
     params: DBLSHParams
 
     @property
@@ -108,6 +153,8 @@ class DBLSHIndex:
             self.mbr_hi,
             self.vec_blocks,
             self.norm_blocks,
+            self.qvec_blocks,
+            self.qvec_scale,
         ):
             tot += f.size * f.dtype.itemsize
         return tot
@@ -168,6 +215,13 @@ def build(key: jax.Array, data: jax.Array, params: DBLSHParams) -> DBLSHIndex:
     else:
         vec_blocks = jnp.zeros((0,), dtype=data.dtype)
 
+    if params.quant_dtype != "none":
+        qvec_blocks, qvec_scale = quantize_blocks(
+            data, ids_blocks, params.quant_dtype
+        )
+    else:
+        qvec_blocks, qvec_scale = empty_quant_blocks(data.dtype)
+
     return DBLSHIndex(
         proj_vecs=proj_vecs,
         proj_blocks=proj_blocks,
@@ -177,5 +231,7 @@ def build(key: jax.Array, data: jax.Array, params: DBLSHParams) -> DBLSHIndex:
         data=data,
         vec_blocks=vec_blocks,
         norm_blocks=compute_norm_blocks(data, ids_blocks),
+        qvec_blocks=qvec_blocks,
+        qvec_scale=qvec_scale,
         params=params,
     )

@@ -109,6 +109,8 @@ class DBLSHParams:
     max_radius_steps: int = 24    # safety bound on the r = c^j schedule
     inline_vectors: bool = False  # 'inline' layout: per-table reordered vector copy
     use_kernel: bool = False      # route verification through the Pallas kernel
+    quant_dtype: str = "none"     # 'bf16'/'int8': keep quantized vec blocks for
+                                  # the reduced-precision distance path
 
     # --- derived (filled by .resolve()) ---
     p1: float = 0.0
@@ -144,6 +146,11 @@ class DBLSHParams:
 
     def resolve(self) -> "DBLSHParams":
         """Fill derived fields; idempotent."""
+        if self.quant_dtype not in ("none", "bf16", "int8"):
+            raise ValueError(
+                f"quant_dtype must be 'none', 'bf16' or 'int8', "
+                f"got {self.quant_dtype!r}"
+            )
         upd: dict = {}
         if self.p1 == 0.0:
             upd["p1"] = _p(1.0, self.w0)

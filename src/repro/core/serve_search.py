@@ -67,7 +67,9 @@ __all__ = [
     "search_batch_fixed_dispatch",
     "PendingSearch",
     "validate_engine",
+    "validate_dtype",
     "ENGINES",
+    "DTYPES",
     "TERM_EXHAUSTED",
     "TERM_C1",
     "TERM_C2",
@@ -76,6 +78,7 @@ __all__ = [
 _INF = jnp.inf
 
 ENGINES = ("jnp", "kernel", "inline")
+DTYPES = ("fp32", "bf16", "int8")
 
 
 def validate_engine(engine: str) -> str:
@@ -86,6 +89,35 @@ def validate_engine(engine: str) -> str:
             f"unknown engine {engine!r}: use " + " | ".join(ENGINES)
         )
     return engine
+
+
+def validate_dtype(dtype: str, params=None, exact: bool = False) -> str:
+    """Distance-dtype check for the serving path.
+
+    ``fp32`` is the default exact-arithmetic path.  ``bf16``/``int8``
+    route the in-kernel dots through the quantized blocks (top-4k
+    shortlist + exact fp32 re-rank) and therefore need an index built
+    with the matching ``params.quant_dtype``; ``exact=True`` asserts
+    bit-fidelity to the multi-pass seed, which no quantized path can
+    promise, so the combination is rejected outright."""
+    if dtype not in DTYPES:
+        raise ValueError(
+            f"unknown dtype {dtype!r}: use " + " | ".join(DTYPES)
+        )
+    if dtype != "fp32":
+        if exact:
+            raise ValueError(
+                f"exact=True requires dtype='fp32' (got {dtype!r}): the "
+                "quantized path is a shortlist + re-rank, not bit-exact"
+            )
+        if params is not None and params.quant_dtype != dtype:
+            raise ValueError(
+                f"dtype={dtype!r} needs an index built with "
+                f"quant_dtype={dtype!r} (index has "
+                f"{params.quant_dtype!r}) — rebuild or derive params "
+                "with quant_dtype set"
+            )
+    return dtype
 
 
 @dataclasses.dataclass(frozen=True)
@@ -238,6 +270,144 @@ def _gather_pool(index: DBLSHIndex, blk_q: jax.Array, G: jax.Array,
     return d2.reshape(Qn, C), hw.reshape(Qn, C)
 
 
+def _fused_bins(index: DBLSHIndex, blk_q: jax.Array, G: jax.Array,
+                Q: jax.Array, halves: jax.Array, engine: str, exact: bool,
+                dtype: str, ks: int, interpret):
+    """Fused verify+bin stage: one pass over the selected slots emitting
+    per-(query, step) top-ks *bin* accumulators instead of the (Qn, C)
+    distance pool.
+
+    Bin j holds the ks best distinct (d2, id) pairs among candidates
+    whose window halfwidth first admits them at step j — exactly the
+    step-j delta slice of the schedule (windows nest), so the epilogue's
+    prefix merge reproduces the flat per-step merge bit-for-bit.  ``cnt``
+    (Qn, steps) counts admitted candidate slots per bin; its cumsum is
+    the C1 admission count.
+
+    Engine routing: 'inline' streams blocks via scalar-prefetch DMA
+    (candidates never reach HBM); 'kernel' runs the gathered twin; 'jnp'
+    lands here only for quantized dtypes and computes the same bins in
+    pure XLA (the CPU-parity twin of the quantized kernels)."""
+    p = index.params
+    nb = index.nb
+    L, M, B = p.L, p.max_blocks, p.block_size
+    Qn = Q.shape[0]
+    n = index.n
+    S = L * M
+    mode = ("exact" if exact else "norm") if dtype == "fp32" else dtype
+    proj_flat = index.proj_blocks.reshape(L * nb, B, p.K)
+    nrm_flat = index.norm_blocks.reshape(L * nb, B)
+    ids_flat = index.ids_blocks.reshape(L * nb, B)
+
+    if engine == "inline":
+        if dtype == "fp32":
+            xb, xs = index.vec_blocks.reshape(L * nb, B, -1), None
+        else:
+            xb = index.qvec_blocks.reshape(L * nb, B, -1)
+            xs = index.qvec_scale.reshape(L * nb, B)
+        return kernels.fused_window_search(
+            blk_q, halves, proj_flat, xb, nrm_flat, ids_flat, G, Q,
+            M=M, ks=ks, n=n, mode=mode, interpret=interpret, x_scale=xs,
+        )
+
+    pb = jnp.take(proj_flat, blk_q, axis=0, mode="fill", fill_value=_INF)
+    ib = jnp.take(ids_flat, blk_q, axis=0, mode="fill", fill_value=n)
+    nrm = jnp.take(nrm_flat, blk_q, axis=0, mode="fill", fill_value=_INF)
+    if dtype == "fp32":
+        if p.inline_vectors:
+            vb = jnp.take(
+                index.vec_blocks.reshape(L * nb, B, -1), blk_q, axis=0,
+                mode="fill", fill_value=0.0,
+            )
+        else:
+            vb = jnp.take(
+                index.data, ib.reshape(Qn, -1), axis=0, mode="fill",
+                fill_value=0.0,
+            ).reshape(Qn, S, B, -1)
+        sc = None
+    else:
+        vb = jnp.take(
+            index.qvec_blocks.reshape(L * nb, B, -1), blk_q, axis=0,
+            mode="fill", fill_value=0,
+        )
+        sc = jnp.take(
+            index.qvec_scale.reshape(L * nb, B), blk_q, axis=0,
+            mode="fill", fill_value=1.0,
+        )
+
+    if engine == "kernel":
+        return kernels.fused_cand_search(
+            pb.reshape(Qn, L, M * B, p.K),
+            vb.reshape(Qn, L, M * B, -1),
+            nrm.reshape(Qn, L, M * B),
+            ib.reshape(Qn, L, M * B),
+            halves, G, Q, ks=ks, n=n, mode=mode, interpret=interpret,
+            cand_scale=None if sc is None else sc.reshape(Qn, L, M * B),
+        )
+
+    # 'jnp' + quantized: pure-XLA twin of the quantized kernels
+    C = S * B
+    steps = halves.shape[0]
+    g_rep = jnp.repeat(G, M, axis=1)  # (Qn, S, K)
+    hw = jnp.max(jnp.abs(pb - g_rep[:, :, None, :]), axis=-1).reshape(Qn, C)
+    q2 = jnp.sum(jnp.square(Q), axis=-1)
+    if dtype == "bf16":
+        qv = Q.astype(jnp.bfloat16)
+        dots = jnp.sum(
+            vb.astype(jnp.float32) * qv.astype(jnp.float32)[:, None, None, :],
+            axis=-1,
+        )
+        df = dots
+    else:  # int8
+        amax = jnp.max(jnp.abs(Q), axis=-1, keepdims=True)
+        qs = jnp.where(amax > 0.0, amax / 127.0, 1.0)
+        qq = jnp.clip(jnp.round(Q / qs), -127.0, 127.0).astype(jnp.int32)
+        idot = jnp.sum(vb.astype(jnp.int32) * qq[:, None, None, :], axis=-1)
+        df = sc * qs[:, :, None] * idot.astype(jnp.float32)
+    d2q = jnp.maximum(
+        nrm - 2.0 * df + q2[:, None, None], 0.0
+    ).reshape(Qn, C)
+    ci = ib.reshape(Qn, C)
+    binid = jnp.sum(
+        (hw[:, :, None] > halves[None, None, :]).astype(jnp.int32), axis=-1
+    )  # (Qn, C)
+    cnt = jnp.sum(
+        binid[:, :, None] == jnp.arange(steps)[None, None, :], axis=1,
+        dtype=jnp.int32,
+    )  # (Qn, steps)
+    bd0 = jnp.full((Qn, ks), _INF)
+    bi0 = jnp.full((Qn, ks), n, jnp.int32)
+    bds, bis = [], []
+    for j in range(steps):
+        dj = jnp.where(binid == j, d2q, _INF)
+        bd_j, bi_j = merge_dedup_topk(bd0, bi0, dj, ci, n, ks)
+        bds.append(bd_j)
+        bis.append(bi_j)
+    return jnp.stack(bds, axis=1), jnp.stack(bis, axis=1), cnt
+
+
+def _rerank_bins(index: DBLSHIndex, Q: jax.Array, bins_d, bins_i):
+    """Exact fp32 re-rank of the quantized shortlist bins.
+
+    Gathers the shortlisted data rows and recomputes norm-form distances
+    in fp32, so the epilogue's merges — and with them the C2
+    certification ``kth <= c*r`` — run on exact distances.  The only
+    quantization-induced loss left is a true neighbor falling outside
+    its bin's top-4k shortlist (the documented recall band)."""
+    n = index.n
+    Qn, steps, ks = bins_d.shape
+    ids = bins_i.reshape(Qn, steps * ks)
+    x = jnp.take(
+        index.data, ids, axis=0, mode="fill", fill_value=0.0
+    ).reshape(Qn, steps, ks, -1)
+    nrm = jnp.sum(jnp.square(x), axis=-1)
+    dots = jnp.sum(x * Q[:, None, None, :], axis=-1)
+    q2 = jnp.sum(jnp.square(Q), axis=-1)
+    d2 = jnp.maximum(nrm - 2.0 * dots + q2[:, None, None], 0.0)
+    valid = (bins_i < n) & jnp.isfinite(bins_d)
+    return jnp.where(valid, d2, _INF)
+
+
 def _masked_delta_merge(best_d, best_i, delta, d2, ci, done, n, k):
     """One schedule-step merge: fold the newly-admitted delta slice into
     the running top-k with finished queries frozen — skipping the whole
@@ -270,7 +440,7 @@ TERM_EXHAUSTED, TERM_C1, TERM_C2 = 0, 1, 2
     jax.jit,
     static_argnames=(
         "k", "steps", "engine", "interpret", "with_stats", "exact",
-        "termination", "with_explain",
+        "termination", "with_explain", "dtype",
     ),
 )
 def search_batch_fixed(
@@ -285,6 +455,7 @@ def search_batch_fixed(
     exact: bool = False,
     termination: Termination | None = None,
     with_explain: bool = False,
+    dtype: str = "fp32",
 ):
     """Fixed-schedule batched (c,k)-ANN — one-pass incremental probing.
 
@@ -292,10 +463,17 @@ def search_batch_fixed(
       index: built DBLSHIndex (engine='inline' needs inline_vectors=True).
       Q: (Qn, d) query batch.
       k, r0, steps: top-k, initial radius, schedule length.
-      engine: 'jnp' | 'kernel' | 'inline'.
+      engine: 'jnp' | 'kernel' | 'inline'.  The Pallas engines run the
+        *fully fused* one-pass kernel: select-slot DMA, halfwidths,
+        distances, schedule admission and the per-step top-k merges all
+        happen in-kernel via per-step bin accumulators — candidates
+        never round-trip through HBM between select and the final (k,)
+        result.  Results are identical to the 'jnp' pool path (bit-equal
+        under ``exact=True``).
       with_stats: also return per-query probe statistics.
       exact: use materialized-diff distances instead of the MXU norm
         form (bit-compatible with :func:`search_batch_fixed_ref`).
+        Requires ``dtype='fp32'``.
       termination: ``None`` runs the plain fixed schedule; a
         :class:`Termination` enables per-query adaptive termination
         (paper C1/C2 done masks + batch-wide while_loop early exit —
@@ -306,6 +484,14 @@ def search_batch_fixed(
         the done-mask updates are computed identically — explain only
         *observes* — so distances/ids are bit-equal to the
         ``with_explain=False`` program.
+      dtype: 'fp32' (default) | 'bf16' | 'int8'.  The quantized dtypes
+        compute candidate dots against the index's quantized blocks
+        (``params.quant_dtype`` must match), shortlist the top-4k per
+        schedule bin, and re-rank the shortlist in exact fp32 before
+        the merges — so the C2 certificate stays sound and the only
+        loss is a neighbor falling off its bin's shortlist (recall@10
+        within 0.005 of fp32 on the benchmark workload; see
+        DESIGN.md §13 for the error model).
 
     Returns: (Qn, k) distances ascending, (Qn, k) ids; with ``with_stats``
     a third element ``{"radius_steps": (Qn,) int32, "candidates": (Qn,)
@@ -326,15 +512,21 @@ def search_batch_fixed(
                                            certified radius under C2)}
     """
     validate_engine(engine)
+    p = index.params
+    validate_dtype(dtype, p, exact)
     if with_explain:
         with_stats = True
-    p = index.params
     k = k or p.k
     n = index.n
     Qn = Q.shape[0]
     nb = index.nb
     B = p.block_size
     L, M = p.L, p.max_blocks
+    quant = dtype != "fp32"
+    # Pallas engines (and every quantized dtype) run the fused bin path;
+    # 'jnp' + fp32 keeps the seed's pool path verbatim
+    use_bins = engine in ("kernel", "inline") or quant
+    ks = 4 * k if quant else k  # quantized: top-4k shortlist per bin
 
     # named_scope labels are HLO metadata only (numerics-invariant): they
     # let a jax.profiler device trace line up with the host-side
@@ -354,15 +546,37 @@ def search_batch_fixed(
         offs = (jnp.arange(L, dtype=jnp.int32) * nb)[:, None, None]
         blk_flat = jnp.where(blk < nb, blk + offs, L * nb)  # (L, Qn, M)
         blk_q = jnp.swapaxes(blk_flat, 0, 1).reshape(Qn, L * M)
-        ci = jnp.take(
-            index.ids_blocks.reshape(L * nb, B), blk_q, axis=0,
-            mode="fill", fill_value=n,
-        ).reshape(Qn, L * M * B)
 
-    # -------- verify once: exact distances + admission halfwidths for
-    # every selected slot, whole schedule
+    # schedule half window widths, built by the same f32 multiply chain
+    # the step loop runs — the in-kernel admission compares against the
+    # bit-identical values the host masks would use
+    halves_list, rr = [], jnp.asarray(r0, jnp.float32)
+    for _ in range(steps):
+        halves_list.append(0.5 * (p.w0 * rr))
+        rr = rr * p.c
+    halves_sched = jnp.stack(halves_list)  # (steps,)
+
+    # -------- verify once: either the fused bin accumulators (Pallas
+    # engines / quantized dtypes — per-step deltas and counters computed
+    # in-kernel) or the (Qn, C) distance pool (the 'jnp' fp32 path)
+    bins_d = bins_i = cum_adm = d2 = hw = ci = None
     with jax.named_scope("dblsh.verify"):
-        d2, hw = _gather_pool(index, blk_q, G, Q, engine, exact, interpret)
+        if use_bins:
+            bins_d, bins_i, bin_cnt = _fused_bins(
+                index, blk_q, G, Q, halves_sched, engine, exact, dtype,
+                ks, interpret,
+            )
+            if quant:
+                bins_d = _rerank_bins(index, Q, bins_d, bins_i)
+            # C1 admission count at step j == slots in bins 0..j
+            cum_adm = jnp.cumsum(bin_cnt, axis=1)
+        else:
+            ci = jnp.take(
+                index.ids_blocks.reshape(L * nb, B), blk_q, axis=0,
+                mode="fill", fill_value=n,
+            ).reshape(Qn, L * M * B)
+            d2, hw = _gather_pool(index, blk_q, G, Q, engine, exact,
+                                  interpret)
 
     bhw_q = jnp.swapaxes(bhw, 0, 1).reshape(Qn, L * M)  # (Qn, S)
 
@@ -405,12 +619,22 @@ def search_batch_fixed(
 
         # newly-admitted delta slice: slots whose window first reaches
         # them at this radius (hw = +inf slots never admit); finished
-        # queries keep their result through the masked merge
+        # queries keep their result through the masked merge.  On the
+        # fused path the delta IS bin j (the kernel binned candidates by
+        # first-admitting step), so the merge folds ks pre-reduced
+        # entries instead of the whole C-slot pool.
         with jax.named_scope("dblsh.merge"):
-            delta = (hw <= half) & (hw > prev_half)
-            best_d, best_i = _masked_delta_merge(
-                best_d, best_i, delta, d2, ci, done, n, k
-            )
+            if use_bins:
+                cd = jnp.take(bins_d, j, axis=1)  # (Qn, ks)
+                cids = jnp.take(bins_i, j, axis=1)
+                best_d, best_i = _masked_delta_merge(
+                    best_d, best_i, jnp.isfinite(cd), cd, cids, done, n, k
+                )
+            else:
+                delta = (hw <= half) & (hw > prev_half)
+                best_d, best_i = _masked_delta_merge(
+                    best_d, best_i, delta, d2, ci, done, n, k
+                )
         if use_c2:
             fired = best_d[:, k - 1] <= jnp.square(p.c * r)
             if with_explain:
@@ -426,10 +650,17 @@ def search_batch_fixed(
         if c1_thr is not None:
             # C1 from the halfwidths the verify engines already emitted:
             # slots the current window admits whose distance is finite
-            # (verified work) — no extra gather/DMA to evaluate
-            n_adm = jnp.sum(
-                ((hw <= half) & jnp.isfinite(d2)).astype(jnp.int32), axis=1
-            )
+            # (verified work) — no extra gather/DMA to evaluate.  The
+            # fused path's per-bin counters carry the same quantity:
+            # cumsum(cnt)[j] == #{hw <= w_j/2} (admitted slots are live
+            # slots, whose distances are always finite).
+            if use_bins:
+                n_adm = jnp.take(cum_adm, j, axis=1)  # (Qn,)
+            else:
+                n_adm = jnp.sum(
+                    ((hw <= half) & jnp.isfinite(d2)).astype(jnp.int32),
+                    axis=1,
+                )
             fired = n_adm >= c1_thr
             if with_explain:
                 newly_done = fired & ~done
@@ -487,15 +718,11 @@ def search_batch_fixed(
 
     if with_explain:
         # exhausted queries (cause 0) terminated at the schedule's final
-        # radius; the per-step halfwidths replay the same multiply chain
-        # the loop ran, so they match the admission masks bit-for-bit
-        halves, rr = [], jnp.asarray(r0, jnp.float32)
-        for _ in range(steps):
-            halves.append(0.5 * (p.w0 * rr))
-            rr = rr * p.c
+        # radius; halves_sched replayed the same multiply chain the loop
+        # ran, so it matches the admission masks bit-for-bit
         ex = dict(
             ex,
-            step_half=jnp.stack(halves),
+            step_half=halves_sched,
             final_radius=jnp.where(
                 ex["term_cause"] == TERM_EXHAUSTED, r_last,
                 ex["final_radius"],
@@ -696,6 +923,7 @@ def search_batch_fixed_dispatch(
     exact: bool = False,
     termination: Termination | None = None,
     with_explain: bool = False,
+    dtype: str = "fp32",
 ) -> PendingSearch:
     """Issue a fixed-schedule search without blocking on the device.
 
@@ -709,7 +937,7 @@ def search_batch_fixed_dispatch(
     out = search_batch_fixed(
         index, Q, k=k, r0=r0, steps=steps, engine=engine,
         interpret=interpret, with_stats=with_stats, exact=exact,
-        termination=termination, with_explain=with_explain,
+        termination=termination, with_explain=with_explain, dtype=dtype,
     )
     if with_explain:
         return PendingSearch(out[0], out[1], out[2], out[3])

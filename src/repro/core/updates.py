@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from . import hashing
-from .index import DBLSHIndex, _str_order, build
+from .index import DBLSHIndex, _str_order, build, quantize_blocks
 from .params import DBLSHParams
 
 __all__ = ["grown_params", "insert", "delete", "compact", "live_count",
@@ -112,6 +112,16 @@ def insert(index: DBLSHIndex, new_points: jax.Array) -> DBLSHIndex:
         fields["vec_blocks"] = jnp.concatenate([index.vec_blocks, vb], axis=1)
     else:
         fields["vec_blocks"] = index.vec_blocks
+    if p.quant_dtype != "none":
+        # quantization is per-slot, so the appended region quantizes
+        # independently of the old blocks (ids local to new_points;
+        # padded slots hit the zero fill — never admitted anyway)
+        qb, qs = quantize_blocks(new_points, ib - n_old, p.quant_dtype)
+        fields["qvec_blocks"] = jnp.concatenate([index.qvec_blocks, qb], axis=1)
+        fields["qvec_scale"] = jnp.concatenate([index.qvec_scale, qs], axis=1)
+    else:
+        fields["qvec_blocks"] = index.qvec_blocks
+        fields["qvec_scale"] = index.qvec_scale
     return DBLSHIndex(**fields)
 
 
@@ -141,6 +151,11 @@ def delete(index: DBLSHIndex, del_ids: jax.Array) -> DBLSHIndex:
         data=index.data,
         vec_blocks=index.vec_blocks,
         norm_blocks=jnp.where(dead, _INF, index.norm_blocks),
+        # quantized blocks stay as-is: tombstoned slots project to +inf,
+        # so hw=inf keeps them out of every schedule bin, and the exact
+        # re-rank masks their sentinel ids — no touch-up needed
+        qvec_blocks=index.qvec_blocks,
+        qvec_scale=index.qvec_scale,
         params=index.params,
     )
 
@@ -177,6 +192,7 @@ def compact(index: DBLSHIndex, key) -> tuple[DBLSHIndex, jax.Array]:
     new_params = DBLSHParams.derive(
         n=n_live, d=p.d, c=p.c, w0=p.w0, t=p.t, k=p.k,
         block_size=p.block_size, inline_vectors=p.inline_vectors,
+        quant_dtype=p.quant_dtype,
     )
     id_map = jnp.full((n_old,), -1, jnp.int32)
     id_map = id_map.at[live_ids].set(jnp.arange(n_live, dtype=jnp.int32))

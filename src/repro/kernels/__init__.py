@@ -8,6 +8,8 @@ mode (TPU is the compile target, CPU validates semantics).
 from .ops import (
     candidate_dist,
     candidate_verify,
+    fused_cand_search,
+    fused_window_search,
     pairwise_l2,
     window_dist,
     window_verify,
@@ -17,6 +19,8 @@ from . import ref
 __all__ = [
     "candidate_dist",
     "candidate_verify",
+    "fused_cand_search",
+    "fused_window_search",
     "pairwise_l2",
     "window_dist",
     "window_verify",

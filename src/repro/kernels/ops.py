@@ -17,6 +17,8 @@ from .pairwise_l2 import pairwise_l2_kernel
 from .window_verify import (
     candidate_dist_kernel,
     candidate_verify_kernel,
+    fused_cand_kernel,
+    fused_window_kernel,
     window_dist_kernel,
     window_verify_kernel,
 )
@@ -117,9 +119,13 @@ def window_verify(blk_idx, proj_blocks, vec_blocks, ids_blocks, g, q, w, *,
             pl.BlockSpec((1, 1), lambda qi, m, blk: (0, 0)),  # w
             pl.BlockSpec((1, K), lambda qi, m, blk: (qi, 0)),  # g
             pl.BlockSpec((1, d), lambda qi, m, blk: (qi, 0)),  # q
-            pl.BlockSpec((1, B, K), lambda qi, m, blk: (jnp.minimum(blk[qi, m], nb - 1), 0, 0)),
-            pl.BlockSpec((1, B, d), lambda qi, m, blk: (jnp.minimum(blk[qi, m], nb - 1), 0, 0)),
-            pl.BlockSpec((1, B), lambda qi, m, blk: (jnp.minimum(blk[qi, m], nb - 1), 0)),
+            # invalid slots route to the fixed block 0 (not a clamped
+            # *real* block): consecutive invalid slots keep the same
+            # block index, so Pallas skips the re-DMA entirely, and the
+            # kernel pl.when-skips their compute
+            pl.BlockSpec((1, B, K), lambda qi, m, blk: (jnp.where(blk[qi, m] < nb, blk[qi, m], 0), 0, 0)),
+            pl.BlockSpec((1, B, d), lambda qi, m, blk: (jnp.where(blk[qi, m] < nb, blk[qi, m], 0), 0, 0)),
+            pl.BlockSpec((1, B), lambda qi, m, blk: (jnp.where(blk[qi, m] < nb, blk[qi, m], 0), 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, k), lambda qi, m, blk: (qi, 0)),
@@ -227,12 +233,14 @@ def window_dist(blk_idx, proj_blocks, vec_blocks, norm_blocks, g, q, *,
             pl.BlockSpec((1, 1, K), lambda qi, s, blk: (qi, s // M, 0)),  # g
             pl.BlockSpec((1, d), lambda qi, s, blk: (qi, 0)),  # q
             pl.BlockSpec((1, 1), lambda qi, s, blk: (qi, 0)),  # q2
+            # route invalid slots to fixed block 0 (see window_verify:
+            # unchanged index -> no re-DMA; compute is pl.when-skipped)
             pl.BlockSpec((1, B, K),
-                         lambda qi, s, blk: (jnp.minimum(blk[qi, s], lnb - 1), 0, 0)),
+                         lambda qi, s, blk: (jnp.where(blk[qi, s] < lnb, blk[qi, s], 0), 0, 0)),
             pl.BlockSpec((1, B, d),
-                         lambda qi, s, blk: (jnp.minimum(blk[qi, s], lnb - 1), 0, 0)),
+                         lambda qi, s, blk: (jnp.where(blk[qi, s] < lnb, blk[qi, s], 0), 0, 0)),
             pl.BlockSpec((1, B),
-                         lambda qi, s, blk: (jnp.minimum(blk[qi, s], lnb - 1), 0)),
+                         lambda qi, s, blk: (jnp.where(blk[qi, s] < lnb, blk[qi, s], 0), 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, 1, B), lambda qi, s, blk: (qi, s, 0)),
@@ -249,6 +257,187 @@ def window_dist(blk_idx, proj_blocks, vec_blocks, norm_blocks, g, q, *,
         interpret=_interp(interpret),
     )(blk_idx, g, q, q2, proj_blocks, vec_blocks, norm_blocks)
     return d2.reshape(Qn, S * B), hw.reshape(Qn, S * B)
+
+
+def _quantize_query(q, mode: str):
+    """Query-side arithmetic prep for a distance mode.
+
+    Returns (qv, qs): the query operand in the mode's dtype and the
+    (Q, 1) per-query dequant scale (all-ones when the mode has none)."""
+    Qn = q.shape[0]
+    if mode == "bf16":
+        return q.astype(jnp.bfloat16), jnp.ones((Qn, 1), jnp.float32)
+    if mode == "int8":
+        amax = jnp.max(jnp.abs(q), axis=-1, keepdims=True)
+        qs = jnp.where(amax > 0.0, amax / 127.0, 1.0).astype(jnp.float32)
+        qv = jnp.clip(jnp.round(q / qs), -127.0, 127.0).astype(jnp.int8)
+        return qv, qs
+    return q, None
+
+
+@functools.partial(
+    jax.jit, static_argnames=("M", "ks", "n", "mode", "interpret")
+)
+def fused_window_search(blk_idx, halves, proj_blocks, x_blocks, norm_blocks,
+                        ids_blocks, g, q, *, M, ks, n, mode: str = "norm",
+                        interpret=None, x_scale=None):
+    """Fully fused one-pass search over an 'inline' layout index: block
+    select DMA + halfwidth + distance + schedule binning + per-bin
+    top-ks, one scalar-prefetch kernel — candidates never reach HBM.
+
+    Args:
+      blk_idx: (Q, S) int32 flattened block ids, S = L*M (L*nb invalid).
+      halves: (steps,) f32 schedule half window widths w_j/2, ascending.
+      proj_blocks: (L*nb, B, K); x_blocks: (L*nb, B, d) fp32 vectors
+        (mode 'norm'/'exact') or quantized blocks (mode 'bf16'/'int8');
+      norm_blocks: (L*nb, B) fp32 squared norms (+inf padded);
+      ids_blocks: (L*nb, B) int32; g: (Q, L, K); q: (Q, d) fp32.
+      ks: bin accumulator width (k, or 4k for the quantized shortlist).
+      x_scale: (L*nb, B) per-slot dequant scales (quant modes only).
+
+    Returns:
+      bins_d (Q, steps, ks) f32  per-bin ascending top-ks distances,
+      bins_i (Q, steps, ks) i32  matching ids (n = unfilled),
+      cnt    (Q, steps)     i32  admitted candidate slots per bin
+                                 (cumsum = the C1 admission count).
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    Qn, S = blk_idx.shape
+    lnb, B, K = proj_blocks.shape
+    d = x_blocks.shape[-1]
+    steps = halves.shape[0]
+    halves2 = halves.reshape(1, steps).astype(jnp.float32)
+    q2 = jnp.sum(jnp.square(q), axis=-1, keepdims=True)  # (Q, 1) fp32
+    qv, qs = _quantize_query(q, mode)
+    quant = mode in ("bf16", "int8")
+
+    def _route(blk, qi, s):
+        return jnp.where(blk[qi, s] < lnb, blk[qi, s], 0)
+
+    in_specs = [
+        pl.BlockSpec((1, steps), lambda qi, s, blk: (0, 0)),  # halves
+        pl.BlockSpec((1, 1, K), lambda qi, s, blk: (qi, s // M, 0)),  # g
+        pl.BlockSpec((1, d), lambda qi, s, blk: (qi, 0)),  # q
+        pl.BlockSpec((1, 1), lambda qi, s, blk: (qi, 0)),  # q2
+    ]
+    operands = [halves2, g, qv, q2]
+    if quant:
+        in_specs.append(pl.BlockSpec((1, 1), lambda qi, s, blk: (qi, 0)))
+        operands.append(qs)
+    in_specs += [
+        pl.BlockSpec((1, B, K), lambda qi, s, blk: (_route(blk, qi, s), 0, 0)),
+        pl.BlockSpec((1, B, d), lambda qi, s, blk: (_route(blk, qi, s), 0, 0)),
+        pl.BlockSpec((1, B), lambda qi, s, blk: (_route(blk, qi, s), 0)),
+        pl.BlockSpec((1, B), lambda qi, s, blk: (_route(blk, qi, s), 0)),
+    ]
+    operands += [proj_blocks, x_blocks, norm_blocks, ids_blocks]
+    if quant:
+        in_specs.append(
+            pl.BlockSpec((1, B), lambda qi, s, blk: (_route(blk, qi, s), 0))
+        )
+        operands.append(x_scale)
+
+    kern = functools.partial(
+        fused_window_kernel, lnb=lnb, steps=steps, ks=ks, mode=mode
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(Qn, S),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, steps, ks), lambda qi, s, blk: (qi, 0, 0)),
+            pl.BlockSpec((1, steps, ks), lambda qi, s, blk: (qi, 0, 0)),
+            pl.BlockSpec((1, steps), lambda qi, s, blk: (qi, 0)),
+        ],
+    )
+    bd, bi, cnt = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((Qn, steps, ks), jnp.float32),
+            jax.ShapeDtypeStruct((Qn, steps, ks), jnp.int32),
+            jax.ShapeDtypeStruct((Qn, steps), jnp.int32),
+        ],
+        interpret=_interp(interpret),
+    )(blk_idx, *operands)
+    return bd, jnp.where(bi == _IMAX, n, bi), cnt
+
+
+@functools.partial(
+    jax.jit, static_argnames=("ks", "n", "mode", "tile_c", "interpret")
+)
+def fused_cand_search(cand_proj, cand_x, cand_norms, cand_ids, halves, g, q,
+                      *, ks, n, mode: str = "norm", tile_c: int = 256,
+                      interpret=None, cand_scale=None):
+    """Gathered twin of :func:`fused_window_search` ('kernel' engine):
+    pre-gathered candidates, same bin-accumulator outputs.
+
+    Args:
+      cand_proj: (Q, L, Ct, K) (+inf on invalid slots — that alone keeps
+        them out of every bin); cand_x: (Q, L, Ct, d) fp32 or quantized;
+      cand_norms: (Q, L, Ct) fp32 (+inf padded); cand_ids: (Q, L, Ct);
+      halves: (steps,); g: (Q, L, K); q: (Q, d) fp32;
+      cand_scale: (Q, L, Ct) dequant scales (quant modes only).
+
+    Returns: (bins_d, bins_i, cnt) as :func:`fused_window_search`.
+    """
+    Qn, L, Ct, K = cand_proj.shape
+    d = cand_x.shape[-1]
+    steps = halves.shape[0]
+    tile_c = min(tile_c, max(8, Ct))
+    cand_proj = _pad_to(cand_proj, tile_c, 2, jnp.inf)
+    cand_x = _pad_to(cand_x, tile_c, 2, 0)
+    cand_norms = _pad_to(cand_norms, tile_c, 2, jnp.inf)
+    cand_ids = _pad_to(cand_ids, tile_c, 2, n)
+    Cp = cand_proj.shape[2]
+    halves2 = halves.reshape(1, steps).astype(jnp.float32)
+    q2 = jnp.sum(jnp.square(q), axis=-1, keepdims=True)  # (Q, 1)
+    qv, qs = _quantize_query(q, mode)
+    quant = mode in ("bf16", "int8")
+
+    in_specs = [
+        pl.BlockSpec((1, steps), lambda qi, l, t: (0, 0)),  # halves
+        pl.BlockSpec((1, 1, K), lambda qi, l, t: (qi, l, 0)),  # g
+        pl.BlockSpec((1, d), lambda qi, l, t: (qi, 0)),  # q
+        pl.BlockSpec((1, 1), lambda qi, l, t: (qi, 0)),  # q2
+    ]
+    operands = [halves2, g, qv, q2]
+    if quant:
+        in_specs.append(pl.BlockSpec((1, 1), lambda qi, l, t: (qi, 0)))
+        operands.append(qs)
+    in_specs += [
+        pl.BlockSpec((1, 1, tile_c, K), lambda qi, l, t: (qi, l, t, 0)),
+        pl.BlockSpec((1, 1, tile_c, d), lambda qi, l, t: (qi, l, t, 0)),
+        pl.BlockSpec((1, 1, tile_c), lambda qi, l, t: (qi, l, t)),
+        pl.BlockSpec((1, 1, tile_c), lambda qi, l, t: (qi, l, t)),
+    ]
+    operands += [cand_proj, cand_x, cand_norms, cand_ids]
+    if quant:
+        cand_scale = _pad_to(cand_scale, tile_c, 2, 1.0)
+        in_specs.append(
+            pl.BlockSpec((1, 1, tile_c), lambda qi, l, t: (qi, l, t))
+        )
+        operands.append(cand_scale)
+
+    kern = functools.partial(fused_cand_kernel, steps=steps, ks=ks, mode=mode)
+    bd, bi, cnt = pl.pallas_call(
+        kern,
+        grid=(Qn, L, Cp // tile_c),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, steps, ks), lambda qi, l, t: (qi, 0, 0)),
+            pl.BlockSpec((1, steps, ks), lambda qi, l, t: (qi, 0, 0)),
+            pl.BlockSpec((1, steps), lambda qi, l, t: (qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Qn, steps, ks), jnp.float32),
+            jax.ShapeDtypeStruct((Qn, steps, ks), jnp.int32),
+            jax.ShapeDtypeStruct((Qn, steps), jnp.int32),
+        ],
+        interpret=_interp(interpret),
+    )(*operands)
+    return bd, jnp.where(bi == _IMAX, n, bi), cnt
 
 
 @functools.partial(jax.jit, static_argnames=("tile_q", "tile_n", "tile_d", "interpret"))

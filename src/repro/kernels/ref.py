@@ -14,6 +14,7 @@ __all__ = [
     "candidate_verify_ref",
     "candidate_dist_ref",
     "window_dist_ref",
+    "fused_search_ref",
     "pairwise_l2_ref",
 ]
 
@@ -122,6 +123,50 @@ def window_dist_ref(blk_idx, proj_blocks, vec_blocks, norm_blocks, g, q, M,
         dots = jnp.einsum("qsbd,qd->qsb", vb, q)
         d2 = jnp.maximum(nb_ - 2.0 * dots + q2[:, None, None], 0.0)
     return d2.reshape(Qn, S * B), hw.reshape(Qn, S * B)
+
+
+def fused_search_ref(d2, hw, ids, halves, n, ks):
+    """Oracle for the fused-search bin accumulators, from a flat pool.
+
+    Given per-slot squared distances ``d2`` (Q, C), admission halfwidths
+    ``hw`` (Q, C), ids (Q, C) and the schedule half-widths ``halves``
+    (steps,), reproduce the kernel contract with plain host loops:
+
+      * ``binid = #{j: hw > halves[j]}`` — first admitting step
+        (``steps`` = never admitted);
+      * per bin, the ks lexicographically-smallest *distinct* (d2, id)
+        pairs with finite d2 (the kernel's merge_topk dedups identical
+        pairs — cross-table duplicates count once);
+      * ``cnt[q, j] = #{slots with binid == j}``.
+
+    Returns numpy (bins_d (Q, steps, ks) f32, bins_i (Q, steps, ks) i32
+    with ``n`` on unfilled slots, cnt (Q, steps) i32).  Distance mode is
+    the caller's business: feed fp32 or quantized d2 pools alike.
+    """
+    import numpy as np
+
+    d2 = np.asarray(d2)
+    hw = np.asarray(hw)
+    ids = np.asarray(ids)
+    halves = np.asarray(halves)
+    Qn, C = d2.shape
+    steps = halves.shape[0]
+    bd = np.full((Qn, steps, ks), np.inf, np.float32)
+    bi = np.full((Qn, steps, ks), n, np.int32)
+    cnt = np.zeros((Qn, steps), np.int32)
+    for qi in range(Qn):
+        binid = (hw[qi][:, None] > halves[None, :]).sum(axis=1)
+        for j in range(steps):
+            sel = np.nonzero(binid == j)[0]
+            cnt[qi, j] = sel.size
+            pairs = sorted(
+                {(float(d2[qi, s]), int(ids[qi, s])) for s in sel}
+            )
+            pairs = [p for p in pairs if np.isfinite(p[0])][:ks]
+            for r, (dd, ii) in enumerate(pairs):
+                bd[qi, j, r] = dd
+                bi[qi, j, r] = ii
+    return bd, bi, cnt
 
 
 def pairwise_l2_ref(Q, X):

@@ -45,9 +45,29 @@ ops. Because cross-table duplicates carry identical (dist, id) pairs,
 the "remove all entries equal to the selected (dist, id)" step performs
 exact dedup for free.
 
+Fully fused one-pass variants (the serving path's fast lane): the
+schedule masking and the per-step delta merges move *into* the kernel,
+so candidates never touch HBM between block select and the final
+result.  Each candidate is assigned its schedule **bin** — the first
+step whose window admits it, ``binid = #{j: hw > w_j/2}`` — and folded
+into a per-(query, step) top-ks accumulator plus an admitted-slot
+counter (the ``with_stats``/C1 feed).  The caller recovers exact
+per-step merge semantics by prefix-merging the bins (windows nest, so
+bin j IS the step-j delta):
+
+* ``fused_cand_kernel``   — pre-gathered candidates, grid (Q, L, Ct/TC).
+* ``fused_window_kernel`` — scalar-prefetch block DMA, grid (Q, S).
+
+Both take a ``mode`` in {'exact', 'norm', 'bf16', 'int8'}: the
+quantized modes compute the dot against quantized blocks (per-slot
+symmetric int8 scales / plain bf16 casts) while norms, halfwidths and
+admission stay fp32-exact — the caller re-ranks the shortlist in fp32.
+
 VMEM budget (per grid step, fp32): TILE_C*(K + d + 1) + 2k floats.
 With TILE_C = 256, K = 12, d = 128, k = 50: ~145 KiB — comfortably
 inside the ~16 MiB v5e VMEM; TILE_C is raised by ops.py when d is small.
+The fused accumulators add steps*(2*ks + 1) words — 2.6 KiB at
+steps = 8, ks = 40 (see DESIGN.md §13 for the full table).
 """
 
 from __future__ import annotations
@@ -145,22 +165,25 @@ def window_verify_kernel(
         topd_ref[...] = jnp.full_like(topd_ref, _INF)
         topi_ref[...] = jnp.full_like(topi_ref, _IMAX)
 
-    blk_valid = blk_ref[qi, m] < nb
-    half = 0.5 * w_ref[0, 0]
-    p = proj_ref[0]
-    x = vec_ref[0]
-    ids = ids_ref[0]
-    g = g_ref[0]
-    q = q_ref[0]
+    # invalid slots are routed to block 0 by the index_map; skip their
+    # compute entirely — the accumulator simply isn't touched
+    @pl.when(blk_ref[qi, m] < nb)
+    def _compute():
+        half = 0.5 * w_ref[0, 0]
+        p = proj_ref[0]
+        x = vec_ref[0]
+        ids = ids_ref[0]
+        g = g_ref[0]
+        q = q_ref[0]
 
-    inbox = jnp.all(jnp.abs(p - g[None, :]) <= half, axis=-1)
-    diff = x - q[None, :]
-    d2 = jnp.sum(diff * diff, axis=-1)
-    d2 = jnp.where(inbox & (ids < n) & blk_valid, d2, _INF)
+        inbox = jnp.all(jnp.abs(p - g[None, :]) <= half, axis=-1)
+        diff = x - q[None, :]
+        d2 = jnp.sum(diff * diff, axis=-1)
+        d2 = jnp.where(inbox & (ids < n), d2, _INF)
 
-    nd, ni = merge_topk(d2, ids, topd_ref[0], topi_ref[0], k)
-    topd_ref[0] = nd
-    topi_ref[0] = ni
+        nd, ni = merge_topk(d2, ids, topd_ref[0], topi_ref[0], k)
+        topd_ref[0] = nd
+        topi_ref[0] = ni
 
 
 def candidate_dist_kernel(
@@ -208,26 +231,178 @@ def window_dist_kernel(
     """Grid (Q, S). Scalar-prefetch twin of ``candidate_dist_kernel``:
     the index_map DMAs exactly the selected STR block of the flattened
     (L*nb) table axis — the serving path's only touch of the d-dim
-    vectors for the entire radius schedule."""
+    vectors for the entire radius schedule.
+
+    Invalid slots (blk >= lnb) are routed to block 0 by the index_map
+    (consecutive invalid slots therefore re-DMA nothing — Pallas skips
+    the copy when the block index is unchanged) and the compute is
+    ``pl.when``-skipped entirely: the slot's outputs are written as +inf
+    so the schedule mask can never admit it."""
     qi = pl.program_id(0)
     s = pl.program_id(1)
 
     blk_valid = blk_ref[qi, s] < lnb
-    p = proj_ref[0]  # (B, K)
-    x = vec_ref[0]  # (B, d)
-    g = g_ref[0, 0]  # (K,)
-    q = q_ref[0]  # (d,)
 
-    hw = jnp.max(jnp.abs(p - g[None, :]), axis=-1)  # (B,)
-    # invalid slots DMA a clamped real block: force them out of every
-    # window so the schedule mask can never admit them
-    hw = jnp.where(blk_valid, hw, _INF)
-    if exact:
+    @pl.when(blk_valid)
+    def _compute():
+        p = proj_ref[0]  # (B, K)
+        x = vec_ref[0]  # (B, d)
+        g = g_ref[0, 0]  # (K,)
+        q = q_ref[0]  # (d,)
+
+        hw = jnp.max(jnp.abs(p - g[None, :]), axis=-1)  # (B,)
+        if exact:
+            diff = x - q[None, :]
+            d2 = jnp.sum(diff * diff, axis=-1)
+        else:
+            d2 = jnp.maximum(
+                nrm_ref[0] - 2.0 * jnp.dot(x, q) + q2_ref[0, 0], 0.0
+            )
+        d2_ref[0, 0] = d2
+        hw_ref[0, 0] = hw
+
+    @pl.when(~blk_valid)
+    def _invalid():
+        d2_ref[...] = jnp.full_like(d2_ref, _INF)
+        hw_ref[...] = jnp.full_like(hw_ref, _INF)
+
+
+def _slot_d2(x, q, nrm, q2, *, mode: str, xscale=None, qscale=None):
+    """Per-slot squared distances in the requested arithmetic mode.
+
+    x: (C, d) candidate vectors (fp32, bf16 or int8 depending on mode);
+    q: (d,) query in the matching dtype; nrm/q2: fp32 exact squared
+    norms.  ``bf16``/``int8`` compute only the *dot* reduced-precision —
+    norms stay fp32-exact, so the error model is confined to the cross
+    term (DESIGN.md §13)."""
+    if mode == "exact":
         diff = x - q[None, :]
-        d2 = jnp.sum(diff * diff, axis=-1)
-    else:
-        d2 = jnp.maximum(
-            nrm_ref[0] - 2.0 * jnp.dot(x, q) + q2_ref[0, 0], 0.0
+        return jnp.sum(diff * diff, axis=-1)
+    if mode == "norm":
+        return jnp.maximum(nrm - 2.0 * jnp.dot(x, q) + q2, 0.0)
+    if mode == "int8":
+        dot = jnp.dot(x, q, preferred_element_type=jnp.int32).astype(
+            jnp.float32
         )
-    d2_ref[0, 0] = d2
-    hw_ref[0, 0] = hw
+    elif mode == "bf16":
+        dot = jnp.dot(x, q, preferred_element_type=jnp.float32)
+    else:  # pragma: no cover - guarded by the wrappers
+        raise ValueError(f"unknown distance mode {mode!r}")
+    return jnp.maximum(nrm - 2.0 * (xscale * qscale * dot) + q2, 0.0)
+
+
+def _fused_slot_update(hw, d2, ids, halves, bd_ref, bi_ref, cnt_ref, *,
+                       steps: int, ks: int):
+    """Fold one slot's candidates into the per-step bin accumulators.
+
+    Each candidate belongs to exactly one schedule *bin*: the first step
+    whose window admits it, ``binid = #{j : hw > w_j/2}`` (``steps`` =
+    never admitted; hw = +inf slots land there).  Windows nest, so the
+    step-j delta slice of the radius schedule is exactly bin j — the
+    epilogue recovers the per-step merge semantics by prefix-merging the
+    bins.  ``cnt`` accumulates admitted candidate slots per bin; its
+    cumulative sum equals the C1 admission count ``#{hw <= w_j/2}``.
+
+    ``bd/bi`` are (1, steps, ks) accumulators revisited across the slot
+    axis of the grid; ``merge_topk``'s drop-equal-(dist, id) step dedups
+    cross-table duplicates within a bin exactly as the flat merge does.
+    """
+    c = hw.shape[0]
+    binid = jnp.sum((hw[None, :] > halves[:, None]).astype(jnp.int32), axis=0)
+    # 2D iota (broadcasted_iota): 1D iota does not lower on TPU
+    stepv = jax.lax.broadcasted_iota(jnp.int32, (steps, c), 0)
+    hits = binid[None, :] == stepv  # (steps, C)
+    cnt_ref[0] = cnt_ref[0] + jnp.sum(hits.astype(jnp.int32), axis=1)
+    for j in range(steps):
+        m = binid == j
+
+        @pl.when(jnp.any(m))
+        def _merge(j=j, m=m):
+            nd, ni = merge_topk(
+                jnp.where(m, d2, _INF), ids, bd_ref[0, j], bi_ref[0, j], ks
+            )
+            bd_ref[0, j] = nd
+            bi_ref[0, j] = ni
+
+
+def fused_window_kernel(*refs, lnb: int, steps: int, ks: int, mode: str):
+    """One-pass fused search over an 'inline' layout: select-slot DMA +
+    halfwidth + distance + schedule binning + per-bin top-ks, one kernel.
+
+    Grid (Q, S).  Scalar-prefetch block DMA exactly as
+    ``window_dist_kernel``; candidates never reach HBM — the only
+    outputs are the (1, steps, ks) bin accumulators and the (1, steps)
+    admitted-slot counters, revisited across the S slot steps.
+
+    Quantized modes take two extra refs: the per-query quant scale
+    (qs, (1,1)) after q2 and the per-slot dequant scales (scl, (1,B))
+    after ids."""
+    quant = mode in ("bf16", "int8")
+    if quant:
+        (blk_ref, halves_ref, g_ref, q_ref, q2_ref, qs_ref,
+         proj_ref, vec_ref, nrm_ref, ids_ref, scl_ref,
+         bd_ref, bi_ref, cnt_ref) = refs
+    else:
+        (blk_ref, halves_ref, g_ref, q_ref, q2_ref,
+         proj_ref, vec_ref, nrm_ref, ids_ref,
+         bd_ref, bi_ref, cnt_ref) = refs
+    qi = pl.program_id(0)
+    s = pl.program_id(1)
+
+    @pl.when(s == 0)
+    def _init():
+        bd_ref[...] = jnp.full_like(bd_ref, _INF)
+        bi_ref[...] = jnp.full_like(bi_ref, _IMAX)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    @pl.when(blk_ref[qi, s] < lnb)
+    def _compute():
+        p = proj_ref[0]  # (B, K)
+        g = g_ref[0, 0]  # (K,)
+        hw = jnp.max(jnp.abs(p - g[None, :]), axis=-1)  # (B,)
+        d2 = _slot_d2(
+            vec_ref[0], q_ref[0], nrm_ref[0], q2_ref[0, 0], mode=mode,
+            xscale=scl_ref[0] if quant else None,
+            qscale=qs_ref[0, 0] if quant else None,
+        )
+        _fused_slot_update(
+            hw, d2, ids_ref[0], halves_ref[0], bd_ref, bi_ref, cnt_ref,
+            steps=steps, ks=ks,
+        )
+
+
+def fused_cand_kernel(*refs, steps: int, ks: int, mode: str):
+    """Gathered twin of ``fused_window_kernel``: grid (Q, L, Ct_tiles)
+    over pre-gathered candidates (``kernel`` engine / 'gather' layout).
+    Invalid slots carry +inf projections from the gather fill, so their
+    hw = +inf keeps them out of every bin — no validity scalar needed."""
+    quant = mode in ("bf16", "int8")
+    if quant:
+        (halves_ref, g_ref, q_ref, q2_ref, qs_ref,
+         proj_ref, vec_ref, nrm_ref, ids_ref, scl_ref,
+         bd_ref, bi_ref, cnt_ref) = refs
+    else:
+        (halves_ref, g_ref, q_ref, q2_ref,
+         proj_ref, vec_ref, nrm_ref, ids_ref,
+         bd_ref, bi_ref, cnt_ref) = refs
+    li = pl.program_id(1)
+    t = pl.program_id(2)
+
+    @pl.when((li == 0) & (t == 0))
+    def _init():
+        bd_ref[...] = jnp.full_like(bd_ref, _INF)
+        bi_ref[...] = jnp.full_like(bi_ref, _IMAX)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    p = proj_ref[0, 0]  # (TC, K)
+    g = g_ref[0, 0]  # (K,)
+    hw = jnp.max(jnp.abs(p - g[None, :]), axis=-1)  # (TC,)
+    d2 = _slot_d2(
+        vec_ref[0, 0], q_ref[0], nrm_ref[0, 0], q2_ref[0, 0], mode=mode,
+        xscale=scl_ref[0, 0] if quant else None,
+        qscale=qs_ref[0, 0] if quant else None,
+    )
+    _fused_slot_update(
+        hw, d2, ids_ref[0, 0], halves_ref[0], bd_ref, bi_ref, cnt_ref,
+        steps=steps, ks=ks,
+    )

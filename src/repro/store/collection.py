@@ -38,7 +38,12 @@ import numpy as np
 
 from ..checkpoint import Checkpointer
 from ..core import DBLSHParams, build, search_batch_fixed, validate_engine
-from ..core.index import DBLSHIndex, compute_norm_blocks
+from ..core.index import (
+    DBLSHIndex,
+    compute_norm_blocks,
+    empty_quant_blocks,
+    quantize_blocks,
+)
 from ..core import updates as _updates
 from ..tune import planner as _planner
 from .lifecycle import (
@@ -172,6 +177,7 @@ class Collection(CollectionLifecycle):
         exact: bool = False,
         termination=None,
         with_explain: bool = False,
+        dtype: str = "fp32",
     ):
         """Batched (c,k)-ANN through the fixed-schedule serving path.
 
@@ -184,6 +190,10 @@ class Collection(CollectionLifecycle):
         search (DESIGN.md §6).  ``with_explain`` (implies
         ``with_stats``) appends the per-query per-step EXPLAIN arrays —
         see :func:`~repro.core.serve_search.search_batch_fixed`.
+        ``dtype`` ('fp32'/'bf16'/'int8') selects the distance precision;
+        the quantized paths need an index built with the matching
+        ``quant_dtype`` and are a shortlist + exact fp32 re-rank, so the
+        returned distances are always exact fp32.
         """
         Q = jnp.atleast_2d(jnp.asarray(Q, jnp.float32))
         self._count_queries(Q, rows)
@@ -192,6 +202,7 @@ class Collection(CollectionLifecycle):
             engine=engine or self.default_engine or "jnp",
             with_stats=with_stats, interpret=interpret, exact=exact,
             termination=termination, with_explain=with_explain,
+            dtype=dtype,
         )
 
     # ------------------------------------------------------------ persistence
@@ -221,6 +232,16 @@ class Collection(CollectionLifecycle):
             # from the persisted data/ids (cheap, one reduction per point)
             arrays["norm_blocks"] = compute_norm_blocks(
                 arrays["data"], arrays["ids_blocks"]
+            )
+        # quantized blocks are derived state, never persisted (bf16 does
+        # not np.save round-trip): re-quantize from the fp32 truth
+        if params.quant_dtype != "none":
+            arrays["qvec_blocks"], arrays["qvec_scale"] = quantize_blocks(
+                arrays["data"], arrays["ids_blocks"], params.quant_dtype
+            )
+        else:
+            arrays["qvec_blocks"], arrays["qvec_scale"] = (
+                empty_quant_blocks(params.quant_dtype)
             )
         index = DBLSHIndex(**arrays, params=params)
         return cls(meta["name"], index,

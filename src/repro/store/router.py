@@ -57,7 +57,7 @@ from ..core.distributed import (
     search_sharded,
     shard_live_counts,
 )
-from ..core.index import DBLSHIndex
+from ..core.index import DBLSHIndex, empty_quant_blocks, quantize_blocks
 from ..resilience import faults
 from ..tune import planner as _planner
 from .collection import Collection, CompactionPolicy
@@ -288,6 +288,7 @@ class ShardedCollection(CollectionLifecycle):
         exact: bool = False,
         termination=None,
         with_explain: bool = False,
+        dtype: str = "fp32",
     ):
         """Global (c,k)-ANN: per-shard fixed-schedule search + all_gather
         top-k merge. ``engine`` / ``interpret`` are accepted for API
@@ -302,7 +303,10 @@ class ShardedCollection(CollectionLifecycle):
         exit — see ``search_sharded``).  ``with_explain`` appends the
         per-step EXPLAIN arrays *with per-shard attribution* (steps /
         slots / cause per shard, gathered before the pmax/psum
-        collapse — see ``search_sharded``)."""
+        collapse — see ``search_sharded``).  ``dtype`` selects the
+        per-shard distance precision ('fp32'/'bf16'/'int8'): each shard
+        runs the quantized shortlist + exact re-rank locally, so the
+        all_gather merge always compares fp32 distances."""
         del engine, interpret
         Q = jnp.atleast_2d(jnp.asarray(Q, jnp.float32))
         self._count_queries(Q, rows)
@@ -314,7 +318,7 @@ class ShardedCollection(CollectionLifecycle):
         return search_sharded(
             self.sharded, Q, k=k, r0=r0, steps=steps, mesh=self.mesh,
             with_stats=with_stats, exact=exact, termination=termination,
-            with_explain=with_explain,
+            with_explain=with_explain, dtype=dtype,
         )
 
     # ------------------------------------------------------------ persistence
@@ -385,6 +389,39 @@ class ShardedCollection(CollectionLifecycle):
             for f in _INDEX_ARRAY_FIELDS
             if f in tree
         }
+        # Quantized blocks are derived state (never persisted): rebuild
+        # them per shard on host — ids_blocks values are *shard-local*
+        # row indices, so a single global quantize_blocks over the
+        # concatenated manifest would gather the wrong rows for every
+        # shard past rank 0.
+        if params.quant_dtype != "none":
+            n_local = int(meta["n_local"])
+            datah = np.asarray(tree["data"]).reshape(pn, n_local, -1)
+            idsh = np.asarray(tree["ids_blocks"])  # (L, nb_global, B)
+            sb = idsh.shape[1] // pn
+            qb_parts, qs_parts = [], []
+            for r in range(pn):
+                qb, qs = quantize_blocks(
+                    jnp.asarray(datah[r]),
+                    jnp.asarray(idsh[:, r * sb:(r + 1) * sb]),
+                    params.quant_dtype,
+                )
+                qb_parts.append(qb)
+                qs_parts.append(qs)
+            arrays["qvec_blocks"] = jax.device_put(
+                jnp.concatenate(qb_parts, axis=1),
+                NamedSharding(mesh, specs.qvec_blocks),
+            )
+            arrays["qvec_scale"] = jax.device_put(
+                jnp.concatenate(qs_parts, axis=1),
+                NamedSharding(mesh, specs.qvec_scale),
+            )
+        else:
+            qb, qs = empty_quant_blocks(params.quant_dtype)
+            arrays["qvec_blocks"] = jax.device_put(
+                qb, NamedSharding(mesh, specs.qvec_blocks))
+            arrays["qvec_scale"] = jax.device_put(
+                qs, NamedSharding(mesh, specs.qvec_scale))
         index = DBLSHIndex(**arrays, params=params)
         sharded = ShardedDBLSH(
             index=index, axis=axis, n_total=int(meta["n_total"]),
@@ -444,6 +481,7 @@ class ShardedCollection(CollectionLifecycle):
             n=n_keep, d=p_old.d, c=p_old.c, w0=p_old.w0, t=p_old.t,
             k=p_old.k, block_size=p_old.block_size,
             inline_vectors=p_old.inline_vectors,
+            quant_dtype=p_old.quant_dtype,
         )
         kw["key"], kb = jax.random.split(kw["key"])
         sharded = build_sharded(kb, jnp.asarray(padded), params, mesh,

@@ -10,16 +10,21 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
+from repro.core.index import quantize_blocks
 from repro.kernels import (
     candidate_dist,
     candidate_verify,
+    fused_cand_search,
+    fused_window_search,
     pairwise_l2,
     window_dist,
     window_verify,
 )
+from repro.kernels.ops import _quantize_query
 from repro.kernels.ref import (
     candidate_dist_ref,
     candidate_verify_ref,
+    fused_search_ref,
     pairwise_l2_ref,
     window_dist_ref,
     window_verify_ref,
@@ -172,6 +177,320 @@ def test_window_dist_matches_ref(Q, L, M, nb, B, K, d, exact):
     invalid = np.asarray(blk_idx) >= lnb
     hw_slots = np.asarray(hw).reshape(Q, L * M, B)
     assert np.isinf(hw_slots[invalid]).all()
+
+
+# --------------------------------------------------------------- fused search
+
+def _halves(steps):
+    """An ascending radius-schedule half-width ladder that straddles the
+    typical hw distribution of unit-normal projections."""
+    return jnp.asarray([0.4 * 1.5 ** j for j in range(steps)], jnp.float32)
+
+
+def _mk_window(seed, L, M, nb, B, K, d):
+    ks = jax.random.split(jax.random.key(seed), 5)
+    lnb = L * nb
+    n = lnb * B - 3
+    data = jax.random.normal(ks[0], (n, d))
+    # each table holds every slot id at most once; >= n slots are padding
+    ids_blocks = jax.random.permutation(ks[1], lnb * B).reshape(lnb, B)
+    ids_blocks = ids_blocks.astype(jnp.int32)
+    vec_blocks = jnp.take(data, ids_blocks, axis=0, mode="fill", fill_value=0.0)
+    norm_blocks = jnp.where(
+        ids_blocks < n, jnp.sum(jnp.square(vec_blocks), axis=-1), jnp.inf
+    )
+    proj_blocks = jax.random.normal(ks[2], (lnb, B, K)) * 2.0
+    proj_blocks = jnp.where(
+        (ids_blocks < n)[..., None], proj_blocks, jnp.inf
+    )
+    return data, ids_blocks, vec_blocks, norm_blocks, proj_blocks, n, ks[3], ks[4]
+
+
+def _assert_bins_equal(got, ref, n):
+    """Bin accumulators: counts exact, distances allclose, ids as sets
+    per (query, bin) over the finite entries (ties may permute)."""
+    gd, gi, gc = map(np.asarray, got)
+    rd, ri, rc = map(np.asarray, ref)
+    np.testing.assert_array_equal(gc, rc)
+    np.testing.assert_allclose(gd, rd, rtol=1e-5, atol=1e-5)
+    Qn, steps, _ = gd.shape
+    for qq in range(Qn):
+        for j in range(steps):
+            finite = np.isfinite(rd[qq, j])
+            assert set(gi[qq, j][finite]) == set(ri[qq, j][finite]), (qq, j)
+
+
+@pytest.mark.parametrize("Q,L,M,nb,B,K,d,ks", [
+    (2, 2, 4, 8, 32, 4, 16, 5),
+    (1, 3, 8, 8, 64, 12, 96, 20),   # M == nb
+])
+@pytest.mark.parametrize("steps", [1, 4, 8])
+@pytest.mark.parametrize("mode", ["norm", "exact"])
+def test_fused_window_search_matches_ref(Q, L, M, nb, B, K, d, ks, steps, mode):
+    _, ids_blocks, vec_blocks, norm_blocks, proj_blocks, n, kb, kq = (
+        _mk_window(Q + L * M + nb + steps, L, M, nb, B, K, d)
+    )
+    lnb = L * nb
+    kb1, kb2 = jax.random.split(kb)
+    # block ids include the invalid sentinel lnb
+    blk_idx = jax.random.randint(kb1, (Q, L * M), 0, lnb + 1).astype(jnp.int32)
+    g = jax.random.normal(kb2, (Q, L, K))
+    q = jax.random.normal(kq, (Q, d))
+    halves = _halves(steps)
+    got = fused_window_search(
+        blk_idx, halves, proj_blocks, vec_blocks, norm_blocks, ids_blocks,
+        g, q, M=M, ks=ks, n=n, mode=mode, interpret=True,
+    )
+    d2r, hwr = window_dist_ref(blk_idx, proj_blocks, vec_blocks, norm_blocks,
+                               g, q, M, exact=(mode == "exact"))
+    idsr = jnp.take(ids_blocks, blk_idx, axis=0, mode="fill",
+                    fill_value=n).reshape(Q, -1)
+    ref = fused_search_ref(d2r, hwr, idsr, halves, n, ks)
+    _assert_bins_equal(got, ref, n)
+
+
+@pytest.mark.parametrize("Q,L,Ct,K,d,ks", [
+    (2, 3, 64, 4, 16, 5),
+    (1, 2, 300, 12, 96, 20),   # non-multiple Ct
+])
+@pytest.mark.parametrize("steps", [1, 6])
+@pytest.mark.parametrize("mode", ["norm", "exact"])
+def test_fused_cand_search_matches_ref(Q, L, Ct, K, d, ks, steps, mode):
+    rks = jax.random.split(jax.random.key(Q * Ct + d + steps), 5)
+    cp = jax.random.normal(rks[0], (Q, L, Ct, K)) * 2.0
+    cv = jax.random.normal(rks[1], (Q, L, Ct, d))
+    cn = jnp.sum(jnp.square(cv), axis=-1)
+    n = 4096
+    ci = jax.random.randint(rks[2], (Q, L, Ct), 0, n).astype(jnp.int32)
+    # invalid slots: +inf proj / norm (gather-fill contract)
+    cp = cp.at[:, :, ::7, :].set(jnp.inf)
+    cn = cn.at[:, :, ::7].set(jnp.inf)
+    g = jax.random.normal(rks[3], (Q, L, K))
+    q = jax.random.normal(rks[4], (Q, d))
+    halves = _halves(steps)
+    got = fused_cand_search(cp, cv, cn, ci, halves, g, q, ks=ks, n=n,
+                            mode=mode, tile_c=64, interpret=True)
+    d2r, hwr = candidate_dist_ref(cp, cv, cn, g, q, exact=(mode == "exact"))
+    # exact mode computes real distances on +inf-marked slots; the
+    # contract masks them through hw alone, exactly like the kernel
+    ref = fused_search_ref(d2r, hwr, ci.reshape(Q, -1), halves, n, ks)
+    _assert_bins_equal(got, ref, n)
+
+
+def test_fused_window_search_int8_matches_ref():
+    """int8 mode: integer dots are exact, so the kernel must match a jnp
+    oracle that replays the same quantized arithmetic (same scales, same
+    dequant order) to fp32 rounding tolerance; admission counts stay
+    fp32-exact."""
+    Q, L, M, nb, B, K, d, ks, steps = 2, 2, 4, 8, 32, 4, 16, 8, 6
+    data, ids_blocks, vec_blocks, norm_blocks, proj_blocks, n, kb, kq = (
+        _mk_window(77, L, M, nb, B, K, d)
+    )
+    lnb = L * nb
+    kb1, kb2 = jax.random.split(kb)
+    blk_idx = jax.random.randint(kb1, (Q, L * M), 0, lnb + 1).astype(jnp.int32)
+    g = jax.random.normal(kb2, (Q, L, K))
+    q = jax.random.normal(kq, (Q, d))
+    halves = _halves(steps)
+    qb, qsc = quantize_blocks(data, ids_blocks, "int8")
+    got = fused_window_search(
+        blk_idx, halves, proj_blocks, qb, norm_blocks, ids_blocks,
+        g, q, M=M, ks=ks, n=n, mode="int8", interpret=True, x_scale=qsc,
+    )
+    # oracle pool: same quantized dot, dequantized in the kernel's order
+    qv, qqs = _quantize_query(q, "int8")
+    xq = jnp.take(qb, blk_idx, axis=0, mode="fill", fill_value=0)
+    xs = jnp.take(qsc, blk_idx, axis=0, mode="fill", fill_value=1.0)
+    nrm = jnp.take(norm_blocks, blk_idx, axis=0, mode="fill", fill_value=jnp.inf)
+    idot = jnp.einsum("qsbd,qd->qsb", xq.astype(jnp.int32),
+                      qv.astype(jnp.int32)).astype(jnp.float32)
+    q2 = jnp.sum(jnp.square(q), axis=-1)
+    d2q = jnp.maximum(
+        nrm - 2.0 * (xs * qqs[:, :, None] * idot) + q2[:, None, None], 0.0
+    ).reshape(Q, -1)
+    _, hwr = window_dist_ref(blk_idx, proj_blocks, vec_blocks, norm_blocks,
+                             g, q, M)
+    idsr = jnp.take(ids_blocks, blk_idx, axis=0, mode="fill",
+                    fill_value=n).reshape(Q, -1)
+    ref = fused_search_ref(d2q, hwr, idsr, halves, n, ks)
+    _assert_bins_equal(got, ref, n)
+
+
+def test_fused_window_search_bf16_band():
+    """bf16 mode: admission counts are fp32-exact (hw never quantizes),
+    and the per-bin id sets stay within the documented recall band of
+    the fp32 bins — reduced precision reorders near-ties only."""
+    Q, L, M, nb, B, K, d, ks, steps = 2, 2, 4, 8, 32, 4, 24, 10, 6
+    data, ids_blocks, vec_blocks, norm_blocks, proj_blocks, n, kb, kq = (
+        _mk_window(99, L, M, nb, B, K, d)
+    )
+    lnb = L * nb
+    kb1, kb2 = jax.random.split(kb)
+    blk_idx = jax.random.randint(kb1, (Q, L * M), 0, lnb + 1).astype(jnp.int32)
+    g = jax.random.normal(kb2, (Q, L, K))
+    q = jax.random.normal(kq, (Q, d))
+    halves = _halves(steps)
+    qb, qsc = quantize_blocks(data, ids_blocks, "bf16")
+    bd_q, bi_q, cnt_q = fused_window_search(
+        blk_idx, halves, proj_blocks, qb, norm_blocks, ids_blocks,
+        g, q, M=M, ks=ks, n=n, mode="bf16", interpret=True, x_scale=qsc,
+    )
+    bd_f, bi_f, cnt_f = fused_window_search(
+        blk_idx, halves, proj_blocks, vec_blocks, norm_blocks, ids_blocks,
+        g, q, M=M, ks=ks, n=n, mode="norm", interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(cnt_q), np.asarray(cnt_f))
+    # documented tolerance band: per-bin id-set recall >= 0.9 vs fp32
+    # (bf16 keeps ~8 mantissa bits — only near-ties at the shortlist
+    # boundary may swap; bit-equality is NOT part of the contract)
+    bi_qn, bi_fn = np.asarray(bi_q), np.asarray(bi_f)
+    bd_fn = np.asarray(bd_f)
+    hits = total = 0
+    for qq in range(Q):
+        for j in range(steps):
+            want = set(bi_fn[qq, j][np.isfinite(bd_fn[qq, j])])
+            have = set(bi_qn[qq, j].tolist())
+            hits += len(want & have)
+            total += len(want)
+    assert total == 0 or hits / total >= 0.9, hits / total
+
+
+def test_invalid_slots_never_contribute():
+    """Satellite bugfix pin: an invalid select slot (blk >= lnb) must
+    contribute nothing, even though its DMA is routed to block 0 and
+    block 0 holds perfectly admittable points.  A clamp-style route to a
+    *real* block with unmasked compute would leak block 0's points into
+    every query that carries a padded slot."""
+    L, M, nb, B, K, d = 1, 4, 4, 8, 4, 8
+    lnb = L * nb
+    n = lnb * B
+    key = jax.random.key(5)
+    k1, k2 = jax.random.split(key)
+    q = jax.random.normal(k1, (1, d))
+    g = jnp.zeros((1, L, K))
+    # block 0: projections exactly at the query's g => hw = 0, always
+    # admitted at any radius; vectors literally the query point
+    proj_blocks = jnp.zeros((lnb, B, K))
+    vec_blocks = jnp.broadcast_to(q[0], (lnb, B, d)).copy()
+    norm_blocks = jnp.broadcast_to(jnp.sum(jnp.square(q)), (lnb, B)).copy()
+    ids_blocks = jnp.arange(lnb * B, dtype=jnp.int32).reshape(lnb, B)
+    all_invalid = jnp.full((1, L * M), lnb, jnp.int32)
+
+    # window_dist: every slot must come back unadmittable (+inf)
+    d2, hw = window_dist(all_invalid, proj_blocks, vec_blocks, norm_blocks,
+                         g, q, M=M, interpret=True)
+    assert np.isinf(np.asarray(hw)).all()
+    assert np.isinf(np.asarray(d2)).all()
+
+    # window_verify: empty result despite block 0 matching exactly
+    vd, vi = window_verify(all_invalid[:, :M], proj_blocks, vec_blocks,
+                           ids_blocks, g[:, 0], q, 100.0, n=n, k=5,
+                           interpret=True)
+    assert np.isinf(np.asarray(vd)).all()
+    assert (np.asarray(vi) == n).all()
+
+    # fused: all bins empty, zero admitted slots
+    halves = _halves(4)
+    bd, bi, cnt = fused_window_search(
+        all_invalid, halves, proj_blocks, vec_blocks, norm_blocks,
+        ids_blocks, g, q, M=M, ks=5, n=n, mode="norm", interpret=True,
+    )
+    assert np.isinf(np.asarray(bd)).all()
+    assert (np.asarray(bi) == n).all()
+    assert (np.asarray(cnt) == 0).all()
+
+    # mixed: one valid slot -> exactly that block's points, nothing else
+    mixed = jnp.asarray([[2, lnb, lnb, lnb]], jnp.int32)
+    bd, bi, cnt = fused_window_search(
+        mixed, halves, proj_blocks, vec_blocks, norm_blocks,
+        ids_blocks, g, q, M=M, ks=B, n=n, mode="norm", interpret=True,
+    )
+    got_ids = set(np.asarray(bi)[np.isfinite(np.asarray(bd))].tolist())
+    assert got_ids == set(np.asarray(ids_blocks[2]).tolist())
+    assert int(np.asarray(cnt).sum()) == B
+
+
+# ------------------------------------------------------- merge primitives
+
+def test_merge_topk_duplicate_id_distinct_dists():
+    """Dedup is on (dist, id) *pairs*: one id at two distances is two
+    distinct candidates (the serving path never produces this — exact
+    distances are a function of the id — but the primitive must not
+    silently collapse them)."""
+    from repro.kernels.window_verify import merge_topk
+    cd = jnp.asarray([1.0, 2.0, 3.0, jnp.inf])
+    ci = jnp.asarray([7, 7, 9, 0], jnp.int32)
+    out_d = jnp.full((3,), jnp.inf)
+    out_i = jnp.full((3,), np.iinfo(np.int32).max, jnp.int32)
+    nd, ni = merge_topk(cd, ci, out_d, out_i, 3)
+    np.testing.assert_allclose(np.asarray(nd), [1.0, 2.0, 3.0])
+    np.testing.assert_array_equal(np.asarray(ni), [7, 7, 9])
+
+
+def test_merge_topk_identical_pairs_dedup():
+    """Cross-table duplicates carry identical (dist, id) pairs and must
+    count once."""
+    from repro.kernels.window_verify import merge_topk
+    cd = jnp.asarray([2.0, 2.0, 2.0, 5.0])
+    ci = jnp.asarray([4, 4, 4, 8], jnp.int32)
+    out_d = jnp.full((3,), jnp.inf)
+    out_i = jnp.full((3,), np.iinfo(np.int32).max, jnp.int32)
+    nd, ni = merge_topk(cd, ci, out_d, out_i, 3)
+    np.testing.assert_allclose(np.asarray(nd), [2.0, 5.0, jnp.inf])
+    assert np.asarray(ni)[:2].tolist() == [4, 8]
+
+
+@given(seed=st.integers(0, 2**31 - 1), k=st.integers(1, 12),
+       a=st.integers(1, 16), b=st.integers(1, 24))
+@settings(deadline=None, max_examples=15)
+def test_merge_dedup_topk_property(seed, k, a, b):
+    """Batched merge vs a host oracle: sorted distinct (dist, id) pairs,
+    ascending, +inf/n padded — under duplicates, ties and all-inf tiles."""
+    from repro.core import merge_dedup_topk
+    rng = np.random.default_rng(seed)
+    n = 64
+    Qn = 3
+    # coarse distance grid => plenty of exact ties; some ids duplicated
+    run_d = np.sort(rng.choice([0.5, 1.0, 2.0, np.inf], (Qn, a)), axis=1)
+    run_i = np.where(np.isfinite(run_d), rng.integers(0, n, (Qn, a)), n)
+    new_d = rng.choice([0.25, 0.5, 1.0, 3.0, np.inf], (Qn, b))
+    new_i = np.where(np.isfinite(new_d), rng.integers(0, n, (Qn, b)), n)
+    if seed % 3 == 0:
+        new_d[0, :] = np.inf  # an all-inf tile must be a no-op row
+    gd, gi = merge_dedup_topk(
+        jnp.asarray(run_d, jnp.float32), jnp.asarray(run_i, jnp.int32),
+        jnp.asarray(new_d, jnp.float32), jnp.asarray(new_i, jnp.int32),
+        n, k,
+    )
+    gd, gi = np.asarray(gd), np.asarray(gi)
+    for qq in range(Qn):
+        pairs = {
+            (float(dd), int(ii))
+            for dd, ii in zip(
+                np.concatenate([run_d[qq], new_d[qq]]),
+                np.concatenate([run_i[qq], new_i[qq]]),
+            )
+            if np.isfinite(dd)
+        }
+        want = sorted(pairs)[:k]
+        want_d = [p[0] for p in want] + [np.inf] * (k - len(want))
+        want_i = [p[1] for p in want] + [n] * (k - len(want))
+        np.testing.assert_allclose(gd[qq], want_d)
+        np.testing.assert_array_equal(gi[qq], want_i)
+
+
+def test_merge_dedup_topk_tie_overflow():
+    """More than k candidates at one distance: the k smallest ids win,
+    in id order (the lexicographic (dist, id) contract)."""
+    from repro.core import merge_dedup_topk
+    n, k = 100, 4
+    run_d = jnp.full((1, k), jnp.inf)
+    run_i = jnp.full((1, k), n, jnp.int32)
+    new_d = jnp.full((1, 8), 2.0)
+    new_i = jnp.asarray([[31, 3, 55, 14, 90, 2, 77, 41]], jnp.int32)
+    gd, gi = merge_dedup_topk(run_d, run_i, new_d, new_i, n, k)
+    np.testing.assert_allclose(np.asarray(gd)[0], [2.0] * k)
+    np.testing.assert_array_equal(np.asarray(gi)[0], [2, 3, 14, 31])
 
 
 @pytest.mark.parametrize("nq,nn,d", [

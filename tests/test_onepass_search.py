@@ -202,6 +202,123 @@ def test_distinct_candidate_accounting(setup):
         )
 
 
+@pytest.mark.parametrize("k", [1, 25])
+@pytest.mark.parametrize("exact", [False, True])
+@pytest.mark.parametrize("engine", [e for e in ENGINES if e != "jnp"])
+def test_fused_vs_ref_k_sweep(setup, engine, k, exact):
+    """The fused engines (bins path) vs the seed across k x exact, at
+    schedule lengths off the main parity sweep: exact=True is bit-equal
+    (the bins decomposition IS the flat merge), norm mode to tolerance."""
+    data, queries, index = setup
+    for steps in (2, 8):
+        d_ref, i_ref = search_batch_fixed_ref(
+            index, queries, k=k, r0=0.5, steps=steps, engine="jnp"
+        )
+        d_new, i_new = search_batch_fixed(
+            index, queries, k=k, r0=0.5, steps=steps, engine=engine,
+            interpret=True, exact=exact,
+        )
+        if exact:
+            np.testing.assert_array_equal(np.asarray(d_new), np.asarray(d_ref))
+        else:
+            np.testing.assert_allclose(
+                np.asarray(d_new), np.asarray(d_ref), rtol=1e-2, atol=1e-2
+            )
+        assert _idsets_equal(d_ref, i_ref, d_new, i_new)
+
+
+@pytest.fixture(scope="module")
+def setup_quant(setup):
+    """Quantized twins of the fixture index (same data, same LSH key)."""
+    data, queries, _ = setup
+    out = {}
+    for dt in ("bf16", "int8"):
+        params = DBLSHParams.derive(
+            n=2048, d=24, c=1.5, t=48, k=10, K=8, L=3,
+            inline_vectors=True, max_blocks=32, quant_dtype=dt,
+        )
+        out[dt] = build(jax.random.split(jax.random.key(29))[1],
+                        jnp.asarray(data), params)
+    return data, queries, out
+
+
+@pytest.mark.parametrize("dtype", ["bf16", "int8"])
+@pytest.mark.parametrize("engine", ENGINES)
+def test_quant_recall_band(setup_quant, engine, dtype):
+    """Documented tolerance band for the quantized distance path: id-set
+    recall vs the fp32 search on the same index >= 0.95 (NOT
+    bit-equality — the shortlist is approximate; only a true neighbor
+    falling off its bin's 4k shortlist can be lost).  Returned distances
+    are exact fp32 (the re-rank), so every returned (id, dist) pair is
+    itself exact."""
+    data, queries, indexes = setup_quant
+    index = indexes[dtype]
+    d_fp, i_fp = search_batch_fixed(
+        index, queries, k=K_TEST, r0=0.5, steps=8, engine=engine,
+        interpret=True,
+    )
+    d_q, i_q = search_batch_fixed(
+        index, queries, k=K_TEST, r0=0.5, steps=8, engine=engine,
+        interpret=True, dtype=dtype,
+    )
+    i_fp, i_q = np.asarray(i_fp), np.asarray(i_q)
+    d_fp_n, d_q_n = np.asarray(d_fp), np.asarray(d_q)
+    rec = np.mean([
+        len(set(i_q[r]) & set(i_fp[r])) / K_TEST for r in range(i_fp.shape[0])
+    ])
+    assert rec >= 0.95, rec
+    # the re-rank contract: every returned distance is the fp32 distance
+    # of its id (norm-form re-rank vs this diff-form oracle: rounding
+    # only, no quantization error survives the re-rank)
+    for r in range(i_q.shape[0]):
+        finite = np.isfinite(d_q_n[r])
+        ids = i_q[r][finite]
+        true = np.sqrt(np.sum(
+            (data[ids] - np.asarray(queries)[r][None, :]) ** 2, axis=-1))
+        np.testing.assert_allclose(d_q_n[r][finite], true, rtol=1e-3,
+                                   atol=1e-3)
+
+
+def test_quant_termination_stats_match_fp32(setup_quant):
+    """C1/C2 accounting runs on fp32 admission counts and exact re-ranked
+    distances, so the termination stats of a quantized search match the
+    fp32 search on the same index."""
+    from repro.core import Termination
+    data, queries, indexes = setup_quant
+    index = indexes["int8"]
+    term = Termination(use_c1=True, use_c2=True)
+    *_, s_fp, e_fp = search_batch_fixed(
+        index, queries, k=K_TEST, r0=0.5, steps=8, with_explain=True,
+        termination=term,
+    )
+    *_, s_q, e_q = search_batch_fixed(
+        index, queries, k=K_TEST, r0=0.5, steps=8, with_explain=True,
+        termination=term, dtype="int8",
+    )
+    np.testing.assert_array_equal(
+        np.asarray(s_fp["radius_steps"]), np.asarray(s_q["radius_steps"])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(e_fp["term_cause"]), np.asarray(e_q["term_cause"])
+    )
+
+
+def test_dtype_validation(setup, setup_quant):
+    """dtype errors are loud: unknown names, quant+exact (the quantized
+    path is a shortlist, not bit-exact), and index/dtype mismatches."""
+    data, queries, index = setup
+    _, _, indexes = setup_quant
+    with pytest.raises(ValueError, match="dtype"):
+        search_batch_fixed(index, queries, k=5, dtype="fp64")
+    with pytest.raises(ValueError, match="exact"):
+        search_batch_fixed(indexes["int8"], queries, k=5, dtype="int8",
+                           exact=True)
+    with pytest.raises(ValueError, match="quant_dtype"):
+        search_batch_fixed(index, queries, k=5, dtype="int8")
+    with pytest.raises(ValueError, match="quant_dtype"):
+        search_batch_fixed(indexes["bf16"], queries, k=5, dtype="int8")
+
+
 def test_norm_blocks_invariant(setup):
     """norm_blocks is slot-aligned with ids_blocks: finite slots hold the
     squared norm of their point, padded slots +inf."""

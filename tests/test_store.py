@@ -399,3 +399,93 @@ def test_sharded_probe_stats_surface(setup):
     r2 = svc.submit("shstats", queries[0], engine="inline")
     svc.flush()
     assert r2.cached
+
+
+# ---------------------------------------------------------------------------
+# Quantized distance path through the collection lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_quant_collection_lifecycle(setup, tmp_path):
+    """A quant_dtype collection keeps its quantized blocks consistent
+    through search / add / remove / compact / snapshot / restore.
+
+    The quantized blocks are *derived* state: snapshots persist only the
+    fp32 truth and restore re-quantizes, so the roundtrip must be
+    bit-identical (quantization is deterministic)."""
+    data, queries, kb = setup
+    k = 10
+    col = Collection.create("q8", kb, data, c=1.5, w0=3.6, t=32, k=k,
+                            quant_dtype="int8")
+    d_fp, i_fp = col.search(queries, k=k, r0=0.5, steps=8)
+    d_q, i_q = col.search(queries, k=k, r0=0.5, steps=8, dtype="int8")
+    # documented band: the shortlist+re-rank loses a neighbor only when
+    # it falls off its bin's 4k shortlist — recall within 0.005 of fp32
+    assert _recall(i_q, i_fp, k) >= 0.995
+
+    with pytest.raises(ValueError, match="quant_dtype"):
+        col.search(queries, k=k, dtype="bf16")
+
+    # mutations keep the quantized blocks slot-aligned
+    rng = np.random.default_rng(3)
+    new = rng.normal(size=(48, data.shape[1])).astype(np.float32) * 0.1
+    ids = col.add(new)
+    col.remove(np.asarray(ids)[:8])
+    assert col.index.qvec_blocks.shape == col.index.vec_blocks.shape \
+        if col.index.params.inline_vectors else True
+    assert col.index.qvec_blocks.shape[:2] == col.index.ids_blocks.shape[:2]
+    d_q2, i_q2 = col.search(queries, k=k, r0=0.5, steps=8, dtype="int8")
+    d_f2, i_f2 = col.search(queries, k=k, r0=0.5, steps=8)
+    assert _recall(i_q2, i_f2, k) >= 0.99
+
+    # compaction rebuilds with the same quant_dtype
+    col.compact()
+    assert col.index.params.quant_dtype == "int8"
+    assert col.index.qvec_blocks.shape[:2] == col.index.ids_blocks.shape[:2]
+
+    # snapshot -> restore: re-quantization is bit-identical
+    col.snapshot(str(tmp_path / "q8"))
+    col2 = Collection.restore(str(tmp_path / "q8"))
+    np.testing.assert_array_equal(
+        np.asarray(col2.index.qvec_blocks), np.asarray(col.index.qvec_blocks)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(col2.index.qvec_scale), np.asarray(col.index.qvec_scale)
+    )
+    d_q3, i_q3 = col.search(queries, k=k, r0=0.5, steps=8, dtype="int8")
+    d_q4, i_q4 = col2.search(queries, k=k, r0=0.5, steps=8, dtype="int8")
+    np.testing.assert_array_equal(np.asarray(i_q3), np.asarray(i_q4))
+    np.testing.assert_array_equal(np.asarray(d_q3), np.asarray(d_q4))
+
+
+def test_quant_sharded_roundtrip(setup, tmp_path):
+    """Sharded quant collections: per-shard shortlist + re-rank, and the
+    bit-identical restore path rebuilds per-shard quantized blocks (ids
+    are shard-local — a global re-quantize would read the wrong rows)."""
+    from jax.sharding import Mesh
+    data, queries, kb = setup
+    ndev = len(jax.devices())
+    mesh = Mesh(np.array(jax.devices()).reshape(ndev), ("data",))
+    k = 10
+    sc = ShardedCollection.create("q8s", kb, data, mesh, c=1.5, w0=3.6,
+                                  t=32, k=k, quant_dtype="int8")
+    d_fp, i_fp = sc.search(queries, k=k, r0=0.5, steps=8)
+    d_q, i_q = sc.search(queries, k=k, r0=0.5, steps=8, dtype="int8")
+    assert _recall(i_q, i_fp, k) >= 0.99
+
+    sc.snapshot(str(tmp_path / "q8s"))
+    sc2 = ShardedCollection.restore(str(tmp_path / "q8s"), mesh=mesh)
+    np.testing.assert_array_equal(
+        np.asarray(sc2.sharded.index.qvec_blocks),
+        np.asarray(sc.sharded.index.qvec_blocks),
+    )
+    d_q2, i_q2 = sc2.search(queries, k=k, r0=0.5, steps=8, dtype="int8")
+    np.testing.assert_array_equal(np.asarray(i_q), np.asarray(i_q2))
+
+    # migration (rebalancing-rebuild) restore keeps the quant path alive
+    sc3 = ShardedCollection.restore(str(tmp_path / "q8s"), mesh=mesh,
+                                    migrate=True)
+    assert sc3.sharded.index.params.quant_dtype == "int8"
+    d3f, i3f = sc3.search(queries, k=k, r0=0.5, steps=8)
+    d3q, i3q = sc3.search(queries, k=k, r0=0.5, steps=8, dtype="int8")
+    assert _recall(i3q, i3f, k) >= 0.99
